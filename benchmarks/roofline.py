@@ -1,0 +1,58 @@
+"""Roofline table from the dry-run JSONL (results/dryrun_*.jsonl).
+
+Per (arch x shape x mesh): the three roofline terms, dominant bottleneck,
+MODEL_FLOPS/HLO_FLOPs useful-compute ratio, peak bytes/device.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Dict, List
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results")
+
+
+def load(mesh: str) -> List[Dict]:
+    path = os.path.join(RESULTS, f"dryrun_{mesh}.jsonl")
+    if not os.path.exists(path):
+        return []
+    out = {}
+    with open(path) as f:
+        for line in f:
+            r = json.loads(line)
+            out[(r["arch"], r["shape"])] = r    # last write wins
+    return list(out.values())
+
+
+def main():
+    for mesh in ("single", "multi"):
+        rows = load(mesh)
+        if not rows:
+            print(f"(no {mesh}-pod dry-run results; run "
+                  f"`python -m repro.launch.dryrun --all --mesh {mesh} "
+                  f"--out results/dryrun_{mesh}.jsonl`)")
+            continue
+        print(f"\n# {mesh}-pod mesh "
+              f"({'2x16x16=512' if mesh == 'multi' else '16x16=256'} chips)")
+        print(f"{'arch':26s} {'shape':12s} {'peak GiB':>9s} {'compute_s':>10s}"
+              f" {'memory_s':>10s} {'collect_s':>10s} {'dominant':>10s}"
+              f" {'useful':>7s}")
+        for r in sorted(rows, key=lambda r: (r["arch"], r["shape"])):
+            if r["status"] == "skip":
+                print(f"{r['arch']:26s} {r['shape']:12s} "
+                      f"{'— skipped (quadratic attention @512K)':>40s}")
+                continue
+            if r["status"] != "ok":
+                print(f"{r['arch']:26s} {r['shape']:12s} ERROR "
+                      f"{r.get('error', '')[:60]}")
+                continue
+            ro = r["roofline"]
+            print(f"{r['arch']:26s} {r['shape']:12s} "
+                  f"{r['peak_bytes_per_device'] / 2**30:9.2f} "
+                  f"{ro['compute_s']:10.4g} {ro['memory_s']:10.4g} "
+                  f"{ro['collective_s']:10.4g} {ro['dominant']:>10s} "
+                  f"{r.get('useful_flops_ratio', 0):7.3f}")
+
+
+if __name__ == "__main__":
+    main()

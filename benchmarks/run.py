@@ -1,0 +1,53 @@
+"""Benchmark harness: one section per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run            # all sections
+    PYTHONPATH=src python -m benchmarks.run dedup sim  # subset
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+SECTIONS = ("taint", "dedup", "sim", "inversion", "roofline")
+
+
+def main() -> None:
+    args = set(a for a in sys.argv[1:] if not a.startswith("--"))
+    wanted = args or set(SECTIONS)
+    t0 = time.time()
+    if "taint" in wanted:
+        print("=" * 72)
+        print("§7.3  Taint coverage validation")
+        print("=" * 72)
+        from benchmarks import taint_coverage
+        taint_coverage.main()
+    if "dedup" in wanted:
+        print("=" * 72)
+        print("§7.2 / Table 2 / Fig 5  Dedup profiling savings "
+              "(12-model corpus x 3 backends)")
+        print("=" * 72)
+        from benchmarks import dedup_savings
+        dedup_savings.main(full="--full" in sys.argv)
+    if "sim" in wanted:
+        print("=" * 72)
+        print("§7.1 / Fig 3  DoolySim end-to-end accuracy")
+        print("=" * 72)
+        from benchmarks import sim_accuracy
+        sim_accuracy.main()
+    if "inversion" in wanted:
+        print("=" * 72)
+        print("§2.1 / Fig 1/4 / App H  Per-batch latency + inversion points")
+        print("=" * 72)
+        from benchmarks import inversion
+        inversion.main()
+    if "roofline" in wanted:
+        print("=" * 72)
+        print("Roofline terms per (arch x shape x mesh) from the dry-run")
+        print("=" * 72)
+        from benchmarks import roofline
+        roofline.main()
+    print(f"\ntotal: {time.time() - t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,54 @@
+"""End-to-end Dooly workflow: profile two models (watch the dedup), then
+serve a trace on the real engine and predict it with DoolySim.
+
+    PYTHONPATH=src python examples/profile_and_simulate.py
+"""
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro.core.database import LatencyDB
+from repro.core.profiler import DoolyProf, SweepConfig
+from repro.serving.engine import Engine
+from repro.serving.scheduler import SchedulerConfig
+from repro.sim import metrics as M
+from repro.sim.simulator import DoolySim
+from repro.sim.workload import sharegpt_like, synthetic
+
+
+def main():
+    cfg = get_smoke_config("llama3-8b")
+    cfg2 = get_smoke_config("command-r7b")
+    db = LatencyDB()
+    sweep = SweepConfig(toks=(8, 16, 32, 64, 128), reqs=(1, 2, 8),
+                        ctx=(64, 256),
+                        op_points=((8, 1), (16, 1), (64, 1), (128, 1)))
+    prof = DoolyProf(db, oracle="cpu_wallclock", hardware="cpu", sweep=sweep)
+    r1 = prof.profile_model(cfg, backend="xla")
+    r2 = prof.profile_model(cfg2, backend="xla")
+    print(f"{cfg.name}: {r1.n_new} new signatures ({r1.spent_s:.2f}s)")
+    print(f"{cfg2.name}: {r2.n_new} new, {r2.n_reused} REUSED "
+          f"({r2.saved_s:.2f}s saved — the GQA dedup)")
+
+    sched = SchedulerConfig(max_num_seqs=8, max_batch_tokens=128,
+                            chunk_size=64)
+    eng = Engine(cfg, sched_config=sched, max_seq=256, impl="xla")
+    eng.run(synthetic(4, rate=0.1, prompt_len=64, out_len=20, seed=9,
+                      vocab=cfg.vocab_size))
+    sim = DoolySim(cfg, db, hardware="cpu", backend="xla",
+                   sched_config=sched, max_seq=256)
+    print("calibration:", sim.calibrate(eng.records))
+
+    trace = lambda: sharegpt_like(20, rate=2.0, seed=4, scale=0.08,
+                                  vocab=cfg.vocab_size)
+    eng2 = Engine(cfg, sched_config=sched, max_seq=256, impl="xla")
+    real = M.request_metrics(eng2.run(trace())["requests"])
+    simm = M.request_metrics(sim.run(trace())["requests"])
+    print("real ttft p50/p90:",
+          [round(float(np.percentile(real['ttft'], p)), 4) for p in (50, 90)])
+    print("sim  ttft p50/p90:",
+          [round(float(np.percentile(simm['ttft'], p)), 4) for p in (50, 90)])
+    print("MAPE:", {k: round(v, 1) for k, v in M.compare(simm, real).items()})
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,142 @@
+"""Latency database (paper App. E): SQLite, keyed by signature hash and
+workload configuration.  Deduplication is a primary-key lookup.
+
+Three orthogonal axes: profiled configurations (hardware x model x backend x
+tp), unique signatures, and workload-dependent measurements.  Communication
+ops live in a separate sub-schema keyed by (topology, tp_degree) — their
+latency does not depend on model architecture.
+"""
+from __future__ import annotations
+
+import sqlite3
+from dataclasses import dataclass
+from typing import Any, Dict, Iterable, List, Optional, Tuple
+
+from repro.core.signature import Signature
+
+_SCHEMA = """
+CREATE TABLE IF NOT EXISTS configurations (
+    id INTEGER PRIMARY KEY AUTOINCREMENT,
+    model TEXT NOT NULL, backend TEXT NOT NULL,
+    hardware TEXT NOT NULL, tp INTEGER NOT NULL DEFAULT 1,
+    UNIQUE(model, backend, hardware, tp));
+CREATE TABLE IF NOT EXISTS signatures (
+    hash TEXT PRIMARY KEY, op_name TEXT, spec TEXT,
+    fingerprint TEXT, attrs TEXT);
+CREATE TABLE IF NOT EXISTS model_operations (
+    config_id INTEGER NOT NULL, sig_hash TEXT NOT NULL,
+    module TEXT NOT NULL, count INTEGER NOT NULL,
+    PRIMARY KEY(config_id, sig_hash, module));
+CREATE TABLE IF NOT EXISTS measurements (
+    sig_hash TEXT NOT NULL, hardware TEXT NOT NULL,
+    phase TEXT NOT NULL, num_toks INTEGER NOT NULL,
+    num_reqs INTEGER NOT NULL, ctx_len INTEGER NOT NULL,
+    oracle TEXT NOT NULL, latency_us REAL NOT NULL,
+    PRIMARY KEY(sig_hash, hardware, phase, num_toks, num_reqs,
+                ctx_len, oracle));
+CREATE TABLE IF NOT EXISTS comm_ops (
+    topology TEXT NOT NULL, tp_degree INTEGER NOT NULL,
+    op TEXT NOT NULL, bytes INTEGER NOT NULL, latency_us REAL NOT NULL,
+    PRIMARY KEY(topology, tp_degree, op, bytes));
+"""
+
+
+class LatencyDB:
+    def __init__(self, path: str = ":memory:"):
+        self.conn = sqlite3.connect(path)
+        self.conn.executescript(_SCHEMA)
+
+    # -- configurations -----------------------------------------------------
+
+    def config_id(self, model: str, backend: str, hardware: str,
+                  tp: int = 1) -> int:
+        cur = self.conn.execute(
+            "INSERT OR IGNORE INTO configurations(model,backend,hardware,tp)"
+            " VALUES(?,?,?,?)", (model, backend, hardware, tp))
+        self.conn.commit()
+        row = self.conn.execute(
+            "SELECT id FROM configurations WHERE model=? AND backend=? AND "
+            "hardware=? AND tp=?", (model, backend, hardware, tp)).fetchone()
+        return row[0]
+
+    # -- signatures ----------------------------------------------------------
+
+    def has_signature(self, sig_hash: str, hardware: str) -> bool:
+        """Dedup check: do measurements already exist for this signature on
+        this hardware? (primary-key lookup, §6)."""
+        row = self.conn.execute(
+            "SELECT 1 FROM measurements WHERE sig_hash=? AND hardware=? "
+            "LIMIT 1", (sig_hash, hardware)).fetchone()
+        return row is not None
+
+    def insert_signature(self, sig: Signature):
+        self.conn.execute(
+            "INSERT OR IGNORE INTO signatures VALUES(?,?,?,?,?)",
+            (sig.hash, sig.op_name, sig.spec, sig.fingerprint, sig.attrs))
+        self.conn.commit()
+
+    def add_model_operation(self, config_id: int, sig_hash: str,
+                            module: str, count: int):
+        self.conn.execute(
+            "INSERT OR REPLACE INTO model_operations VALUES(?,?,?,?)",
+            (config_id, sig_hash, module, count))
+        self.conn.commit()
+
+    # -- measurements ---------------------------------------------------------
+
+    def add_measurement(self, sig_hash: str, hardware: str, phase: str,
+                        num_toks: int, num_reqs: int, ctx_len: int,
+                        oracle: str, latency_us: float):
+        self.conn.execute(
+            "INSERT OR REPLACE INTO measurements VALUES(?,?,?,?,?,?,?,?)",
+            (sig_hash, hardware, phase, num_toks, num_reqs, ctx_len,
+             oracle, latency_us))
+        self.conn.commit()
+
+    def measurements(self, sig_hash: str, hardware: Optional[str] = None,
+                     phase: Optional[str] = None) -> List[Tuple]:
+        q = ("SELECT phase,num_toks,num_reqs,ctx_len,latency_us FROM "
+             "measurements WHERE sig_hash=?")
+        args: List[Any] = [sig_hash]
+        if hardware:
+            q += " AND hardware=?"
+            args.append(hardware)
+        if phase:
+            q += " AND phase=?"
+            args.append(phase)
+        return self.conn.execute(q, args).fetchall()
+
+    def model_operations(self, config_id: int) -> List[Tuple[str, str, int]]:
+        return self.conn.execute(
+            "SELECT sig_hash, module, count FROM model_operations WHERE "
+            "config_id=?", (config_id,)).fetchall()
+
+    def signature(self, sig_hash: str) -> Optional[Tuple]:
+        return self.conn.execute(
+            "SELECT op_name, spec, fingerprint, attrs FROM signatures "
+            "WHERE hash=?", (sig_hash,)).fetchone()
+
+    # -- communication sub-schema ---------------------------------------------
+
+    def add_comm(self, topology: str, tp_degree: int, op: str, nbytes: int,
+                 latency_us: float):
+        self.conn.execute(
+            "INSERT OR REPLACE INTO comm_ops VALUES(?,?,?,?,?)",
+            (topology, tp_degree, op, nbytes, latency_us))
+        self.conn.commit()
+
+    def comm_latency(self, topology: str, tp_degree: int, op: str,
+                     nbytes: int) -> Optional[float]:
+        row = self.conn.execute(
+            "SELECT latency_us FROM comm_ops WHERE topology=? AND "
+            "tp_degree=? AND op=? AND bytes=?",
+            (topology, tp_degree, op, nbytes)).fetchone()
+        return row[0] if row else None
+
+    def stats(self) -> Dict[str, int]:
+        out = {}
+        for table in ("configurations", "signatures", "model_operations",
+                      "measurements", "comm_ops"):
+            out[table] = self.conn.execute(
+                f"SELECT COUNT(*) FROM {table}").fetchone()[0]
+        return out

@@ -1,0 +1,82 @@
+"""Per-signature latency regression models (paper §7.1 / App. F).
+
+One ridge regression per (signature, phase), trained on the latency DB.
+Features follow Vidur/Revati: token count for non-attention operations;
+(prefill tokens, batch size, context length) for attention operations.
+
+    prefill: [1, T*R, T^2*R, R]      (T = num_toks, R = num_reqs)
+    decode:  [1, R, R*ctx, ctx]
+
+Signatures with fewer than 3 measurements fall back to nearest-point
+scaling by total token count.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.database import LatencyDB
+
+RIDGE = 1e-8
+
+
+def _features(phase: str, toks: int, reqs: int, ctx: int) -> np.ndarray:
+    t, r, c = float(max(toks, 1)), float(max(reqs, 1)), float(max(ctx, 0))
+    if phase == "decode":
+        return np.array([1.0, r, r * c, c])
+    # ctx*t*r: chunked prefill attends the whole cache (O(toks * ctx))
+    return np.array([1.0, t * r, t * t * r, r, c * t * r])
+
+
+@dataclass
+class _Fit:
+    coef: Optional[np.ndarray]
+    points: List[Tuple[int, int, int, float]]     # (toks, reqs, ctx, us)
+
+
+class LatencyModel:
+    def __init__(self, db: LatencyDB, hardware: str):
+        self.db = db
+        self.hardware = hardware
+        self._fits: Dict[Tuple[str, str], _Fit] = {}
+
+    def _fit(self, sig_hash: str, phase: str) -> _Fit:
+        key = (sig_hash, phase)
+        if key in self._fits:
+            return self._fits[key]
+        rows = self.db.measurements(sig_hash, self.hardware, phase)
+        pts = [(t, r, c, lat) for (_, t, r, c, lat) in rows]
+        coef = None
+        if len(pts) >= 4:
+            X = np.stack([_features(phase, t, r, c) for t, r, c, _ in pts])
+            y = np.array([lat for *_, lat in pts])
+            A = X.T @ X + RIDGE * np.eye(X.shape[1])
+            coef = np.linalg.solve(A, X.T @ y)
+        fit = _Fit(coef, pts)
+        self._fits[key] = fit
+        return fit
+
+    def predict(self, sig_hash: str, phase: str, *, toks: int = 1,
+                reqs: int = 1, ctx: int = 0) -> float:
+        """Predicted latency in seconds."""
+        fit = self._fit(sig_hash, phase)
+        if fit.coef is None:
+            if not fit.points:
+                # fall back to any phase's measurements
+                alt = self._fit(sig_hash,
+                                "prefill" if phase == "decode" else "decode")
+                if not alt.points:
+                    return 0.0
+                fit = alt
+            # nearest-point scaling by total tokens
+            tot = max(toks, 1) * max(reqs, 1)
+            best = min(fit.points,
+                       key=lambda p: abs(np.log(max(p[0], 1) * max(p[1], 1))
+                                         - np.log(tot)))
+            bt = max(best[0], 1) * max(best[1], 1)
+            return best[3] / 1e6 * (tot / bt)
+        y = float(fit.coef @ _features(phase, toks, reqs, ctx))
+        floor = min(lat for *_, lat in fit.points) * 0.05
+        return max(y, floor, 0.0) / 1e6

@@ -1,0 +1,289 @@
+"""Operation Set Finder (paper §5): bottom-up resolution of the tainted
+trace into the minimal runnable set.
+
+* Leaf operations are tested for standalone execution by re-binding their
+  primitive with taint-generated inputs ("import and run", §5.2).
+* Stateful modules (attention, Mamba, MoE — identified by the serving
+  engine's stateful-module registry, the vLLM AttentionGroup analogue) are
+  resolved at module granularity with *execution context emulation*: the
+  profiler rebuilds them through the serving engine's own module builders,
+  which also supply the decode-phase context (KV cache, lengths) that the
+  prefill trace alone cannot provide (App. D).
+* Leaves that fail standalone execution are absorbed into their enclosing
+  module (sub-jaxpr extraction), exactly the paper's fallback.
+
+Taint-driven input generation (§5.2): MODEL_CONFIG dims stay fixed,
+NUM_TOKS / NUM_REQS dims are substituted per sweep point, MIX dims are
+recalculated from H with the workload component replaced, untainted dims
+are kept.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src import core as jcore
+
+from repro.core.callgraph import CanonicalModule, Node, build_hierarchy, collapse
+from repro.core.taint import (BOT, MODEL_CONFIG, NUM_REQS, NUM_TOKS, Taint)
+from repro.core.tracer import TaintedTrace, TraceOp
+
+Tree = Any
+
+# the serving engine's stateful-module registry (serving/context.py builds
+# execution contexts for exactly these kinds)
+STATEFUL_MODULES = ("self_attn", "cross_attn", "mla_attn", "mamba", "moe")
+
+# operator params whose values encode output sizes (rewritten on resize)
+_SHAPE_PARAM_PRIMS = {
+    "reshape": "new_sizes",
+    "broadcast_in_dim": "shape",
+    "iota": "shape",
+}
+
+_NO_SWEEP_PRIMS = {"slice", "pad", "dynamic_slice", "dynamic_update_slice",
+                   "gather", "scatter", "scatter-add", "concatenate",
+                   "conv_general_dilated", "rev", "split"}
+
+
+# ---------------------------------------------------------------------------
+# taint-driven size substitution
+# ---------------------------------------------------------------------------
+
+def resize_dim(size: int, taint: Taint, *, toks: Optional[int],
+               reqs: Optional[int]) -> int:
+    if taint.is_bot:
+        return size
+    if taint.is_mix:
+        out = 1
+        for v, label in taint.h:
+            if label == NUM_TOKS:
+                out *= toks if toks is not None else v
+            elif label == NUM_REQS:
+                out *= reqs if reqs is not None else v
+            else:
+                out *= v
+        return out
+    if taint.kind == NUM_TOKS:
+        return toks if toks is not None else size
+    if taint.kind == NUM_REQS:
+        return reqs if reqs is not None else size
+    return size                                   # MODEL_CONFIG fixed
+
+
+def resize_shape(shape: Sequence[int], taints: Sequence[Taint], *,
+                 toks: Optional[int], reqs: Optional[int]) -> Tuple[int, ...]:
+    return tuple(resize_dim(s, t, toks=toks, reqs=reqs)
+                 for s, t in zip(shape, taints))
+
+
+def generate_array(shape, dtype, key=None) -> jax.Array:
+    dt = jnp.dtype(dtype)
+    if dt.kind in "iu":
+        return jnp.zeros(shape, dt)              # valid indices everywhere
+    if dt.kind == "b":
+        return jnp.ones(shape, dt)
+    if key is None:
+        key = jax.random.key(0)
+    return jax.random.normal(key, shape, jnp.float32).astype(dt) * 0.02
+
+
+def generate_inputs(op: TraceOp, *, toks: Optional[int] = None,
+                    reqs: Optional[int] = None) -> List[jax.Array]:
+    out = []
+    for i, (shape, dtype, taints) in enumerate(
+            zip(op.in_shapes, op.in_dtypes, op.in_taints)):
+        rs = resize_shape(shape, taints, toks=toks, reqs=reqs)
+        out.append(generate_array(rs, dtype, jax.random.key(i + 1)))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# runnable-set entries
+# ---------------------------------------------------------------------------
+
+@dataclass
+class OpEntry:
+    """Operator-level entry (standalone-runnable primitive)."""
+    kind: str                       # primitive name
+    op: TraceOp
+    count: int                      # occurrences across collapsed layers
+    module: str                     # canonical module path
+    sweepable: bool = True
+
+    def run(self, *, toks=None, reqs=None):
+        args = generate_inputs(self.op, toks=toks, reqs=reqs)
+        eqn = self.op.eqn
+        params = dict(eqn.params)
+        key = _SHAPE_PARAM_PRIMS.get(self.kind)
+        if key is not None and (toks is not None or reqs is not None):
+            params[key] = resize_shape(self.op.out_shapes[0],
+                                       self.op.out_taints[0],
+                                       toks=toks, reqs=reqs)
+        return eqn.primitive.bind(*args, **params)
+
+    def jit_callable(self, *, toks=None, reqs=None):
+        args = generate_inputs(self.op, toks=toks, reqs=reqs)
+        eqn = self.op.eqn
+        params = dict(eqn.params)
+        key = _SHAPE_PARAM_PRIMS.get(self.kind)
+        if key is not None and (toks is not None or reqs is not None):
+            params[key] = resize_shape(self.op.out_shapes[0],
+                                       self.op.out_taints[0],
+                                       toks=toks, reqs=reqs)
+
+        def fn(*a):
+            return eqn.primitive.bind(*a, **params)
+        return fn, args
+
+
+@dataclass
+class ModuleEntry:
+    """Module-level entry (stateful, or absorbed failed leaves).
+
+    ``context_kind`` selects the serving-engine builder that reconstructs the
+    execution context (phase-dependent for attention-like modules)."""
+    kind: str                       # module name ("self_attn", "mlp", ...)
+    node: Node
+    count: int
+    module: str
+    context_kind: Optional[str] = None   # one of STATEFUL_MODULES or None
+    ops: List[TraceOp] = field(default_factory=list)
+
+    def sub_jaxpr(self):
+        return extract_subjaxpr(self.ops or self.node.all_ops())
+
+    def run(self):
+        jaxpr, invars = self.sub_jaxpr()
+        args = []
+        for i, v in enumerate(invars):
+            # taints for free vars: find the producing/consuming TraceOp
+            shape = tuple(getattr(v.aval, "shape", ()))
+            dtype = getattr(v.aval, "dtype", jnp.float32)
+            args.append(generate_array(shape, dtype, jax.random.key(i + 1)))
+        return jcore.eval_jaxpr(jaxpr, [], *args)
+
+
+Entry = Any  # OpEntry | ModuleEntry
+
+
+# ---------------------------------------------------------------------------
+# sub-jaxpr extraction (module fallback)
+# ---------------------------------------------------------------------------
+
+def extract_subjaxpr(ops: List[TraceOp]):
+    """Closed jaxpr over the eqns of a module: invars = free vars,
+    outvars = vars not consumed inside (the module's results)."""
+    eqns = [op.eqn for op in sorted(ops, key=lambda o: o.eqn_id)
+            if op.eqn is not None]
+    defined = set()
+    consumed = set()
+    invars = []
+    for eqn in eqns:
+        for v in eqn.invars:
+            if isinstance(v, jcore.Literal):
+                continue
+            consumed.add(v)
+            if v not in defined and v not in invars:
+                invars.append(v)
+        for v in eqn.outvars:
+            defined.add(v)
+    outvars = [v for eqn in eqns for v in eqn.outvars
+               if v in defined and v not in consumed
+               and not isinstance(v, jcore.DropVar)]
+    if not outvars:
+        outvars = [v for v in eqns[-1].outvars
+                   if not isinstance(v, jcore.DropVar)]
+    import jax.api_util as api_util
+    dbg = None
+    try:
+        jaxpr = jcore.Jaxpr(constvars=(), invars=tuple(invars),
+                            outvars=tuple(outvars), eqns=tuple(eqns))
+    except TypeError:
+        from jax._src import api_util as _au
+        dbg = _au.debug_info("dooly_subjaxpr", None, (), {})
+        jaxpr = jcore.Jaxpr(constvars=(), invars=tuple(invars),
+                            outvars=tuple(outvars), eqns=tuple(eqns),
+                            debug_info=dbg)
+    return jaxpr, invars
+
+
+# ---------------------------------------------------------------------------
+# bottom-up resolution (§5.2)
+# ---------------------------------------------------------------------------
+
+def find_runnable_set(trace: TaintedTrace) -> List[Entry]:
+    root = build_hierarchy(trace)
+    canon = collapse(root)
+    entries: List[Entry] = []
+    for cm in canon:
+        entries.extend(_resolve_module(cm.node, cm.count))
+    return entries
+
+
+def _stateful_kind(path: Tuple[str, ...]) -> Optional[str]:
+    for comp in path:
+        base = comp.split(".")[0]
+        if base in STATEFUL_MODULES:
+            return base
+    return None
+
+
+def _resolve_module(node: Node, count: int) -> List[Entry]:
+    sk = _stateful_kind(node.path)
+    if sk is not None:
+        # stateful: stop here, absorb the whole subtree (context emulation)
+        return [ModuleEntry(kind=sk, node=node, count=count,
+                            module="/".join(node.path), context_kind=sk,
+                            ops=node.all_ops())]
+    out: List[Entry] = []
+    failed: List[TraceOp] = []
+    for op in node.ops:
+        if op.eqn is None:
+            failed.append(op)
+            continue
+        # skip untainted dispatch-mechanics leaves (§5.2 bottom-up rule)
+        if all(t.is_bot for ts in op.in_taints for t in ts) and op.in_shapes:
+            if all(len(s) == 0 for s in op.in_shapes):
+                continue
+        entry = OpEntry(kind=op.prim, op=op, count=count,
+                        module="/".join(node.path),
+                        sweepable=op.prim not in _NO_SWEEP_PRIMS)
+        try:
+            entry.run()
+            out.append(entry)
+        except Exception:
+            failed.append(op)
+    for name in node.children:
+        child = node.children[name]
+        sk_child = _stateful_kind(child.path)
+        if sk_child is not None:
+            out.append(ModuleEntry(kind=sk_child, node=child, count=count,
+                                   module="/".join(child.path),
+                                   context_kind=sk_child,
+                                   ops=child.all_ops()))
+        else:
+            out.extend(_resolve_module(child, count))
+    if failed:
+        # absorb failed leaves into a module-level entry at this node
+        me = ModuleEntry(kind=node.name or "root", node=node, count=count,
+                         module="/".join(node.path), ops=failed)
+        try:
+            me.run()
+            out.append(me)
+        except Exception:
+            # final fallback: absorb the ENTIRE node (children included)
+            me_all = ModuleEntry(kind=node.name or "root", node=node,
+                                 count=count, module="/".join(node.path),
+                                 ops=node.all_ops())
+            try:
+                me_all.run()
+                # replace child-level entries we already emitted
+                out = [me_all]
+            except Exception:
+                pass
+    return out

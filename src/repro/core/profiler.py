@@ -1,0 +1,237 @@
+"""Duplication-Aware Profiler (paper §6) — DoolyProf.
+
+Per (model, backend): trace once (Tainted Runner), resolve the runnable set
+(Operation Set Finder), compute signatures, and sweep ONLY signatures absent
+from the latency database.  Dedup is a primary-key lookup; for skipped
+entries we replay the stored measurements to account the GPU-hours a naive
+per-configuration profiler would have spent (Table 2's N / R / Profile /
+Saved columns).
+
+Sweeps are taint-driven (§5.2): MODEL_CONFIG dims fixed, NUM_TOKS/NUM_REQS
+dims set per sweep point, MIX dims recalculated.  Stateful modules sweep
+both phases — prefill over (toks x reqs), decode over (ctx x reqs) — with
+execution contexts built by the serving engine (App. D).
+"""
+from __future__ import annotations
+
+import re
+import time
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+
+from repro.configs.base import ModelConfig
+from repro.core import backends as oracles
+from repro.core.database import LatencyDB
+from repro.core.opset import Entry, ModuleEntry, OpEntry, find_runnable_set
+from repro.core.runner import ModelTrace, trace_model
+from repro.core.signature import (Signature, module_entry_signature,
+                                  op_entry_signature)
+from repro.serving.context import ModuleContext, build_context, phases_for
+
+
+def _module_of(entry) -> str:
+    return entry.module
+
+REPEATS = 100           # measurements per sweep point in a real profiler
+
+
+@dataclass
+class SweepConfig:
+    toks: Tuple[int, ...] = (256, 1024, 4096)
+    reqs: Tuple[int, ...] = (1, 8)
+    ctx: Tuple[int, ...] = (2048, 16384)
+    op_points: Tuple[Tuple[int, int], ...] = ((256, 1), (1024, 1),
+                                              (4096, 1), (1024, 8))
+    repeats: int = REPEATS
+
+
+QUICK_SWEEP = SweepConfig(toks=(64, 256), reqs=(1, 2), ctx=(128, 512),
+                          op_points=((64, 1), (256, 1), (64, 2)))
+
+
+@dataclass
+class EntryReport:
+    sig: str
+    name: str
+    group: str
+    variant: str
+    count: int
+    reused: bool
+    cost_s: float                 # profiling seconds (spent or would-spend)
+
+
+@dataclass
+class ProfileReport:
+    model: str
+    backend: str
+    entries: List[EntryReport] = field(default_factory=list)
+    trace_s: float = 0.0
+
+    @property
+    def spent_s(self) -> float:
+        return sum(e.cost_s for e in self.entries if not e.reused)
+
+    @property
+    def saved_s(self) -> float:
+        return sum(e.cost_s for e in self.entries if e.reused)
+
+    @property
+    def n_new(self) -> int:
+        return sum(not e.reused for e in self.entries)
+
+    @property
+    def n_reused(self) -> int:
+        return sum(e.reused for e in self.entries)
+
+
+def window_for_path(cfg: ModelConfig, path: Tuple[str, ...]) -> int:
+    """Sliding window of the layer this module instance came from."""
+    for comp in path:
+        m = re.match(r"(?:enc_)?layers\.(\d+)$", comp)
+        if m:
+            i = int(m.group(1))
+            if comp.startswith("enc_"):
+                return 0
+            if cfg.layer_is_global_attn(i):
+                return 0
+            return cfg.sliding_window
+    return 0
+
+
+class DoolyProf:
+    def __init__(self, db: LatencyDB, *, oracle: str = "tpu_analytical",
+                 hardware: str = "tpu-v5e", sweep: Optional[SweepConfig] = None):
+        self.db = db
+        self.oracle = oracle
+        self.hardware = hardware
+        self.sweep = sweep or SweepConfig()
+
+    # ------------------------------------------------------------------
+
+    def profile_model(self, cfg: ModelConfig, backend: str = "xla",
+                      tp: int = 1, trace: Optional[ModelTrace] = None
+                      ) -> ProfileReport:
+        t0 = time.time()
+        mt = trace or trace_model(cfg)
+        entries = find_runnable_set(mt.trace)
+        report = ProfileReport(model=cfg.name, backend=backend)
+        report.trace_s = time.time() - t0
+        config_id = self.db.config_id(cfg.name, backend, self.hardware, tp)
+
+        counts: Dict[Tuple[str, str], int] = {}
+        for entry in entries:
+            if isinstance(entry, ModuleEntry) and entry.context_kind:
+                rep = self._profile_stateful(entry, cfg, backend, config_id)
+            elif isinstance(entry, OpEntry):
+                rep = self._profile_op(entry, cfg, backend, config_id)
+            else:
+                continue        # absorbed non-stateful module: rare; skip
+            if rep is not None:
+                report.entries.append(rep)
+                key = (rep.sig, _module_of(entry))
+                counts[key] = counts.get(key, 0) + entry.count
+        # aggregate duplicate (sig, module) pairs (e.g. q_proj & o_proj share
+        # a signature inside the same canonical layer)
+        for (sig, module), count in counts.items():
+            self.db.add_model_operation(config_id, sig, module, count)
+        return report
+
+    # ------------------------------------------------------------------
+
+    def _profile_op(self, entry: OpEntry, cfg, backend, config_id
+                    ) -> Optional[EntryReport]:
+        sig = op_entry_signature(entry)
+        self.db.insert_signature(sig)
+        group = "linear" if entry.kind == "dot_general" else "other"
+        reused = self.db.has_signature(sig.hash, self.hardware)
+        points = (self.sweep.op_points if entry.sweepable
+                  else ((0, 0),))
+        cost = 0.0
+        for toks, reqs in points:
+            key = ("prefill", toks, reqs, 0)
+            if reused:
+                lat = self._replay(sig.hash, key)
+            else:
+                lat = self._measure_op(entry, toks or None, reqs or None)
+                self.db.add_measurement(sig.hash, self.hardware, *key,
+                                        self.oracle, lat * 1e6)
+            cost += lat * self.sweep.repeats
+        return EntryReport(sig.hash, entry.kind, group, "", entry.count,
+                           reused, cost)
+
+    def _profile_stateful(self, entry: ModuleEntry, cfg, backend, config_id
+                          ) -> Optional[EntryReport]:
+        window = window_for_path(cfg, entry.node.path)
+        ctx_pre = build_context(cfg, entry.context_kind, phase="prefill",
+                                backend=backend, window=window)
+        sig = module_entry_signature(entry, ctx_pre)
+        self.db.insert_signature(sig)
+        reused = self.db.has_signature(sig.hash, self.hardware)
+        variant = self._variant(ctx_pre)
+        cost = 0.0
+        for phase in phases_for(entry.context_kind, cfg):
+            mc = ctx_pre if phase == "prefill" else build_context(
+                cfg, entry.context_kind, phase="decode", backend=backend,
+                window=window)
+            for toks, reqs, ctx in self._phase_points(phase):
+                key = (phase, toks, reqs, ctx)
+                if reused:
+                    lat = self._replay(sig.hash, key)
+                else:
+                    lat = self._measure_module(mc, toks, reqs, ctx)
+                    self.db.add_measurement(sig.hash, self.hardware, *key,
+                                            self.oracle, lat * 1e6)
+                cost += lat * self.sweep.repeats
+        return EntryReport(sig.hash, entry.context_kind, "attention"
+                           if "attn" in entry.context_kind
+                           or entry.context_kind in ("mamba",)
+                           else entry.context_kind, variant, entry.count,
+                           reused, cost)
+
+    # ------------------------------------------------------------------
+
+    def _phase_points(self, phase: str):
+        s = self.sweep
+        if phase == "prefill":
+            # ctx sweep covers chunked prefill against a part-filled cache
+            return [(t, r, c) for t in s.toks for r in s.reqs
+                    for c in (0,) + s.ctx]
+        return [(1, r, c) for c in s.ctx for r in s.reqs]
+
+    def _variant(self, mc: ModuleContext) -> str:
+        a = mc.static_attrs
+        if mc.kind in ("self_attn", "cross_attn"):
+            v = f"{a['n_heads']}/{a['n_kv_heads']}/{a['head_dim']}"
+            w = a.get("window", 0)
+            if w:
+                v += f" window={w // 1024}K" if w >= 1024 else f" window={w}"
+            return v
+        if mc.kind == "mla_attn":
+            return (f"mla r{a['kv_lora_rank']} "
+                    f"{a['n_heads']}x{a['qk_nope']}+{a['qk_rope']}")
+        if mc.kind == "mamba":
+            return f"di={a['d_inner']} n={a['state']}"
+        if mc.kind == "moe":
+            return f"{a['n_experts']}e top{a['top_k']} ff={a['moe_d_ff']}"
+        return ""
+
+    def _measure_op(self, entry: OpEntry, toks, reqs) -> float:
+        fn, args = entry.jit_callable(toks=toks, reqs=reqs)
+        return oracles.measure(self.oracle, fn, args)
+
+    def _measure_module(self, mc: ModuleContext, toks, reqs, ctx) -> float:
+        args = mc.abstract_inputs(max(toks, 1), max(reqs, 1), max(ctx, 1))
+        full = (mc.params,) + tuple(args)
+        if self.oracle == "cpu_wallclock":
+            full = mc.materialize(full)
+        return oracles.measure(self.oracle, mc.fn, full)
+
+    def _replay(self, sig_hash: str, key) -> float:
+        phase, toks, reqs, ctx = key
+        for p, t, r, c, lat in self.db.measurements(sig_hash, self.hardware):
+            if (p, t, r, c) == (phase, toks, reqs, ctx):
+                return lat / 1e6
+        rows = self.db.measurements(sig_hash, self.hardware)
+        return (rows[0][4] / 1e6) if rows else 0.0

@@ -1,0 +1,129 @@
+"""Tainted Runner entry point (paper §4 workflow).
+
+``trace_model(cfg)`` performs the single abstract inference pass with a
+collision-free dummy prompt: seeds the registry from the model configuration
+(MODEL_CONFIG) and the dummy request (NUM_TOKS / NUM_REQS), traces the
+*unrolled* forward (one named_scope per layer, the module hierarchy a
+PyTorch profiler would see), and returns the tainted trace.
+
+Ambiguity (App. B): if a dummy dimension collides with a model-configuration
+value, seeding raises AmbiguityError and we retrace with the next
+collision-free prime — exactly the paper's retrace-with-different-prompt.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, model_config_taint_values
+from repro.core.taint import (MODEL_CONFIG, NUM_REQS, NUM_TOKS,
+                              AmbiguityError, TaintRegistry)
+from repro.core.tracer import TaintedTrace, trace_tainted
+from repro.models import build_model
+
+_PRIMES = (3, 5, 7, 11, 13, 17, 19, 23, 29, 31, 37, 41, 43, 47, 53, 59, 61,
+           67, 71, 73, 79, 83, 89, 97, 101, 103, 107, 109, 113)
+
+
+def config_taint_values(cfg: ModelConfig) -> Dict[int, set]:
+    """MODEL_CONFIG seed values.  Extends the base map with halved rotary
+    dims (the scalar `head_dim // 2` a PyTorch pass would taint-propagate)
+    and drops n_frontend_tokens (vision/audio token counts are request-
+    derived — they enter as NUM_TOKS)."""
+    vals = model_config_taint_values(cfg)
+    hd = cfg.resolved_head_dim
+    for v, name in [(hd // 2, "head_dim_half"),
+                    (cfg.d_model // 2, "d_model_half")]:
+        if v > 1:
+            vals.setdefault(v, set()).add(name)
+    if cfg.mla is not None:
+        v = cfg.mla.qk_rope_head_dim // 2
+        if v > 1:
+            vals.setdefault(v, set()).add("mla.rope_half")
+    v = cfg.n_frontend_tokens
+    if v in vals:
+        vals[v].discard("n_frontend_tokens")
+        if not vals[v]:
+            del vals[v]
+    return vals
+
+
+@dataclass
+class ModelTrace:
+    trace: TaintedTrace
+    cfg: ModelConfig
+    batch: int
+    seq: int
+    n_frontend: int
+    retraces: int
+
+
+def _pick_free(model_vals, used, start_idx=0) -> int:
+    for p in _PRIMES[start_idx:]:
+        if p not in model_vals and p not in used:
+            return p
+    raise RuntimeError("no collision-free prime available")
+
+
+def trace_model(cfg: ModelConfig, *, batch: Optional[int] = None,
+                seq: Optional[int] = None, max_retries: int = 4,
+                impl: str = "xla") -> ModelTrace:
+    model = build_model(cfg)
+    model_vals = config_taint_values(cfg)
+    retraces = 0
+    b = batch
+    s = seq
+    for attempt in range(max_retries + 1):
+        try:
+            if b is None or attempt > 0 and batch is None:
+                b = _pick_free(model_vals, set(), attempt)
+            if s is None or attempt > 0 and seq is None:
+                s = _pick_free(model_vals, {b}, attempt + 3)
+            s_front = 0
+            if cfg.frontend != "none" or cfg.is_encdec:
+                s_front = _pick_free(model_vals, {b, s}, attempt + 6)
+
+            registry = TaintRegistry()
+            for v, names in model_vals.items():
+                registry.seed(v, MODEL_CONFIG)
+            registry.seed(b, NUM_REQS)
+            registry.seed(s, NUM_TOKS)
+            if s_front:
+                registry.seed(s_front, NUM_TOKS)
+
+            params = model.abstract_params()
+            batch_spec: Dict[str, Any] = {
+                "tokens": jax.ShapeDtypeStruct((b, s), jnp.int32)}
+            if cfg.is_encdec or cfg.frontend != "none":
+                batch_spec["frames"] = jax.ShapeDtypeStruct(
+                    (b, s_front, cfg.d_model), jnp.dtype(cfg.dtype))
+
+            def lookup_taints(tree):
+                return jax.tree.map(
+                    lambda sds: tuple(registry.lookup(int(d))
+                                      for d in sds.shape), tree)
+
+            def fn(params, batch):
+                logits, _ = model.forward(params, batch, impl=impl,
+                                          unrolled=True, remat=False)
+                return logits
+
+            trace = trace_tainted(
+                fn, (params, batch_spec), registry=registry,
+                arg_taints=(lookup_taints(params),
+                            lookup_taints(batch_spec)))
+            return ModelTrace(trace=trace, cfg=cfg, batch=b, seq=s,
+                              n_frontend=s_front, retraces=retraces)
+        except AmbiguityError:
+            retraces += 1
+            if attempt == max_retries:
+                raise
+            if batch is None:
+                b = None
+            if seq is None:
+                s = None
+    raise RuntimeError("unreachable")

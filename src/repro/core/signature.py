@@ -1,0 +1,119 @@
+"""Operation signatures (paper §6).
+
+A signature canonically identifies an operation by what is invariant across
+workloads — three components:
+
+1. op name + MODEL_CONFIG-tainted dimension values (workload dims replaced
+   by their taint label) + size-invariant static params;
+2. the compile-time kernel fingerprint: the set of StableHLO ops (and
+   custom-call targets) the entry lowers to at a canonical probe point —
+   the XLA analogue of the GPU kernel symbols CUPTI would record;
+3. a digest of the module's primitive attributes (window, head counts, …)
+   capturing runtime branching invisible at kernel level.
+
+SHA-256 over the canonical serialization is the primary key of the latency
+database; dedup is a key lookup.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import re
+from dataclasses import dataclass
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+
+from repro.core.opset import ModuleEntry, OpEntry, generate_inputs
+from repro.core.taint import MODEL_CONFIG, NUM_REQS, NUM_TOKS, Taint
+
+PROBE_TOKS = 8
+PROBE_REQS = 2
+PROBE_CTX = 16
+
+_HLO_OP_RE = re.compile(r"(?:stablehlo|mhlo|chlo)\.([\w.]+)")
+_CUSTOM_RE = re.compile(r'custom_call[^"]*"([^"]+)"')
+
+
+def dim_template(shape, taints) -> Tuple[Any, ...]:
+    out = []
+    for s, t in zip(shape, taints):
+        if t.is_bot:
+            out.append(int(s))
+        elif t.is_mix:
+            # keep only the model-derived factors; request factors -> label
+            parts = sorted((lbl[0], v) for v, lbl in t.h)
+            out.append("x".join(f"{l}{v if l == 'M' else ''}"
+                                for l, v in parts))
+        elif t.kind == MODEL_CONFIG:
+            out.append(int(s))
+        elif t.kind == NUM_TOKS:
+            out.append("T")
+        elif t.kind == NUM_REQS:
+            out.append("R")
+        else:
+            out.append(str(t.kind))
+    return tuple(out)
+
+
+def hlo_fingerprint(fn, args) -> str:
+    """Sorted StableHLO op set + custom-call targets of the lowered entry."""
+    text = jax.jit(fn).lower(*args).as_text()
+    ops = set(_HLO_OP_RE.findall(text))
+    ops |= {f"cc:{t}" for t in _CUSTOM_RE.findall(text)}
+    ops.discard("return")
+    return ",".join(sorted(ops))
+
+
+@dataclass(frozen=True)
+class Signature:
+    hash: str
+    op_name: str
+    spec: str            # component 1 (canonical json)
+    fingerprint: str     # component 2
+    attrs: str           # component 3 (canonical json)
+
+    @classmethod
+    def build(cls, op_name: str, spec: Any, fingerprint: str,
+              attrs: Dict[str, Any]) -> "Signature":
+        spec_s = json.dumps(spec, sort_keys=True, default=str)
+        attrs_s = json.dumps(attrs, sort_keys=True, default=str)
+        h = hashlib.sha256(
+            f"{op_name}|{spec_s}|{fingerprint}|{attrs_s}".encode()
+        ).hexdigest()
+        return cls(h, op_name, spec_s, fingerprint, attrs_s)
+
+
+def op_entry_signature(entry: OpEntry) -> Signature:
+    op = entry.op
+    spec = {
+        "in": [list(dim_template(s, t))
+               for s, t in zip(op.in_shapes, op.in_taints)],
+        "dtypes": list(op.in_dtypes),
+        "params": {k: v for k, v in sorted(op.params.items())},
+    }
+    try:
+        fn, args = entry.jit_callable(
+            toks=PROBE_TOKS if entry.sweepable else None,
+            reqs=PROBE_REQS if entry.sweepable else None)
+        fp = hlo_fingerprint(fn, args)
+    except Exception:
+        fp = f"prim:{op.prim}"
+    return Signature.build(op.prim, spec, fp, {})
+
+
+def module_entry_signature(entry: ModuleEntry, context) -> Signature:
+    """context: ModuleContext from serving.context (prefill phase probe)."""
+    boundary = []
+    ops = entry.ops or entry.node.all_ops()
+    for op in ops[:1] + ops[-1:]:
+        boundary.append([list(dim_template(s, t))
+                         for s, t in zip(op.in_shapes, op.in_taints)])
+    spec = {"boundary": boundary, "n_ops": len(ops)}
+    try:
+        args = context.abstract_inputs(PROBE_TOKS, PROBE_REQS, PROBE_CTX)
+        fp = hlo_fingerprint(context.fn, (context.params,) + tuple(args))
+    except Exception:
+        fp = f"module:{entry.kind}"
+    return Signature.build(entry.kind, spec, fp,
+                           dict(context.static_attrs))

@@ -1,0 +1,533 @@
+"""Tainted Runner (paper §4): a jaxpr interpreter that labels every tensor
+dimension of every operation with its origin.
+
+PyTorch/GPU -> JAX/TPU adaptation: the paper intercepts eager dispatch
+(``__torch_dispatch__``) during a dummy-prompt GPU pass; in JAX the trace
+already exists — ``jax.make_jaxpr`` produces the full operation sequence
+abstractly (zero FLOPs, zero allocation), and dispatch-time interception
+becomes an equation-by-equation walk with per-primitive taint rules:
+
+* dimension-mapping primitives (reshape, broadcast_in_dim, concatenate,
+  dot_general, transpose, ...) get explicit rules — reshape merge/split uses
+  the MIX(H) machinery of Table 1;
+* everything else goes through the paper's shape-matching heuristic backed
+  by the global value->taint registry;
+* higher-order primitives (scan / while / cond / pjit / remat / custom_*)
+  recurse into their sub-jaxprs, with a carry fixpoint for loops.
+
+Module hierarchy comes from ``jax.named_scope`` name stacks recorded in each
+equation's source_info — the JAX analogue of ``Module.__call__`` hooks
+(paper App. C).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax._src import core as jcore
+
+from repro.core.taint import (BOT, MODEL, REQS, TOKS, AmbiguityError, Taint,
+                              TaintRegistry, combine, merge_dims, split_mix)
+
+Tree = Any
+DimTaints = Tuple[Taint, ...]
+
+
+@dataclass
+class TraceOp:
+    """One operation of the tainted trace."""
+    eqn_id: int
+    prim: str
+    name_stack: str
+    in_shapes: Tuple[Tuple[int, ...], ...]
+    in_dtypes: Tuple[str, ...]
+    in_taints: Tuple[DimTaints, ...]
+    out_shapes: Tuple[Tuple[int, ...], ...]
+    out_dtypes: Tuple[str, ...]
+    out_taints: Tuple[DimTaints, ...]
+    params: Dict[str, Any] = field(default_factory=dict)
+    eqn: Any = field(default=None, repr=False, compare=False)
+
+    @property
+    def path(self) -> Tuple[str, ...]:
+        return tuple(p for p in self.name_stack.split("/") if p)
+
+
+@dataclass
+class TaintedTrace:
+    ops: List[TraceOp]
+    registry: TaintRegistry
+    in_taints: List[DimTaints]
+    out_taints: List[DimTaints]
+
+
+# ---------------------------------------------------------------------------
+# interpreter
+# ---------------------------------------------------------------------------
+
+_HIGHER_ORDER = {"pjit", "jit", "closed_call", "custom_jvp_call",
+                 "custom_vjp_call", "remat", "checkpoint",
+                 "custom_vjp_call_jaxpr", "core_call"}
+
+
+class TaintInterpreter:
+    def __init__(self, registry: TaintRegistry, record: bool = True):
+        self.registry = registry
+        self.record = record
+        self.ops: List[TraceOp] = []
+        self._id = 0
+
+    # -- helpers ----------------------------------------------------------
+
+    def _reg(self, size: int) -> Taint:
+        try:
+            return self.registry.lookup(size)
+        except AmbiguityError:
+            raise
+
+    def _aval_taints(self, var, env) -> DimTaints:
+        if isinstance(var, jcore.Literal):
+            shape = getattr(var.aval, "shape", ())
+            return tuple(self._reg(int(d)) for d in shape)
+        return env[var]
+
+    # -- entry ------------------------------------------------------------
+
+    def run(self, closed_jaxpr, in_taints: Sequence[DimTaints]
+            ) -> List[DimTaints]:
+        jaxpr = closed_jaxpr.jaxpr
+        env: Dict[Any, DimTaints] = {}
+        for v, c in zip(jaxpr.constvars, closed_jaxpr.consts):
+            shape = getattr(c, "shape", ())
+            env[v] = tuple(self._reg(int(d)) for d in shape)
+        for v, t in zip(jaxpr.invars, in_taints):
+            env[v] = tuple(t)
+        self._run_jaxpr(jaxpr, env)
+        return [self._aval_taints(v, env) for v in jaxpr.outvars]
+
+    def _run_jaxpr(self, jaxpr, env):
+        for eqn in jaxpr.eqns:
+            in_t = [self._aval_taints(v, env) for v in eqn.invars]
+            out_t = self._eqn_taints(eqn, in_t, env)
+            for v, t in zip(eqn.outvars, out_t):
+                if not isinstance(v, jcore.DropVar):
+                    env[v] = t
+            if self.record and eqn.primitive.name not in _HIGHER_ORDER:
+                self._record(eqn, in_t, out_t)
+
+    def _record(self, eqn, in_t, out_t):
+        self._id += 1
+        ns = str(eqn.source_info.name_stack)
+        params = {}
+        for k, v in eqn.params.items():
+            if isinstance(v, (int, float, str, bool, tuple)):
+                params[k] = v
+
+        def shapes(vs):
+            return tuple(tuple(int(d) for d in getattr(v.aval, "shape", ()))
+                         for v in vs)
+
+        def dtypes(vs):
+            return tuple(str(getattr(v.aval, "dtype", "")) for v in vs)
+
+        self.ops.append(TraceOp(
+            eqn_id=self._id, prim=eqn.primitive.name, name_stack=ns,
+            in_shapes=shapes(eqn.invars), in_dtypes=dtypes(eqn.invars),
+            in_taints=tuple(tuple(t) for t in in_t),
+            out_shapes=shapes(eqn.outvars), out_dtypes=dtypes(eqn.outvars),
+            out_taints=tuple(tuple(t) for t in out_t), params=params,
+            eqn=eqn))
+
+    # -- per-primitive rules ----------------------------------------------
+
+    def _eqn_taints(self, eqn, in_t, env) -> List[DimTaints]:
+        prim = eqn.primitive.name
+        rule = getattr(self, f"_rule_{prim.replace('-', '_')}", None)
+        if rule is not None:
+            return rule(eqn, in_t)
+        if prim in _HIGHER_ORDER:
+            return self._rule_call(eqn, in_t)
+        if prim in ("scan",):
+            return self._rule_scan(eqn, in_t)
+        if prim in ("while",):
+            return self._rule_while(eqn, in_t)
+        if prim in ("cond",):
+            return self._rule_cond(eqn, in_t)
+        return self._default_rule(eqn, in_t)
+
+    # the paper's dimension-preserving heuristic (§4.2): match by shape,
+    # then by size via the registry, else BOT
+    def _default_rule(self, eqn, in_t) -> List[DimTaints]:
+        outs = []
+        in_shapes = [tuple(getattr(v.aval, "shape", ())) for v in eqn.invars]
+        for ov in eqn.outvars:
+            oshape = tuple(getattr(ov.aval, "shape", ()))
+            # tier 1: inputs with the identical shape -> positional combine
+            same = [t for s, t in zip(in_shapes, in_t) if s == oshape]
+            if same and len(oshape) > 0:
+                dims = []
+                for i in range(len(oshape)):
+                    t = BOT
+                    for st in same:
+                        t = combine(t, st[i])
+                        if t.is_mix:      # conflicting positional taints ->
+                            t = st[i]     # keep the first non-bot
+                            break
+                    dims.append(t)
+                outs.append(tuple(dims))
+                continue
+            # tier 2: per-dim size matching against any input dim
+            dims = []
+            for d in oshape:
+                cands = set()
+                for s, t in zip(in_shapes, in_t):
+                    for sz, tt in zip(s, t):
+                        if sz == d and not tt.is_bot:
+                            cands.add(tt)
+                if len(cands) == 1:
+                    dims.append(next(iter(cands)))
+                else:
+                    dims.append(self._reg(int(d)))
+            outs.append(tuple(dims))
+        return outs
+
+    # ---- dimension-mapping rules ----
+
+    def _rule_reshape(self, eqn, in_t) -> List[DimTaints]:
+        (xt,) = in_t[:1]
+        in_shape = tuple(eqn.invars[0].aval.shape)
+        out_shape = tuple(eqn.outvars[0].aval.shape)
+        return [reshape_taints(in_shape, xt, out_shape, self.registry)]
+
+    def _rule_broadcast_in_dim(self, eqn, in_t) -> List[DimTaints]:
+        (xt,) = in_t[:1]
+        in_shape = tuple(eqn.invars[0].aval.shape)
+        out_shape = tuple(eqn.outvars[0].aval.shape)
+        bdims = eqn.params["broadcast_dimensions"]
+        dims = []
+        for j, d in enumerate(out_shape):
+            if j in bdims:
+                i = bdims.index(j)
+                if in_shape[i] == d:
+                    dims.append(xt[i])
+                else:                      # size-1 broadcast -> new dim
+                    dims.append(self._reg(int(d)))
+            else:
+                dims.append(self._reg(int(d)))
+        return [tuple(dims)]
+
+    def _rule_transpose(self, eqn, in_t) -> List[DimTaints]:
+        (xt,) = in_t[:1]
+        perm = eqn.params["permutation"]
+        return [tuple(xt[p] for p in perm)]
+
+    def _rule_squeeze(self, eqn, in_t) -> List[DimTaints]:
+        (xt,) = in_t[:1]
+        dims = eqn.params["dimensions"]
+        return [tuple(t for i, t in enumerate(xt) if i not in dims)]
+
+    def _rule_expand_dims(self, eqn, in_t) -> List[DimTaints]:
+        (xt,) = in_t[:1]
+        dims = set(eqn.params["dimensions"])
+        out_rank = len(eqn.outvars[0].aval.shape)
+        it = iter(xt)
+        return [tuple(BOT if i in dims else next(it) for i in range(out_rank))]
+
+    def _rule_concatenate(self, eqn, in_t) -> List[DimTaints]:
+        d = eqn.params["dimension"]
+        out_shape = tuple(eqn.outvars[0].aval.shape)
+        dims = []
+        for j in range(len(out_shape)):
+            if j == d:
+                t = BOT
+                all_same = True
+                first = in_t[0][j]
+                for it_ in in_t:
+                    if it_[j] != first:
+                        all_same = False
+                t = first if all_same else self._reg(int(out_shape[j]))
+                dims.append(t)
+            else:
+                t = BOT
+                for it_ in in_t:
+                    t = combine(t, it_[j])
+                    if t.is_mix:
+                        t = it_[j]
+                        break
+                dims.append(t)
+        return [tuple(dims)]
+
+    def _rule_dot_general(self, eqn, in_t) -> List[DimTaints]:
+        lt, rt = in_t[0], in_t[1]
+        ((lc, rc), (lb, rb)) = eqn.params["dimension_numbers"]
+        l_free = [i for i in range(len(lt)) if i not in lc and i not in lb]
+        r_free = [i for i in range(len(rt)) if i not in rc and i not in rb]
+        dims = [lt[i] for i in lb] + [lt[i] for i in l_free] + \
+               [rt[i] for i in r_free]
+        return [tuple(dims)]
+
+    def _rule_iota(self, eqn, in_t) -> List[DimTaints]:
+        out_shape = tuple(eqn.outvars[0].aval.shape)
+        return [tuple(self._reg(int(d)) for d in out_shape)]
+
+    def _rule_slice(self, eqn, in_t) -> List[DimTaints]:
+        (xt,) = in_t[:1]
+        in_shape = tuple(eqn.invars[0].aval.shape)
+        out_shape = tuple(eqn.outvars[0].aval.shape)
+        dims = []
+        for i, (si, so) in enumerate(zip(in_shape, out_shape)):
+            if si == so:
+                dims.append(xt[i])
+            elif xt[i].kind in (TOKS.kind, REQS.kind):
+                # a subrange of a request-derived dim is request-derived
+                # (prevents derived sizes colliding with MODEL values)
+                dims.append(xt[i])
+            else:
+                dims.append(self._reg(int(so)))
+        return [tuple(dims)]
+
+    _rule_dynamic_slice = _rule_slice
+
+    def _rule_dynamic_update_slice(self, eqn, in_t) -> List[DimTaints]:
+        return [tuple(in_t[0])]
+
+    def _rule_pad(self, eqn, in_t) -> List[DimTaints]:
+        return self._rule_slice(eqn, in_t)
+
+    def _rule_rev(self, eqn, in_t) -> List[DimTaints]:
+        return [tuple(in_t[0])]
+
+    def _rule_reduce(self, eqn, in_t, axes_key="axes") -> List[DimTaints]:
+        axes = set(eqn.params.get(axes_key, ()))
+        outs = []
+        for ov, it_ in zip(eqn.outvars, in_t):
+            outs.append(tuple(t for i, t in enumerate(it_) if i not in axes))
+        return outs
+
+    _rule_reduce_sum = _rule_reduce
+    _rule_reduce_max = _rule_reduce
+    _rule_reduce_min = _rule_reduce
+    _rule_reduce_prod = _rule_reduce
+    _rule_reduce_and = _rule_reduce
+    _rule_reduce_or = _rule_reduce
+    _rule_argmax = _rule_reduce
+    _rule_argmin = _rule_reduce
+
+    def _rule_gather(self, eqn, in_t) -> List[DimTaints]:
+        return self._default_rule(eqn, in_t)
+
+    def _rule_split(self, eqn, in_t) -> List[DimTaints]:
+        (xt,) = in_t[:1]
+        axis = eqn.params.get("axis", 0)
+        outs = []
+        for ov in eqn.outvars:
+            oshape = tuple(ov.aval.shape)
+            dims = list(xt)
+            if oshape[axis] != eqn.invars[0].aval.shape[axis]:
+                t = self._reg(int(oshape[axis]))
+                dims[axis] = t
+            outs.append(tuple(dims))
+        return outs
+
+    def _rule_top_k(self, eqn, in_t) -> List[DimTaints]:
+        (xt,) = in_t[:1]
+        out_shape = tuple(eqn.outvars[0].aval.shape)
+        dims = list(xt[:-1]) + [self._reg(int(out_shape[-1]))]
+        return [tuple(dims)] * len(eqn.outvars)
+
+    def _rule_sort(self, eqn, in_t) -> List[DimTaints]:
+        return [tuple(t) for t in in_t]
+
+    # ---- higher-order ----
+
+    def _subjaxpr(self, eqn):
+        p = eqn.params
+        for key in ("jaxpr", "call_jaxpr", "fun_jaxpr"):
+            if key in p:
+                j = p[key]
+                return j if hasattr(j, "jaxpr") else jcore.ClosedJaxpr(j, ())
+        return None
+
+    def _rule_call(self, eqn, in_t) -> List[DimTaints]:
+        cj = self._subjaxpr(eqn)
+        if cj is None:
+            return self._default_rule(eqn, in_t)
+        sub = TaintInterpreter(self.registry, record=False)
+        sub.ops = self.ops          # share the op list (records nested eqns)
+        sub.record = self.record
+        sub._id = self._id
+        # custom_vjp/jvp pass extra closure args first; align from the end
+        n = len(cj.jaxpr.invars)
+        outs = sub.run(cj, list(in_t)[-n:] if n <= len(in_t)
+                       else list(in_t) + [()] * (n - len(in_t)))
+        self._id = sub._id
+        return outs
+
+    def _rule_scan(self, eqn, in_t) -> List[DimTaints]:
+        p = eqn.params
+        cj = p["jaxpr"]
+        n_consts, n_carry = p["num_consts"], p["num_carry"]
+        length = p["length"]
+        consts_t = list(in_t[:n_consts])
+        carry_t = list(in_t[n_consts:n_consts + n_carry])
+        xs_t = [tuple(t[1:]) for t in in_t[n_consts + n_carry:]]
+        lead = self._reg(int(length))
+        for _ in range(4):                      # carry fixpoint
+            sub = TaintInterpreter(self.registry, record=False)
+            outs = sub.run(cj, consts_t + carry_t + xs_t)
+            new_carry = outs[:n_carry]
+            merged = [tuple(combine(a, b) for a, b in zip(ct, nt))
+                      for ct, nt in zip(carry_t, new_carry)]
+            if merged == carry_t:
+                break
+            carry_t = merged
+        # record the body once with the final taints
+        sub = TaintInterpreter(self.registry, record=self.record)
+        sub.ops = self.ops
+        sub._id = self._id
+        outs = sub.run(cj, consts_t + carry_t + xs_t)
+        self._id = sub._id
+        ys_t = [tuple([lead] + list(t)) for t in outs[n_carry:]]
+        return list(carry_t) + ys_t
+
+    def _rule_while(self, eqn, in_t) -> List[DimTaints]:
+        p = eqn.params
+        body = p["body_jaxpr"]
+        nb = p["body_nconsts"]
+        nc = p["cond_nconsts"]
+        carry_t = list(in_t[nc + nb:])
+        body_consts = list(in_t[nc:nc + nb])
+        for _ in range(4):
+            sub = TaintInterpreter(self.registry, record=False)
+            outs = sub.run(body, body_consts + carry_t)
+            merged = [tuple(combine(a, b) for a, b in zip(ct, nt))
+                      for ct, nt in zip(carry_t, outs)]
+            if merged == carry_t:
+                break
+            carry_t = merged
+        sub = TaintInterpreter(self.registry, record=self.record)
+        sub.ops = self.ops
+        sub._id = self._id
+        sub.run(body, body_consts + carry_t)
+        self._id = sub._id
+        return carry_t
+
+    def _rule_cond(self, eqn, in_t) -> List[DimTaints]:
+        branches = eqn.params["branches"]
+        ops_t = list(in_t[1:])
+        result = None
+        for br in branches:
+            sub = TaintInterpreter(self.registry, record=self.record)
+            sub.ops = self.ops
+            sub._id = self._id
+            outs = sub.run(br, ops_t)
+            self._id = sub._id
+            if result is None:
+                result = outs
+            else:
+                result = [tuple(combine(a, b) for a, b in zip(rt, ot))
+                          for rt, ot in zip(result, outs)]
+        return result
+
+
+# ---------------------------------------------------------------------------
+# reshape merge/split (the MIX(H) mechanics)
+# ---------------------------------------------------------------------------
+
+def reshape_taints(in_shape, in_taints, out_shape, registry) -> DimTaints:
+    """Group input and output dims into product-matched factors; merged dims
+    get MIX(H), split dims recover factors from H / the registry."""
+    out: List[Taint] = []
+    i = j = 0
+    n, m = len(in_shape), len(out_shape)
+    while i < n or j < m:
+        # skip size-1 dims greedily
+        if i < n and in_shape[i] == 1 and (j >= m or out_shape[j] != 1):
+            i += 1
+            continue
+        if j < m and out_shape[j] == 1 and (i >= n or in_shape[i] != 1):
+            out.append(BOT)
+            j += 1
+            continue
+        if i >= n or j >= m:
+            while j < m:
+                out.append(registry.lookup(int(out_shape[j]))
+                           if out_shape[j] > 1 else BOT)
+                j += 1
+            break
+        # grow a group until products match
+        pi, pj = in_shape[i], out_shape[j]
+        gi, gj = [i], [j]
+        while pi != pj:
+            if pi < pj:
+                i2 = gi[-1] + 1
+                if i2 >= n:
+                    break
+                gi.append(i2)
+                pi *= in_shape[i2]
+            else:
+                j2 = gj[-1] + 1
+                if j2 >= m:
+                    break
+                gj.append(j2)
+                pj *= out_shape[j2]
+        if pi != pj:
+            # ragged tail: registry per remaining out dim
+            while j < m:
+                out.append(registry.lookup(int(out_shape[j]))
+                           if out_shape[j] > 1 else BOT)
+                j += 1
+            break
+        in_group = [(in_taints[k], int(in_shape[k])) for k in gi]
+        out_sizes = tuple(int(out_shape[k]) for k in gj)
+        if len(gi) == 1 and len(gj) == 1:
+            out.append(in_taints[gi[0]])
+        elif len(gj) == 1:                       # merge
+            out.append(merge_dims(in_group))
+        elif len(gi) == 1:                       # split
+            t = in_taints[gi[0]]
+            rec = split_mix(t, out_sizes)
+            if rec is not None:
+                out.extend(rec)
+            else:
+                resolved = [registry.lookup(s) if s > 1 else BOT
+                            for s in out_sizes]
+                unknown = [k for k, r in enumerate(resolved) if r.is_bot
+                           and out_sizes[k] > 1]
+                if len(unknown) == 1 and not t.is_bot and not t.is_mix:
+                    resolved[unknown[0]] = t
+                out.extend(resolved)
+        else:                                     # n->m: merge then split
+            merged = merge_dims(in_group)
+            rec = split_mix(merged, out_sizes)
+            if rec is not None:
+                out.extend(rec)
+            else:
+                out.extend(registry.lookup(s) if s > 1 else BOT
+                           for s in out_sizes)
+        i, j = gi[-1] + 1, gj[-1] + 1
+    return tuple(out[:m]) if len(out) >= m else tuple(
+        list(out) + [BOT] * (m - len(out)))
+
+
+# ---------------------------------------------------------------------------
+# public entry: trace a function with declared input taints
+# ---------------------------------------------------------------------------
+
+def trace_tainted(fn: Callable, args: Sequence[Any], *,
+                  registry: TaintRegistry,
+                  arg_taints: Sequence[Tree]) -> TaintedTrace:
+    """fn(*args) is traced abstractly; arg_taints mirrors args with per-dim
+    taint tuples at each array leaf."""
+    closed = jax.make_jaxpr(fn)(*args)
+    flat_taints = []
+    for t in arg_taints:
+        leaves = jax.tree.leaves(t, is_leaf=lambda x: isinstance(x, tuple))
+        flat_taints.extend(leaves)
+    interp = TaintInterpreter(registry)
+    out_taints = interp.run(closed, flat_taints)
+    return TaintedTrace(ops=interp.ops, registry=registry,
+                        in_taints=list(flat_taints), out_taints=out_taints)

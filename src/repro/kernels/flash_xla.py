@@ -1,0 +1,151 @@
+"""Flash-attention semantics in pure XLA (custom_vjp, no Pallas).
+
+The naive chunked attention saves every per-chunk probability tensor as a
+scan residual for the backward pass — O(n_chunks * b * h * sq * chunk) fp32,
+observed as the dominant HBM term on every assigned arch (2.5GiB x N buffers
+on llama4 train_4k).  This implementation stores only (out, lse) and
+*recomputes* probabilities chunk-by-chunk in the backward — the
+FlashAttention algorithm expressed at the XLA level, so it lowers on any
+backend (the Pallas kernel in flash_attention.py is the TPU-native twin and
+shares its oracle tests).
+
+Sharding note: all large tensors keep the (B, S, H, D) layout so a
+"heads over model-axis" constraint on q propagates to acc/lse/dq; GQA K/V
+are repeated to H per *chunk* only (a few MB), never for the full sequence.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def _chunks(x, chunk, axis=1):
+    """(B, S, ...) -> (n, B, chunk, ...) zero-padded."""
+    s = x.shape[axis]
+    n = -(-s // chunk)
+    pad = n * chunk - s
+    if pad:
+        cfgpad = [(0, 0)] * x.ndim
+        cfgpad[axis] = (0, pad)
+        x = jnp.pad(x, cfgpad)
+    x = x.reshape(x.shape[:axis] + (n, chunk) + x.shape[axis + 1:])
+    return jnp.moveaxis(x, axis, 0)
+
+
+def _rep(kch, h):
+    """(B,C,KV,D) -> (B,C,H,D), chunk-local GQA repeat (cheap)."""
+    kv = kch.shape[2]
+    if kv == h:
+        return kch
+    return jnp.repeat(kch, h // kv, axis=2)
+
+
+def _mask(qpos, kpos, *, causal, window, sk):
+    m = kpos < sk
+    if causal:
+        m &= kpos <= qpos
+    if window > 0:
+        m &= kpos > qpos - window
+    return m
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
+def flash_attention_xla(q, k, v, causal=True, window=0, q_offset=0,
+                        chunk=512):
+    out, _ = _fwd(q, k, v, causal, window, q_offset, chunk)
+    return out
+
+
+def _fwd(q, k, v, causal, window, q_offset, chunk):
+    b, sq, h, d = q.shape
+    sk = k.shape[1]
+    dv = v.shape[-1]
+    chunk = min(chunk, sk)
+    n = -(-sk // chunk)
+    kc = _chunks(k, chunk)                      # (n,B,C,KV,D)
+    vc = _chunks(v, chunk)
+    qf = (q.astype(jnp.float32) *
+          (1.0 / jnp.sqrt(jnp.asarray(d, jnp.float32))))
+    qpos = jnp.arange(sq)[:, None] + q_offset
+
+    def body(carry, inp):
+        m, l, acc = carry
+        kch, vch, idx = inp
+        kpos = idx * chunk + jnp.arange(chunk)[None, :]
+        s = jnp.einsum("bqhd,bchd->bqhc", qf,
+                       _rep(kch, h).astype(jnp.float32))
+        msk = _mask(qpos, kpos, causal=causal, window=window, sk=sk)
+        s = jnp.where(msk[None, :, None, :], s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(-1))
+        p = jnp.exp(s - m_new[..., None])
+        p = jnp.where(msk[None, :, None, :], p, 0.0)
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bqhc,bchd->bqhd", p, _rep(vch, h).astype(jnp.float32))
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, sq, h), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, sq, h), jnp.float32)
+    a0 = jnp.zeros((b, sq, h, dv), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0),
+                                  (kc, vc, jnp.arange(n)))
+    lse = m + jnp.log(jnp.maximum(l, 1e-30))
+    out = (acc / jnp.maximum(l, 1e-30)[..., None])
+    return out.astype(q.dtype), lse              # lse (B,Sq,H)
+
+
+def _fwd_vjp(q, k, v, causal, window, q_offset, chunk):
+    out, lse = _fwd(q, k, v, causal, window, q_offset, chunk)
+    return out, (q, k, v, out, lse)
+
+
+def _bwd_vjp(causal, window, q_offset, chunk, res, do):
+    q, k, v, out, lse = res
+    b, sq, h, d = q.shape
+    sk, kv = k.shape[1], k.shape[2]
+    dv = v.shape[-1]
+    g = h // kv
+    chunk_ = min(chunk, sk)
+    n = -(-sk // chunk_)
+    scale = 1.0 / jnp.sqrt(jnp.asarray(d, jnp.float32))
+    qf = q.astype(jnp.float32)
+    dof = do.astype(jnp.float32)
+    delta = jnp.sum(dof * out.astype(jnp.float32), axis=-1)   # (B,Sq,H)
+    qpos = jnp.arange(sq)[:, None] + q_offset
+    kc = _chunks(k, chunk_)
+    vc = _chunks(v, chunk_)
+
+    def body(dq_acc, inp):
+        kch, vch, idx = inp
+        kpos = idx * chunk_ + jnp.arange(chunk_)[None, :]
+        kr = _rep(kch, h).astype(jnp.float32)                 # (B,C,H,D)
+        vr = _rep(vch, h).astype(jnp.float32)
+        s = jnp.einsum("bqhd,bchd->bqhc", qf * scale, kr)
+        msk = _mask(qpos, kpos, causal=causal, window=window, sk=sk)
+        p = jnp.where(msk[None, :, None, :],
+                      jnp.exp(s - lse[..., None]), 0.0)       # (B,Sq,H,C)
+        dp = jnp.einsum("bqhd,bchd->bqhc", dof, vr)
+        ds = p * (dp - delta[..., None]) * scale
+        dq_acc = dq_acc + jnp.einsum("bqhc,bchd->bqhd", ds, kr)
+        # group-sum the GQA query heads back onto their kv head
+        dkch = jnp.einsum("bqhc,bqhd->bchd", ds, qf)
+        dvch = jnp.einsum("bqhc,bqhd->bchd", p, dof)
+        c = dkch.shape[1]
+        dkch = dkch.reshape(b, c, kv, g, d).sum(3)
+        dvch = dvch.reshape(b, c, kv, g, dv).sum(3)
+        return dq_acc, (dkch, dvch)
+
+    dq0 = jnp.zeros((b, sq, h, d), jnp.float32)
+    dq, (dkc, dvc) = jax.lax.scan(body, dq0, (kc, vc, jnp.arange(n)))
+    dk = jnp.moveaxis(dkc, 0, 1).reshape(b, n * chunk_, kv, d)[:, :sk]
+    dv_ = jnp.moveaxis(dvc, 0, 1).reshape(b, n * chunk_, kv, dv)[:, :sk]
+    return (dq.astype(q.dtype), dk.astype(k.dtype), dv_.astype(v.dtype))
+
+
+flash_attention_xla.defvjp(_fwd_vjp, _bwd_vjp)

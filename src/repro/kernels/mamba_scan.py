@@ -1,0 +1,109 @@
+"""Pallas TPU chunked selective-scan (Mamba-1 recurrence).
+
+    h_t = exp(dt_t * A) * h_{t-1} + dt_t * B_t * x_t
+    y_t = C_t . h_t + D * x_t
+
+TPU-native layout: grid (batch, d_inner blocks, seq chunks) with the chunk
+axis sequential ("arbitrary") so the hidden state lives in a VMEM scratch
+accumulator across chunks — the HBM traffic is exactly one read of
+(x, dt, B, C) and one write of y, with no O(S * Di * N) intermediate like the
+pure-jnp associative scan materializes.  Within a chunk the recurrence runs
+as a fori_loop of (bd, N) VPU ops.
+
+Forward-only (serving / profiling); training uses the chunked associative
+scan in models/mamba.py.  Validated in interpret mode against
+``ref.selective_scan`` (tests/test_kernels.py).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, dt_ref, b_ref, c_ref, a_ref, d_ref, h0_ref,
+            y_ref, hout_ref, h_ref, *, t: int, nc: int, seq: int):
+    ic = pl.program_id(2)
+
+    @pl.when(ic == 0)
+    def _init():
+        h_ref[...] = h0_ref[0].astype(jnp.float32)
+
+    a = a_ref[...].astype(jnp.float32)              # (bd, n)
+    d = d_ref[...].astype(jnp.float32)              # (bd,)
+
+    def step(i, h):
+        dt_i = dt_ref[0, pl.ds(i, 1)][0].astype(jnp.float32)   # (bd,)
+        x_i = x_ref[0, pl.ds(i, 1)][0].astype(jnp.float32)     # (bd,)
+        b_i = b_ref[0, pl.ds(i, 1)][0].astype(jnp.float32)     # (n,)
+        c_i = c_ref[0, pl.ds(i, 1)][0].astype(jnp.float32)     # (n,)
+        dA = jnp.exp(dt_i[:, None] * a)                        # (bd, n)
+        h_new = dA * h + (dt_i * x_i)[:, None] * b_i[None, :]
+        y = jnp.sum(h_new * c_i[None, :], axis=-1) + d * x_i
+        # mask padding steps past the true sequence length
+        valid = ic * t + i < seq
+        y_ref[0, pl.ds(i, 1), :] = jnp.where(
+            valid, y, 0.0).astype(y_ref.dtype)[None, :]
+        return jnp.where(valid, h_new, h)
+
+    h = jax.lax.fori_loop(0, t, step, h_ref[...], unroll=False)
+    h_ref[...] = h
+
+    @pl.when(ic == nc - 1)
+    def _finalize():
+        hout_ref[0] = h_ref[...].astype(hout_ref.dtype)
+
+
+def mamba_scan(x, dt, A, Bc, Cc, D, h0=None, *, block_d: int = 0,
+               chunk: int = 128, interpret: bool = False):
+    """x, dt: (B,S,Di)  A: (Di,N)  Bc,Cc: (B,S,N)  D: (Di,)  h0: (B,Di,N).
+
+    Returns (y (B,S,Di), h_final (B,Di,N) float32).
+    """
+    b, s, di = x.shape
+    n = A.shape[1]
+    t = min(chunk, s)
+    nc = pl.cdiv(s, t)
+    pad = nc * t - s
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bc = jnp.pad(Bc, ((0, 0), (0, pad), (0, 0)))
+        Cc = jnp.pad(Cc, ((0, 0), (0, pad), (0, 0)))
+    bd = block_d or min(di, 512)
+    bd = min(bd, di)
+    assert di % bd == 0, (di, bd)
+    nd = di // bd
+    if h0 is None:
+        h0 = jnp.zeros((b, di, n), jnp.float32)
+
+    kernel = functools.partial(_kernel, t=t, nc=nc, seq=s)
+    y, h = pl.pallas_call(
+        kernel,
+        grid=(b, nd, nc),
+        in_specs=[
+            pl.BlockSpec((1, t, bd), lambda ib, id_, ic: (ib, ic, id_)),
+            pl.BlockSpec((1, t, bd), lambda ib, id_, ic: (ib, ic, id_)),
+            pl.BlockSpec((1, t, n), lambda ib, id_, ic: (ib, ic, 0)),
+            pl.BlockSpec((1, t, n), lambda ib, id_, ic: (ib, ic, 0)),
+            pl.BlockSpec((bd, n), lambda ib, id_, ic: (id_, 0)),
+            pl.BlockSpec((bd,), lambda ib, id_, ic: (id_,)),
+            pl.BlockSpec((1, bd, n), lambda ib, id_, ic: (ib, id_, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, t, bd), lambda ib, id_, ic: (ib, ic, id_)),
+            pl.BlockSpec((1, bd, n), lambda ib, id_, ic: (ib, id_, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, nc * t, di), x.dtype),
+            jax.ShapeDtypeStruct((b, di, n), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((bd, n), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(x, dt, Bc, Cc, A, D, h0)
+    return y[:, :s], h

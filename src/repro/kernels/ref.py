@@ -1,0 +1,252 @@
+"""Pure-jnp reference oracles for every Pallas kernel.
+
+These are the ground truth for the interpret-mode allclose sweeps in
+``tests/test_kernels.py`` and double as the 'xla' attention backend (the
+serving-engine analogue of a non-flash eager backend).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# attention (prefill / train): q (B,S,H,D) k,v (B,S,KV,D) -> (B,S,H,D)
+# ---------------------------------------------------------------------------
+
+def _repeat_kv(k: jax.Array, n_heads: int) -> jax.Array:
+    """(B,S,KV,D) -> (B,S,H,D) by repeating each kv head H/KV times."""
+    b, s, kv, d = k.shape
+    if kv == n_heads:
+        return k
+    return jnp.repeat(k, n_heads // kv, axis=2)
+
+
+def attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+              causal: bool = True, window: int = 0,
+              q_offset: int = 0) -> jax.Array:
+    """Full softmax attention.
+
+    window > 0: sliding-window (key may attend iff q_pos - window < k_pos <= q_pos).
+    q_offset: absolute position of q[0] relative to k[0] (chunked prefill).
+    """
+    b, sq, h, d = q.shape
+    sk = k.shape[1]
+    k = _repeat_kv(k, h)
+    v = _repeat_kv(v, h)
+    scale = 1.0 / jnp.sqrt(jnp.asarray(d, jnp.float32))
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    qpos = jnp.arange(sq)[:, None] + q_offset
+    kpos = jnp.arange(sk)[None, :]
+    mask = jnp.ones((sq, sk), dtype=bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window > 0:
+        mask &= kpos > qpos - window
+    logits = jnp.where(mask[None, None], logits, -jnp.inf)
+    probs = jax.nn.softmax(logits, axis=-1)
+    # rows that mask out every key (can happen with window/offset) -> zeros
+    probs = jnp.where(jnp.any(mask, -1)[None, None, :, None], probs, 0.0)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# decode attention: q (B,1,H,Dk), caches (B,Smax,KV,Dk/Dv), lengths (B,)
+# ---------------------------------------------------------------------------
+
+def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                     lengths: jax.Array, *, window: int = 0) -> jax.Array:
+    """One-token attention over a (padded) KV cache.  Supports Dv != Dk (MLA)."""
+    b, one, h, dk = q.shape
+    smax, kv = k_cache.shape[1], k_cache.shape[2]
+    k = _repeat_kv(k_cache, h)
+    v = _repeat_kv(v_cache, h)
+    scale = 1.0 / jnp.sqrt(jnp.asarray(dk, jnp.float32))
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale  # (B,H,1,Smax)
+    kpos = jnp.arange(smax)[None, :]
+    valid = kpos < lengths[:, None]
+    if window > 0:
+        valid &= kpos >= (lengths[:, None] - window)
+    logits = jnp.where(valid[:, None, None, :], logits, -jnp.inf)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# chunked (memory-efficient) attention: the third backend.  Online softmax
+# over KV chunks with lax.scan; differentiable; O(S * chunk) live memory.
+# ---------------------------------------------------------------------------
+
+def chunked_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                      causal: bool = True, window: int = 0,
+                      chunk: int = 512, q_offset: int = 0) -> jax.Array:
+    b, sq, h, d = q.shape
+    sk, dv = k.shape[1], v.shape[-1]
+    k = _repeat_kv(k, h)
+    v = _repeat_kv(v, h)
+    chunk = min(chunk, sk)
+    n_chunks = (sk + chunk - 1) // chunk
+    pad = n_chunks * chunk - sk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kc = k.reshape(b, n_chunks, chunk, h, d).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(b, n_chunks, chunk, h, dv).transpose(1, 0, 2, 3, 4)
+    scale = 1.0 / jnp.sqrt(jnp.asarray(d, jnp.float32))
+    qf = q.astype(jnp.float32) * scale
+    qpos = jnp.arange(sq)[:, None] + q_offset
+
+    def body(carry, inp):
+        m, l, acc = carry
+        kchunk, vchunk, idx = inp
+        kpos = idx * chunk + jnp.arange(chunk)[None, :]
+        s = jnp.einsum("bqhd,bkhd->bhqk", qf, kchunk.astype(jnp.float32))
+        mask = (kpos < sk)
+        if causal:
+            mask &= kpos <= qpos
+        if window > 0:
+            mask &= kpos > qpos - window
+        s = jnp.where(mask[None, None], s, -jnp.inf)
+        m_new = jnp.maximum(m, s.max(-1))
+        # guard -inf rows
+        m_safe = jnp.where(jnp.isneginf(m_new), 0.0, m_new)
+        p = jnp.exp(s - m_safe[..., None])
+        p = jnp.where(mask[None, None], p, 0.0)
+        corr = jnp.where(jnp.isneginf(m), 0.0, jnp.exp(m - m_safe))
+        l_new = l * corr + p.sum(-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bhqk,bkhd->bhqd", p, vchunk.astype(jnp.float32))
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, h, sq), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((b, h, sq), jnp.float32)
+    acc0 = jnp.zeros((b, h, sq, dv), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        body, (m0, l0, acc0), (kc, vc, jnp.arange(n_chunks)))
+    out = acc / jnp.maximum(l, 1e-20)[..., None]
+    return out.transpose(0, 2, 1, 3).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# chunked-prefill attention against a (padded, absolute-position) cache:
+# q (B,C,H,Dk), caches (B,Smax,KV,Dk/Dv), lengths (B,) = tokens already in
+# the cache BEFORE this chunk.  The chunk's K/V must already be written at
+# slots [lengths, lengths+C).
+# ---------------------------------------------------------------------------
+
+def chunk_cache_attention(q: jax.Array, k_cache: jax.Array,
+                          v_cache: jax.Array, lengths: jax.Array, *,
+                          window: int = 0) -> jax.Array:
+    b, c, h, dk = q.shape
+    smax = k_cache.shape[1]
+    k = _repeat_kv(k_cache, h)
+    v = _repeat_kv(v_cache, h)
+    scale = 1.0 / jnp.sqrt(jnp.asarray(dk, jnp.float32))
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale      # (B,H,C,Smax)
+    qpos = lengths[:, None] + jnp.arange(c)[None, :]        # (B,C)
+    kpos = jnp.arange(smax)[None, None, :]
+    valid = kpos <= qpos[:, :, None]
+    if window > 0:
+        valid &= kpos > qpos[:, :, None] - window
+    logits = jnp.where(valid[:, None], logits, -jnp.inf)
+    probs = jax.nn.softmax(logits, axis=-1)
+    probs = jnp.where(jnp.any(valid, -1)[:, None, :, None], probs, 0.0)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def chunk_cache_attention_chunked(q: jax.Array, k_cache: jax.Array,
+                                  v_cache: jax.Array, lengths: jax.Array, *,
+                                  window: int = 0, chunk: int = 512
+                                  ) -> jax.Array:
+    """Online-softmax variant of chunk_cache_attention (the 'chunked'
+    backend's chunked-prefill kernel: O(C * chunk) live memory)."""
+    b, c, h, dk = q.shape
+    smax = k_cache.shape[1]
+    chunk = min(chunk, smax)
+    n = -(-smax // chunk)
+    pad = n * chunk - smax
+    k = _repeat_kv(k_cache, h)
+    v = _repeat_kv(v_cache, h)
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kc = k.reshape(b, n, chunk, h, dk).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(b, n, chunk, h, -1).transpose(1, 0, 2, 3, 4)
+    scale = 1.0 / jnp.sqrt(jnp.asarray(dk, jnp.float32))
+    qf = q.astype(jnp.float32) * scale
+    qpos = lengths[:, None] + jnp.arange(c)[None, :]       # (B,C)
+
+    def body(carry, inp):
+        m, l, acc = carry
+        kch, vch, idx = inp
+        kpos = idx * chunk + jnp.arange(chunk)[None, :]
+        s = jnp.einsum("bqhd,bkhd->bhqk", qf, kch.astype(jnp.float32))
+        valid = kpos[:, None, :] <= qpos[:, :, None]
+        valid &= (idx * chunk + jnp.arange(chunk))[None, None, :] < smax
+        if window > 0:
+            valid &= kpos[:, None, :] > qpos[:, :, None] - window
+        s = jnp.where(valid[:, None], s, -jnp.inf)
+        m_new = jnp.maximum(m, s.max(-1))
+        msafe = jnp.where(jnp.isneginf(m_new), 0.0, m_new)
+        p = jnp.where(valid[:, None], jnp.exp(s - msafe[..., None]), 0.0)
+        corr = jnp.where(jnp.isneginf(m), 0.0, jnp.exp(m - msafe))
+        l_new = l * corr + p.sum(-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bhqk,bkhd->bhqd", p, vch.astype(jnp.float32))
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, h, c), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((b, h, c), jnp.float32)
+    a0 = jnp.zeros((b, h, c, v.shape[-1]), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0),
+                                  (kc, vc, jnp.arange(n)))
+    out = acc / jnp.maximum(l, 1e-20)[..., None]
+    return out.transpose(0, 2, 1, 3).astype(q.dtype)
+
+
+def chunk_cache_attention_impl(impl: str):
+    if impl in ("chunked", "chunked_naive"):
+        return chunk_cache_attention_chunked
+    return chunk_cache_attention
+
+
+# ---------------------------------------------------------------------------
+# mamba selective scan:
+#   h_t = exp(dt_t * A) * h_{t-1} + dt_t * B_t * x_t ;  y_t = C_t . h_t + D*x_t
+# x,dt: (B,S,Di)  A: (Di,N)  Bc,Cc: (B,S,N)  D: (Di,)
+# ---------------------------------------------------------------------------
+
+def selective_scan(x, dt, A, Bc, Cc, D, h0=None):
+    b, s, di = x.shape
+    n = A.shape[1]
+    xf, dtf = x.astype(jnp.float32), dt.astype(jnp.float32)
+    Bf, Cf = Bc.astype(jnp.float32), Cc.astype(jnp.float32)
+    dA = jnp.exp(dtf[..., None] * A[None, None])            # (B,S,Di,N)
+    dBx = dtf[..., None] * Bf[:, :, None, :] * xf[..., None]  # (B,S,Di,N)
+
+    def combine(a, b2):
+        (ga, xa), (gb, xb) = a, b2
+        return ga * gb, xb + gb * xa
+
+    if h0 is not None:
+        # fold h0 into the first step
+        dBx = dBx.at[:, 0].add(dA[:, 0] * h0.astype(jnp.float32))
+    _, hs = jax.lax.associative_scan(combine, (dA, dBx), axis=1)
+    y = jnp.einsum("bsdn,bsn->bsd", hs, Cf) + xf * D[None, None].astype(jnp.float32)
+    return y.astype(x.dtype), hs[:, -1]
+
+
+def selective_scan_step(x, dt, A, Bc, Cc, D, h):
+    """Single decode step.  x,dt: (B,Di)  Bc,Cc: (B,N)  h: (B,Di,N)."""
+    xf, dtf = x.astype(jnp.float32), dt.astype(jnp.float32)
+    dA = jnp.exp(dtf[..., None] * A[None])
+    h_new = dA * h + dtf[..., None] * Bc[:, None, :].astype(jnp.float32) * xf[..., None]
+    y = jnp.einsum("bdn,bn->bd", h_new, Cc.astype(jnp.float32))
+    y = y + xf * D[None].astype(jnp.float32)
+    return y.astype(x.dtype), h_new

@@ -1,0 +1,244 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture x input shape) on
+the production meshes and extract memory / cost / collective analysis.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch yi-9b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both \
+        --out results/dryrun.jsonl
+
+The 512 placeholder host devices exist ONLY here (set above, before any jax
+import).  ``.lower().compile()`` never allocates an array: inputs are
+ShapeDtypeStructs, and compilation proves the sharding is coherent
+(collectives legal, per-device buffers sized) for the target mesh.
+"""
+
+import argparse
+import json
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+
+from repro.configs import SHAPES, get_config, ASSIGNED_ARCHS
+from repro.launch.mesh import make_production_mesh
+from repro.models import build_model
+from repro.parallel import roofline as rl
+from repro.parallel.sharding import (SERVE_RULES, TRAIN_RULES, spec_for,
+                                     use_mesh)
+from repro.models import transformer as tfm
+from repro.train.trainer import (abstract_train_state, default_microbatches,
+                                 make_train_step, train_state_axes)
+
+Tree = Any
+
+
+def tree_shardings(axes: Tree, abstract: Tree, mesh, rules) -> Tree:
+    from jax.sharding import NamedSharding
+
+    def f(ax, sds):
+        return NamedSharding(mesh, spec_for(list(ax), mesh, rules,
+                                            dims=sds.shape))
+    return jax.tree.map(f, axes, abstract,
+                        is_leaf=lambda x: isinstance(x, tuple))
+
+
+def batch_axes(batch_spec: Tree) -> Tree:
+    return jax.tree.map(lambda s: ("batch",) + (None,) * (len(s.shape) - 1),
+                        batch_spec)
+
+
+def lower_cell(arch: str, shape_name: str, *, multi_pod: bool,
+               kv_seq_shards: int = 1, rules_override: Optional[dict] = None,
+               microbatches: Optional[int] = None, impl: str = "auto"):
+    """Returns (lowered, out_meta) for one cell, or a skip record."""
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    if shape.name == "long_500k" and not cfg.subquadratic:
+        return None, {"arch": arch, "shape": shape_name,
+                      "mesh": "multi" if multi_pod else "single",
+                      "status": "skip",
+                      "reason": "full attention at 512K context is quadratic "
+                                "(noted in DESIGN.md §Shape applicability)"}
+    model = build_model(cfg)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    specs = model.input_specs(shape)
+    meta = {"arch": arch, "shape": shape_name,
+            "mesh": "multi" if multi_pod else "single", "status": "ok",
+            "kind": shape.kind}
+
+    if shape.kind == "train":
+        rules = dict(TRAIN_RULES)
+        rules.update(rules_override or {})
+        dp = (2 * 16) if multi_pod else 16
+        mb = microbatches or default_microbatches(cfg, shape, dp_size=dp)
+        meta["microbatches"] = mb
+        with use_mesh(mesh, rules):
+            state = abstract_train_state(model)
+            st_shard = tree_shardings(train_state_axes(model), state,
+                                      mesh, rules)
+            b_shard = tree_shardings(batch_axes(specs["batch"]),
+                                     specs["batch"], mesh, rules)
+            step = make_train_step(model, microbatches=mb, impl=impl)
+            lowered = jax.jit(step, in_shardings=(st_shard, b_shard),
+                              out_shardings=(st_shard, None),
+                              donate_argnums=(0,)
+                              ).lower(state, specs["batch"])
+        return lowered, meta
+
+    rules = dict(SERVE_RULES)
+    rules.update(rules_override or {})
+    with use_mesh(mesh, rules):
+        params = model.abstract_params()
+        p_shard = tree_shardings(model.param_axes(), params, mesh, rules)
+        if shape.kind == "prefill":
+            b_shard = tree_shardings(batch_axes(specs["batch"]),
+                                     specs["batch"], mesh, rules)
+            enc_len = (specs["batch"]["frames"].shape[1]
+                       if cfg.is_encdec else 0)
+            cache_spec = model.cache_spec(shape.global_batch, shape.seq_len,
+                                          enc_len)
+            c_shard = tree_shardings(tfm.cache_axes(cache_spec), cache_spec,
+                                     mesh, rules)
+
+            def prefill_fn(params, batch):
+                return model.prefill(params, batch, max_seq=shape.seq_len,
+                                     impl=impl)
+            lowered = jax.jit(prefill_fn, in_shardings=(p_shard, b_shard),
+                              out_shardings=(None, c_shard)
+                              ).lower(params, specs["batch"])
+        else:  # decode
+            cache_spec = specs["cache"]
+            c_shard = tree_shardings(tfm.cache_axes(cache_spec), cache_spec,
+                                     mesh, rules)
+            from jax.sharding import NamedSharding
+            tok_shard = NamedSharding(mesh, spec_for(
+                ["batch"], mesh, rules, dims=specs["tokens"].shape))
+
+            def decode_fn(params, cache, tokens, lengths):
+                return model.decode_step(params, cache, tokens, lengths,
+                                         impl=impl,
+                                         kv_seq_shards=kv_seq_shards)
+            lowered = jax.jit(
+                decode_fn,
+                in_shardings=(p_shard, c_shard, tok_shard, tok_shard),
+                out_shardings=(None, c_shard), donate_argnums=(1,),
+            ).lower(params, cache_spec, specs["tokens"], specs["lengths"])
+        meta["kv_seq_shards"] = kv_seq_shards
+    return lowered, meta
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
+             kv_seq_shards: int = 1, rules_override: Optional[dict] = None,
+             microbatches: Optional[int] = None, impl: str = "auto",
+             want_roofline: bool = True) -> Dict[str, Any]:
+    t0 = time.time()
+    try:
+        lowered, meta = lower_cell(arch, shape_name, multi_pod=multi_pod,
+                                   kv_seq_shards=kv_seq_shards,
+                                   rules_override=rules_override,
+                                   microbatches=microbatches, impl=impl)
+        if lowered is None:
+            return meta
+        t1 = time.time()
+        compiled = lowered.compile()
+        t2 = time.time()
+        mem = compiled.memory_analysis()
+        rec = dict(meta)
+        rec.update({
+            "lower_s": round(t1 - t0, 2),
+            "compile_s": round(t2 - t1, 2),
+            "bytes_per_device": {
+                "argument": int(getattr(mem, "argument_size_in_bytes", 0)),
+                "output": int(getattr(mem, "output_size_in_bytes", 0)),
+                "temp": int(getattr(mem, "temp_size_in_bytes", 0)),
+                "alias": int(getattr(mem, "alias_size_in_bytes", 0)),
+            },
+        })
+        rec["peak_bytes_per_device"] = (
+            rec["bytes_per_device"]["argument"]
+            + rec["bytes_per_device"]["output"]
+            + rec["bytes_per_device"]["temp"]
+            - rec["bytes_per_device"]["alias"])
+        if want_roofline:
+            roof = rl.analyze(compiled)
+            rec["roofline"] = roof.as_dict()
+            cfg = get_config(arch)
+            mf = rl.model_flops(cfg, SHAPES[shape_name])
+            n_chips = 512 if multi_pod else 256
+            rec["model_flops_total"] = mf
+            hlo_total = roof.flops * n_chips
+            rec["useful_flops_ratio"] = (mf / hlo_total) if hlo_total else 0.0
+        return rec
+    except Exception as e:  # noqa: BLE001 — dry-run reports failures as data
+        return {"arch": arch, "shape": shape_name,
+                "mesh": "multi" if multi_pod else "single",
+                "status": "error", "error": f"{type(e).__name__}: {e}",
+                "traceback": traceback.format_exc()[-2000:],
+                "wall_s": round(time.time() - t0, 2)}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="single")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default=None)
+    ap.add_argument("--kv-seq-shards", type=int, default=1)
+    ap.add_argument("--microbatches", type=int, default=None)
+    ap.add_argument("--impl", default="auto")
+    ap.add_argument("--no-roofline", action="store_true")
+    args = ap.parse_args()
+
+    cells = []
+    archs = list(ASSIGNED_ARCHS) if (args.all or not args.arch) \
+        else [args.arch]
+    shapes = list(SHAPES) if (args.all or not args.shape) else [args.shape]
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                cells.append((arch, shape, mp))
+
+    out_f = open(args.out, "a") if args.out else None
+    n_ok = n_skip = n_err = 0
+    for arch, shape, mp in cells:
+        rec = run_cell(arch, shape, multi_pod=mp,
+                       kv_seq_shards=args.kv_seq_shards,
+                       microbatches=args.microbatches, impl=args.impl,
+                       want_roofline=not args.no_roofline)
+        status = rec["status"]
+        n_ok += status == "ok"
+        n_skip += status == "skip"
+        n_err += status == "error"
+        mesh_name = rec["mesh"]
+        if status == "ok":
+            r = rec.get("roofline", {})
+            print(f"[{status}] {arch} x {shape} ({mesh_name}): "
+                  f"peak={rec['peak_bytes_per_device']/2**30:.2f}GiB/dev "
+                  f"compute={r.get('compute_s', 0):.4g}s "
+                  f"memory={r.get('memory_s', 0):.4g}s "
+                  f"collective={r.get('collective_s', 0):.4g}s "
+                  f"dominant={r.get('dominant', '?')} "
+                  f"(compile {rec['compile_s']}s)", flush=True)
+        else:
+            print(f"[{status}] {arch} x {shape} ({mesh_name}): "
+                  f"{rec.get('reason', rec.get('error', ''))}", flush=True)
+        if out_f:
+            slim = {k: v for k, v in rec.items() if k != "traceback"}
+            out_f.write(json.dumps(slim) + "\n")
+            out_f.flush()
+    print(f"\ndry-run: {n_ok} ok, {n_skip} skip, {n_err} error "
+          f"/ {len(cells)} cells")
+    if out_f:
+        out_f.close()
+    raise SystemExit(1 if n_err else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,40 @@
+"""Production meshes.
+
+Functions (not module-level constants) so importing never touches jax device
+state.  The dry-run forces 512 host devices *before* importing jax; everything
+else sees the real device count.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single pod: 256 chips (16x16, data x model).
+    Multi-pod: 2 pods = 512 chips (2x16x16, pod x data x model)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = math.prod(shape)
+    devices = jax.devices()
+    if len(devices) < n:
+        raise RuntimeError(
+            f"mesh {shape} needs {n} devices, have {len(devices)} "
+            "(dry-run must set XLA_FLAGS=--xla_force_host_platform_device_count=512 "
+            "before importing jax)")
+    import numpy as np
+    return jax.sharding.Mesh(
+        np.asarray(devices[:n]).reshape(shape), axes)
+
+
+def make_host_mesh(model_axis: int = 1):
+    """Whatever this host actually has (CPU smoke runs)."""
+    devices = jax.devices()
+    n = len(devices)
+    assert n % model_axis == 0
+    import numpy as np
+    return jax.sharding.Mesh(
+        np.asarray(devices).reshape(n // model_axis, model_axis),
+        ("data", "model"))

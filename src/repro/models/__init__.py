@@ -1,0 +1,2 @@
+"""Pure-JAX model zoo for the 10 assigned architectures + paper corpus."""
+from repro.models.zoo import Model, build_model  # noqa: F401

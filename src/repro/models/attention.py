@@ -1,0 +1,228 @@
+"""GQA / MQA / MHA attention module with prefill + decode paths.
+
+Three attention backends (the Dooly configuration axis 'S'):
+
+* ``xla``     — full materialized softmax attention (ref.attention); the
+                "eager" backend.  O(S^2) memory; auto-capped.
+* ``chunked`` — lax.scan online-softmax (ref.chunked_attention); memory-
+                efficient, the default for long sequences and the dry-run.
+* ``pallas``  — Pallas TPU flash kernels (kernels/ops.py); interpret-mode on
+                CPU, native on TPU.
+
+Backend choice is compile-time kernel selection: the three lower to different
+HLO, hence different Dooly signatures (paper §6).
+
+Decode uses a padded KV cache with per-request lengths; sliding-window layers
+use a ring-buffer cache of exactly ``window`` slots (ring semantics == window
+semantics, so decode over the ring is just a validity mask).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.kernels import ref
+from repro.kernels import ops as kops
+from repro.models.layers import ParamSpec, apply_rope, linear, linear_spec
+from repro.parallel.sharding import constrain
+
+Tree = Any
+
+_XLA_MAX_SEQ = 2048          # above this the materialized S^2 logits are insane
+
+
+def attn_spec(cfg: ModelConfig) -> Tree:
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    return {
+        "q": linear_spec(d, cfg.n_heads * hd, "q_proj"),
+        "k": linear_spec(d, cfg.n_kv_heads * hd, "kv_proj"),
+        "v": linear_spec(d, cfg.n_kv_heads * hd, "kv_proj"),
+        "o": {"w": ParamSpec((cfg.n_heads * hd, d), ("q_proj", "embed_fsdp"))},
+    }
+
+
+def _sdpa(q, k, v, *, causal, window, impl, q_offset=0):
+    """q (B,Sq,H,D) k,v (B,Sk,KV,D) -> (B,Sq,H,D)."""
+    from repro.kernels.flash_xla import flash_attention_xla
+    sq, sk = q.shape[1], k.shape[1]
+    if impl == "auto":
+        impl = "xla" if max(sq, sk) <= _XLA_MAX_SEQ else "chunked"
+    if impl == "xla":
+        return ref.attention(q, k, v, causal=causal, window=window,
+                             q_offset=q_offset)
+    if impl == "chunked":
+        # flash semantics at the XLA level: O(b*h*s*d) residuals, per-chunk
+        # probabilities recomputed in the backward (see kernels/flash_xla)
+        return flash_attention_xla(q, k, v, causal, window, q_offset)
+    if impl == "chunked_naive":
+        return ref.chunked_attention(q, k, v, causal=causal, window=window,
+                                     q_offset=q_offset)
+    if impl == "pallas":
+        return kops.flash_attention(q, k, v, causal=causal, window=window,
+                                    q_offset=q_offset)
+    raise ValueError(f"unknown attention impl {impl!r}")
+
+
+def attention(p: Tree, x: jax.Array, cfg: ModelConfig, *,
+              positions: jax.Array, causal: bool = True, window: int = 0,
+              impl: str = "auto",
+              kv_override: Optional[Tuple[jax.Array, jax.Array]] = None,
+              ) -> jax.Array:
+    """Prefill / training attention.  x: (B,S,D_model).
+
+    kv_override: precomputed (k, v) for cross-attention (B,Sk,KV,hd),
+    already rotated/normalized; when given, x only produces q.
+    """
+    b, s, _ = x.shape
+    hd = cfg.resolved_head_dim
+    with jax.named_scope("self_attn" if kv_override is None else "cross_attn"):
+        q = linear(p["q"], x, "q_proj").reshape(b, s, cfg.n_heads, hd)
+        if kv_override is None:
+            k = linear(p["k"], x, "k_proj").reshape(b, s, cfg.n_kv_heads, hd)
+            v = linear(p["v"], x, "v_proj").reshape(b, s, cfg.n_kv_heads, hd)
+            if cfg.rope_theta > 0:
+                q = apply_rope(q, positions, cfg.rope_theta)
+                k = apply_rope(k, positions, cfg.rope_theta)
+        else:
+            k, v = kv_override
+            causal = False
+        # heads shard over "model" when divisible; otherwise fall back to
+        # sequence sharding (context parallelism) so activations never
+        # replicate over the model axis (llama4's 40 heads on a 16-way axis)
+        from repro.parallel.sharding import current_mesh
+        mesh = current_mesh()
+        head_ok = True
+        if mesh is not None and "model" in mesh.axis_names:
+            head_ok = cfg.n_heads % mesh.shape["model"] == 0
+        qn = ("batch", None, "heads", None) if head_ok \
+            else ("batch", "seq_model", None, None)
+        q = constrain(q, *qn)
+        k = constrain(k, "batch", None, None, None)   # kv replicated over model
+        v = constrain(v, "batch", None, None, None)
+        out = _sdpa(q, k, v, causal=causal, window=window, impl=impl)
+        out = constrain(out, *qn)
+        out = out.reshape(b, s, cfg.n_heads * hd)
+        return linear(p["o"], out, "o_proj")
+
+
+def compute_kv(p: Tree, x: jax.Array, cfg: ModelConfig,
+               positions: Optional[jax.Array] = None) -> Tuple[jax.Array, jax.Array]:
+    """K/V for cross-attention memories (encoder output)."""
+    b, s, _ = x.shape
+    hd = cfg.resolved_head_dim
+    k = linear(p["k"], x, "k_proj").reshape(b, s, cfg.n_kv_heads, hd)
+    v = linear(p["v"], x, "v_proj").reshape(b, s, cfg.n_kv_heads, hd)
+    if positions is not None and cfg.rope_theta > 0:
+        k = apply_rope(k, positions, cfg.rope_theta)
+    return k, v
+
+
+# ---------------------------------------------------------------------------
+# decode path
+# ---------------------------------------------------------------------------
+
+def init_kv_cache(cfg: ModelConfig, batch: int, max_seq: int, window: int,
+                  dtype) -> Dict[str, jax.ShapeDtypeStruct]:
+    """Cache *shape* for one attention layer.  window>0 -> ring buffer."""
+    slots = min(window, max_seq) if window > 0 else max_seq
+    hd = cfg.resolved_head_dim
+    shape = (batch, slots, cfg.n_kv_heads, hd)
+    return {"k": jax.ShapeDtypeStruct(shape, dtype),
+            "v": jax.ShapeDtypeStruct(shape, dtype)}
+
+
+def decode_attention(p: Tree, x: jax.Array, cache: Tree, cfg: ModelConfig, *,
+                     lengths: jax.Array, window: int = 0, impl: str = "auto",
+                     kv_seq_shards: int = 1) -> Tuple[jax.Array, Tree]:
+    """One-token decode.  x: (B,1,D); lengths (B,): tokens already in cache.
+
+    Returns (out (B,1,D), updated cache).  The new token's position is
+    ``lengths`` (0-based); cache slot is position % slots for ring buffers.
+    """
+    b = x.shape[0]
+    hd = cfg.resolved_head_dim
+    slots = cache["k"].shape[1]
+    with jax.named_scope("self_attn"):
+        q = linear(p["q"], x, "q_proj").reshape(b, 1, cfg.n_heads, hd)
+        k = linear(p["k"], x, "k_proj").reshape(b, 1, cfg.n_kv_heads, hd)
+        v = linear(p["v"], x, "v_proj").reshape(b, 1, cfg.n_kv_heads, hd)
+        if cfg.rope_theta > 0:
+            pos = lengths[:, None]
+            q = apply_rope(q, pos, cfg.rope_theta)
+            k = apply_rope(k, pos, cfg.rope_theta)
+
+        slot = (lengths % slots).astype(jnp.int32)
+        k_cache = _scatter_slot(cache["k"], k[:, 0], slot)
+        v_cache = _scatter_slot(cache["v"], v[:, 0], slot)
+        # effective valid count inside the cache
+        eff_len = jnp.minimum(lengths + 1, slots)
+
+        if kv_seq_shards > 1:
+            out = _split_kv_decode(q, k_cache, v_cache, eff_len,
+                                   n_shards=kv_seq_shards)
+        elif impl == "pallas":
+            out = kops.decode_attention(q, k_cache, v_cache, eff_len)
+        elif impl in ("chunked", "chunked_naive") and window == 0:
+            # split-KV style decode (distinct compile-time kernel selection)
+            n = max(k_cache.shape[1] // 512, 1)
+            while k_cache.shape[1] % n:
+                n -= 1
+            out = _split_kv_decode(q, k_cache, v_cache, eff_len, n_shards=n)
+        else:
+            out = ref.decode_attention(q, k_cache, v_cache, eff_len)
+        out = out.reshape(b, 1, cfg.n_heads * hd)
+        out = linear(p["o"], out, "o_proj")
+        return out, {"k": k_cache, "v": v_cache}
+
+
+def _scatter_slot(cache: jax.Array, new: jax.Array, slot: jax.Array) -> jax.Array:
+    """cache (B,S,KV,D), new (B,KV,D), slot (B,) -> cache with new row written."""
+    b = cache.shape[0]
+    idx = jnp.stack([jnp.arange(b, dtype=slot.dtype), slot], axis=-1)  # (B,2)
+    return cache.at[idx[:, 0], idx[:, 1]].set(new.astype(cache.dtype))
+
+
+# ---------------------------------------------------------------------------
+# split-KV decode: sequence-sharded cache + partial-softmax combine.
+# TPU-native flash-decoding (beyond-paper optimization; §Perf hillclimb).
+# Implemented as a pure function of locally-sharded chunks so it works both
+# under shard_map (real sharding) and as a plain reshape on one device.
+# ---------------------------------------------------------------------------
+
+def _split_kv_decode(q, k_cache, v_cache, lengths, *, n_shards: int):
+    """q (B,1,H,D), caches (B,S,KV,D); S divided into n_shards chunks, each
+    reduced independently (partial m/l/acc) then merged.  The shard dim stays
+    explicit so under pjit (cache seq sharded over "model") each chunk's
+    reduction is local and only the tiny (m,l,o) partials cross the ICI."""
+    b, s, kv, d = k_cache.shape
+    h = q.shape[2]
+    dv = v_cache.shape[-1]
+    group = h // kv
+    chunk = s // n_shards
+    kc = k_cache.reshape(b, n_shards, chunk, kv, d).astype(jnp.float32)
+    vc = v_cache.reshape(b, n_shards, chunk, kv, dv).astype(jnp.float32)
+    if group > 1:
+        kc = jnp.repeat(kc, group, axis=3)
+        vc = jnp.repeat(vc, group, axis=3)
+    scale = 1.0 / jnp.sqrt(jnp.asarray(d, jnp.float32))
+    qf = q.astype(jnp.float32) * scale
+    logits = jnp.einsum("bqhd,bnkhd->bnhqk", qf, kc)          # (B,n,H,1,chunk)
+    kpos = (jnp.arange(chunk)[None, :]
+            + (jnp.arange(n_shards) * chunk)[:, None])        # (n,chunk)
+    valid = kpos[None, :, None, None, :] < lengths[:, None, None, None, None]
+    logits = jnp.where(valid, logits, -jnp.inf)
+    m = logits.max(-1)                                        # (B,n,H,1)
+    msafe = jnp.where(jnp.isneginf(m), 0.0, m)
+    p = jnp.where(valid, jnp.exp(logits - msafe[..., None]), 0.0)
+    l = p.sum(-1)                                             # (B,n,H,1)
+    o = jnp.einsum("bnhqk,bnkhd->bnqhd", p, vc)               # (B,n,1,H,Dv)
+    # combine partials across shards (small all-reduce over the model axis)
+    m_glob = m.max(1, keepdims=True)
+    corr = jnp.exp(jnp.where(jnp.isneginf(m), -jnp.inf, m - m_glob))  # (B,n,H,1)
+    l_glob = (l * corr).sum(1)                                # (B,H,1)
+    o_glob = (o * corr.swapaxes(2, 3)[..., None]).sum(1)      # (B,1,H,Dv)
+    out = o_glob / jnp.maximum(l_glob, 1e-20)[:, None, :, :]
+    return out.astype(q.dtype)

@@ -1,0 +1,166 @@
+"""Parameter specs + basic layers (norm, linear, embedding, RoPE, MLP).
+
+Parameters are described by ``ParamSpec`` trees so the same model definition
+serves three uses without duplication:
+
+* ``init_params``      — concrete initialization (smoke tests, CPU training)
+* ``abstract_params``  — ShapeDtypeStruct tree (dry-run: zero allocation)
+* ``axes_tree``        — logical-axis tree -> NamedShardings via parallel.sharding
+
+Every layer runs under ``jax.named_scope`` so the Dooly tracer sees the same
+module hierarchy a PyTorch profiler trace would (paper App. C).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.parallel.sharding import constrain
+
+Tree = Any
+
+
+# ---------------------------------------------------------------------------
+# ParamSpec system
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class ParamSpec:
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]         # logical axis names, len == ndim
+    init: str = "normal"                    # normal | zeros | ones
+    scale: Optional[float] = None           # None -> 1/sqrt(fan_in)
+    dtype: Optional[str] = None             # None -> model dtype
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def _is_spec(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def init_params(specs: Tree, key: jax.Array, default_dtype: str) -> Tree:
+    leaves, treedef = jax.tree.flatten(specs, is_leaf=_is_spec)
+    keys = jax.random.split(key, len(leaves))
+    out = []
+    for spec, k in zip(leaves, keys):
+        dt = jnp.dtype(spec.dtype or default_dtype)
+        if spec.init == "zeros":
+            out.append(jnp.zeros(spec.shape, dt))
+        elif spec.init == "ones":
+            out.append(jnp.ones(spec.shape, dt))
+        else:
+            fan_in = spec.shape[0] if len(spec.shape) > 1 else spec.shape[-1]
+            scale = spec.scale if spec.scale is not None else 1.0 / np.sqrt(max(fan_in, 1))
+            out.append((jax.random.normal(k, spec.shape, jnp.float32) * scale).astype(dt))
+    return jax.tree.unflatten(treedef, out)
+
+
+def abstract_params(specs: Tree, default_dtype: str) -> Tree:
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, jnp.dtype(s.dtype or default_dtype)),
+        specs, is_leaf=_is_spec)
+
+
+def axes_tree(specs: Tree) -> Tree:
+    return jax.tree.map(lambda s: s.axes, specs, is_leaf=_is_spec)
+
+
+def stack_specs(specs: Tree, n: int, axis_name: Optional[str] = "layers") -> Tree:
+    """Prepend a stacking dimension (for scan-over-layers parameter stacks)."""
+    return jax.tree.map(
+        lambda s: dataclasses.replace(s, shape=(n,) + s.shape,
+                                      axes=(axis_name,) + s.axes),
+        specs, is_leaf=_is_spec)
+
+
+# ---------------------------------------------------------------------------
+# Layers (pure functions over param dicts)
+# ---------------------------------------------------------------------------
+
+def rmsnorm_spec(d: int) -> Tree:
+    return {"scale": ParamSpec((d,), (None,), init="ones", dtype="float32")}
+
+
+def rmsnorm(p: Tree, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    with jax.named_scope("rmsnorm"):
+        xf = x.astype(jnp.float32)
+        var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(var + eps) * p["scale"]
+        return y.astype(x.dtype)
+
+
+def linear_spec(d_in: int, d_out: int, out_axis: Optional[str],
+                in_axis: Optional[str] = "embed_fsdp",
+                scale: Optional[float] = None) -> Tree:
+    return {"w": ParamSpec((d_in, d_out), (in_axis, out_axis), scale=scale)}
+
+
+def linear(p: Tree, x: jax.Array, name: str = "linear") -> jax.Array:
+    with jax.named_scope(name):
+        return x @ p["w"]
+
+
+def embedding_spec(vocab: int, d: int) -> Tree:
+    return {"table": ParamSpec((vocab, d), ("vocab", "embed_fsdp"),
+                               scale=d ** -0.5)}
+
+
+def embedding(p: Tree, tokens: jax.Array) -> jax.Array:
+    with jax.named_scope("embed"):
+        return jnp.take(p["table"], tokens, axis=0)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    """(head_dim/2,) inverse frequencies, float32."""
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, H, D) rotary over last dim; positions: broadcastable to (..., S)."""
+    with jax.named_scope("rope"):
+        d = x.shape[-1]
+        inv = rope_freqs(d, theta)                                  # (d/2,)
+        ang = positions.astype(jnp.float32)[..., None] * inv        # (...,S,d/2)
+        cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]
+        x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+        out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+        return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLP (SwiGLU for act='silu', classic two-matrix for act='gelu')
+# ---------------------------------------------------------------------------
+
+def mlp_spec(d: int, d_ff: int, act: str) -> Tree:
+    spec = {
+        "up": linear_spec(d, d_ff, "ff"),
+        "down": {"w": ParamSpec((d_ff, d), ("ff", "embed_fsdp"))},
+    }
+    if act == "silu":
+        spec["gate"] = linear_spec(d, d_ff, "ff")
+    return spec
+
+
+def mlp(p: Tree, x: jax.Array, act: str) -> jax.Array:
+    with jax.named_scope("mlp"):
+        up = linear(p["up"], x, "up_proj")
+        if act == "silu":
+            gate = linear(p["gate"], x, "gate_proj")
+            h = jax.nn.silu(gate) * up
+        else:
+            h = jax.nn.gelu(up)
+        names = ("batch",) + (None,) * (h.ndim - 2) + ("ff",)
+        h = constrain(h, *names)
+        return linear(p["down"], h, "down_proj")

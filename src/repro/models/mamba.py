@@ -1,0 +1,134 @@
+"""Mamba-1 selective-SSM block (falcon-mamba, hymba's SSM half).
+
+Prefill/train uses a chunked selective scan (lax.scan over sequence chunks,
+associative scan within a chunk) so live memory is O(B * chunk * d_inner * N)
+instead of O(B * S * d_inner * N); the Pallas kernel (kernels/mamba_scan.py)
+is the TPU-optimized equivalent.  Decode carries two pieces of state per
+layer: the causal-conv tail (conv-1 inputs) and the SSM hidden state.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.kernels import ref
+from repro.models.layers import ParamSpec, linear
+from repro.parallel.sharding import constrain
+
+Tree = Any
+
+SCAN_CHUNK = 512
+
+
+def mamba_spec(cfg: ModelConfig) -> Tree:
+    d, di, st = cfg.d_model, cfg.ssm_d_inner, cfg.ssm_state
+    dtr = cfg.resolved_dt_rank
+    return {
+        "in_proj": {"w": ParamSpec((d, 2 * di), ("embed_fsdp", "ff"))},
+        "conv_w": ParamSpec((cfg.ssm_conv, di), (None, "ff"), scale=0.5),
+        "conv_b": ParamSpec((di,), ("ff",), init="zeros"),
+        "x_proj": {"w": ParamSpec((di, dtr + 2 * st), ("ff", None))},
+        "dt_w": ParamSpec((dtr, di), (None, "ff")),
+        "dt_b": ParamSpec((di,), ("ff",), init="zeros", dtype="float32"),
+        "A_log": ParamSpec((di, st), ("ff", None), init="zeros", dtype="float32"),
+        "D": ParamSpec((di,), ("ff",), init="ones", dtype="float32"),
+        "out_proj": {"w": ParamSpec((di, d), ("ff", "embed_fsdp"))},
+    }
+
+
+def _ssm_params(p: Tree, u: jax.Array, cfg: ModelConfig):
+    """u: (..., Di) -> dt (..., Di), Bc (..., N), Cc (..., N)."""
+    dtr, st = cfg.resolved_dt_rank, cfg.ssm_state
+    xdbc = linear(p["x_proj"], u, "x_proj")
+    dt_in, Bc, Cc = jnp.split(xdbc, [dtr, dtr + st], axis=-1)
+    dt = jax.nn.softplus(dt_in.astype(jnp.float32) @ p["dt_w"].astype(jnp.float32)
+                         + p["dt_b"])
+    return dt, Bc, Cc
+
+
+def selective_scan_chunked(x, dt, A, Bc, Cc, D, h0=None, chunk: int = SCAN_CHUNK):
+    """ref.selective_scan applied chunk-by-chunk carrying the state."""
+    b, s, di = x.shape
+    if s <= chunk:
+        return ref.selective_scan(x, dt, A, Bc, Cc, D, h0)
+    n = -(-s // chunk)
+    pad = n * chunk - s
+    def pads(a):
+        return jnp.pad(a, ((0, 0), (0, pad)) + ((0, 0),) * (a.ndim - 2))
+    xs = tuple(pads(a).reshape(b, n, chunk, -1).swapaxes(0, 1)
+               for a in (x, dt, Bc, Cc))
+    h0 = h0 if h0 is not None else jnp.zeros((b, di, A.shape[1]), jnp.float32)
+
+    def body(h, inp):
+        xc, dtc, bc, cc = inp
+        y, h = ref.selective_scan(xc, dtc, A, bc, cc, D, h)
+        return h, y
+
+    h, ys = jax.lax.scan(body, h0, xs)
+    y = ys.swapaxes(0, 1).reshape(b, n * chunk, di)[:, :s]
+    return y, h
+
+
+def mamba_mixer(p: Tree, x: jax.Array, cfg: ModelConfig,
+                h0: Optional[jax.Array] = None,
+                conv_tail: Optional[jax.Array] = None,
+                return_state: bool = False):
+    """Full-sequence mixer.  x: (B,S,D) -> (B,S,D) [, (conv_tail, h)].
+
+    h0 / conv_tail continue a previous chunk (chunked prefill): conv_tail is
+    the last kw-1 raw conv inputs of the previous chunk."""
+    b, s, _ = x.shape
+    di, kw = cfg.ssm_d_inner, cfg.ssm_conv
+    with jax.named_scope("mamba"):
+        xz = linear(p["in_proj"], x, "in_proj")
+        u_raw, z = jnp.split(xz, 2, axis=-1)                   # (B,S,Di) each
+        u_raw = constrain(u_raw, "batch", None, "ff")
+        # causal depthwise conv over seq (pre-activation inputs kept for state)
+        if conv_tail is not None:
+            u_pad = jnp.concatenate([conv_tail.astype(u_raw.dtype), u_raw],
+                                    axis=1)
+        else:
+            u_pad = jnp.pad(u_raw, ((0, 0), (kw - 1, 0), (0, 0)))
+        conv = sum(u_pad[:, i:i + s] * p["conv_w"][i] for i in range(kw))
+        u = jax.nn.silu(conv + p["conv_b"]).astype(x.dtype)
+        dt, Bc, Cc = _ssm_params(p, u, cfg)
+        A = -jnp.exp(p["A_log"])
+        y, h = selective_scan_chunked(u, dt, A, Bc, Cc, p["D"], h0)
+        y = y * jax.nn.silu(z)
+        out = linear(p["out_proj"], y, "out_proj")
+        if return_state:
+            tail = u_pad[:, s:s + kw - 1]   # last kw-1 raw conv inputs
+            return out, (tail, h)
+        return out
+
+
+def init_mamba_state(cfg: ModelConfig, batch: int, dtype):
+    di, st, kw = cfg.ssm_d_inner, cfg.ssm_state, cfg.ssm_conv
+    return {
+        "conv": jax.ShapeDtypeStruct((batch, kw - 1, di), dtype),
+        "h": jax.ShapeDtypeStruct((batch, di, st), jnp.float32),
+    }
+
+
+def mamba_step(p: Tree, x: jax.Array, state: Tree, cfg: ModelConfig
+               ) -> Tuple[jax.Array, Tree]:
+    """One-token decode.  x: (B,1,D)."""
+    b = x.shape[0]
+    kw = cfg.ssm_conv
+    with jax.named_scope("mamba"):
+        xz = linear(p["in_proj"], x[:, 0], "in_proj")          # (B,2Di)
+        u_raw, z = jnp.split(xz, 2, axis=-1)
+        window = jnp.concatenate([state["conv"],
+                                  u_raw[:, None].astype(state["conv"].dtype)], axis=1)
+        conv = jnp.einsum("bkd,kd->bd", window.astype(jnp.float32),
+                          p["conv_w"].astype(jnp.float32))
+        u = jax.nn.silu(conv + p["conv_b"]).astype(x.dtype)
+        dt, Bc, Cc = _ssm_params(p, u, cfg)
+        A = -jnp.exp(p["A_log"])
+        y, h = ref.selective_scan_step(u, dt, A, Bc, Cc, p["D"], state["h"])
+        y = y * jax.nn.silu(z)
+        out = linear(p["out_proj"], y, "out_proj")[:, None]
+        return out, {"conv": window[:, 1:], "h": h}

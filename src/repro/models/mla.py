@@ -1,0 +1,133 @@
+"""Multi-head Latent Attention (DeepSeek-V2 / MiniCPM3).
+
+Prefill: latents are expanded to per-head K/V and standard attention runs.
+Decode: the *absorbed* formulation — the KV cache stores only the compressed
+latent (kv_lora_rank) + shared rotary key (qk_rope_head_dim); W_uk is absorbed
+into the query and W_uv applied after the attention-weighted latent sum.  This
+is the TPU-friendly form: the cache is ~1/8 the size of expanded K/V and the
+decode matmuls stay MXU-shaped.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MLAConfig, ModelConfig
+from repro.models.layers import ParamSpec, apply_rope, linear, rmsnorm, rmsnorm_spec
+from repro.parallel.sharding import constrain
+from repro.kernels import ref
+
+Tree = Any
+
+
+def mla_spec(cfg: ModelConfig) -> Tree:
+    m = cfg.mla or MLAConfig()
+    d, h = cfg.d_model, cfg.n_heads
+    qk = m.qk_nope_head_dim + m.qk_rope_head_dim
+    return {
+        "wdq": {"w": ParamSpec((d, m.q_lora_rank), ("embed_fsdp", "latent"))},
+        "q_norm": rmsnorm_spec(m.q_lora_rank),
+        "wuq": {"w": ParamSpec((m.q_lora_rank, h * qk), ("latent", "q_proj"))},
+        "wdkv": {"w": ParamSpec((d, m.kv_lora_rank + m.qk_rope_head_dim),
+                                ("embed_fsdp", "latent"))},
+        "kv_norm": rmsnorm_spec(m.kv_lora_rank),
+        "wuk": {"w": ParamSpec((m.kv_lora_rank, h * m.qk_nope_head_dim),
+                               ("latent", "q_proj"))},
+        "wuv": {"w": ParamSpec((m.kv_lora_rank, h * m.v_head_dim),
+                               ("latent", "q_proj"))},
+        "o": {"w": ParamSpec((h * m.v_head_dim, d), ("q_proj", "embed_fsdp"))},
+    }
+
+
+def _project_q(p: Tree, x: jax.Array, cfg: ModelConfig, positions):
+    m = cfg.mla
+    b, s, _ = x.shape
+    h = cfg.n_heads
+    qk = m.qk_nope_head_dim + m.qk_rope_head_dim
+    cq = rmsnorm(p["q_norm"], linear(p["wdq"], x, "q_down"), cfg.norm_eps)
+    q = linear(p["wuq"], cq, "q_up").reshape(b, s, h, qk)
+    q_nope, q_rope = jnp.split(q, [m.qk_nope_head_dim], axis=-1)
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def _project_latent(p: Tree, x: jax.Array, cfg: ModelConfig, positions):
+    m = cfg.mla
+    ckv = linear(p["wdkv"], x, "kv_down")
+    c, k_rope = jnp.split(ckv, [m.kv_lora_rank], axis=-1)
+    c = rmsnorm(p["kv_norm"], c, cfg.norm_eps)
+    k_rope = apply_rope(k_rope[:, :, None, :], positions, cfg.rope_theta)
+    return c, k_rope[:, :, 0, :]
+
+
+def mla_attention(p: Tree, x: jax.Array, cfg: ModelConfig, *,
+                  positions: jax.Array, impl: str = "auto") -> jax.Array:
+    """Prefill / training path (expanded K/V)."""
+    m = cfg.mla
+    b, s, _ = x.shape
+    h = cfg.n_heads
+    with jax.named_scope("mla_attn"):
+        q_nope, q_rope = _project_q(p, x, cfg, positions)
+        c, k_rope = _project_latent(p, x, cfg, positions)
+        k_nope = linear(p["wuk"], c, "k_up").reshape(b, s, h, m.qk_nope_head_dim)
+        v = linear(p["wuv"], c, "v_up").reshape(b, s, h, m.v_head_dim)
+        q = jnp.concatenate([q_nope, q_rope], axis=-1)
+        k = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(k_rope[:, :, None, :],
+                                      (b, s, h, m.qk_rope_head_dim))], axis=-1)
+        q = constrain(q, "batch", None, "heads", None)
+        if impl in ("auto", "chunked") and s > 2048:
+            from repro.kernels.flash_xla import flash_attention_xla
+            out = flash_attention_xla(q, k, v, True, 0, 0)
+        else:
+            out = ref.attention(q, k, v, causal=True)
+        out = out.reshape(b, s, h * m.v_head_dim)
+        return linear(p["o"], out, "o_proj")
+
+
+def init_mla_cache(cfg: ModelConfig, batch: int, max_seq: int, dtype):
+    m = cfg.mla or MLAConfig()
+    return {
+        "c": jax.ShapeDtypeStruct((batch, max_seq, m.kv_lora_rank), dtype),
+        "k_rope": jax.ShapeDtypeStruct((batch, max_seq, m.qk_rope_head_dim), dtype),
+    }
+
+
+def mla_decode(p: Tree, x: jax.Array, cache: Tree, cfg: ModelConfig, *,
+               lengths: jax.Array) -> Tuple[jax.Array, Tree]:
+    """Absorbed one-token decode.  x: (B,1,D)."""
+    m = cfg.mla
+    b = x.shape[0]
+    h = cfg.n_heads
+    smax = cache["c"].shape[1]
+    with jax.named_scope("mla_attn"):
+        pos = lengths[:, None]
+        q_nope, q_rope = _project_q(p, x, cfg, pos)            # (B,1,H,*)
+        c_new, kr_new = _project_latent(p, x, cfg, pos)        # (B,1,r) (B,1,dr)
+        ar = jnp.arange(b)
+        c_cache = cache["c"].at[ar, lengths].set(c_new[:, 0].astype(cache["c"].dtype))
+        kr_cache = cache["k_rope"].at[ar, lengths].set(
+            kr_new[:, 0].astype(cache["k_rope"].dtype))
+        eff = lengths + 1
+
+        wuk = p["wuk"]["w"].reshape(m.kv_lora_rank, h, m.qk_nope_head_dim)
+        # absorb: q_lat (B,H,r)
+        q_lat = jnp.einsum("bhd,rhd->bhr", q_nope[:, 0].astype(jnp.float32),
+                           wuk.astype(jnp.float32))
+        scale = 1.0 / jnp.sqrt(jnp.asarray(
+            m.qk_nope_head_dim + m.qk_rope_head_dim, jnp.float32))
+        s_lat = jnp.einsum("bhr,bsr->bhs", q_lat, c_cache.astype(jnp.float32))
+        s_rope = jnp.einsum("bhd,bsd->bhs", q_rope[:, 0].astype(jnp.float32),
+                            kr_cache.astype(jnp.float32))
+        logits = (s_lat + s_rope) * scale
+        valid = jnp.arange(smax)[None, None, :] < eff[:, None, None]
+        logits = jnp.where(valid, logits, -jnp.inf)
+        probs = jax.nn.softmax(logits, axis=-1)                 # (B,H,S)
+        ctx = jnp.einsum("bhs,bsr->bhr", probs, c_cache.astype(jnp.float32))
+        wuv = p["wuv"]["w"].reshape(m.kv_lora_rank, h, m.v_head_dim)
+        out = jnp.einsum("bhr,rhd->bhd", ctx, wuv.astype(jnp.float32))
+        out = out.reshape(b, 1, h * m.v_head_dim).astype(x.dtype)
+        out = linear(p["o"], out, "o_proj")
+        return out, {"c": c_cache, "k_rope": kr_cache}

@@ -1,0 +1,54 @@
+"""int8 gradient compression for the cross-pod data-parallel all-reduce.
+
+On a 2-pod mesh the inter-pod links are the slowest hop; quantizing the
+gradient all-reduce payload to int8 with per-block scales cuts the
+cross-pod bytes 4x (fp32 accum) at ~0.7% relative error (test-gated).
+
+Used as the trainer's ``grad_transform``: quantize -> dequantize around the
+point where XLA inserts the DP all-reduce.  (On real hardware this pairs
+with a shard_map custom reduction; the quantization math and its error
+bound are what we validate here.)
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Tree = Any
+
+BLOCK = 256
+
+
+def quantize_int8(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """x (f32) -> (int8 values, per-block f32 scales)."""
+    flat = x.reshape(-1)
+    pad = (-flat.size) % BLOCK
+    flat = jnp.pad(flat, (0, pad))
+    blocks = flat.reshape(-1, BLOCK)
+    scale = jnp.max(jnp.abs(blocks), axis=1, keepdims=True) / 127.0
+    scale = jnp.maximum(scale, 1e-12)
+    q = jnp.clip(jnp.round(blocks / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array, shape) -> jax.Array:
+    flat = (q.astype(jnp.float32) * scale).reshape(-1)
+    n = 1
+    for d in shape:
+        n *= d
+    return flat[:n].reshape(shape)
+
+
+def compress_roundtrip(x: jax.Array) -> jax.Array:
+    q, s = quantize_int8(x.astype(jnp.float32))
+    return dequantize_int8(q, s, x.shape).astype(x.dtype)
+
+
+def make_grad_compression():
+    """grad_transform for make_train_step: int8 round-trip on every leaf
+    (stands in for the quantized cross-pod all-reduce payload)."""
+    def transform(grads: Tree) -> Tree:
+        return jax.tree.map(compress_roundtrip, grads)
+    return transform

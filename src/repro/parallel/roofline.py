@@ -1,0 +1,153 @@
+"""Roofline terms from a compiled dry-run artifact.
+
+    compute term    = HLO_FLOPs_per_chip / peak_FLOP/s
+    memory term     = HLO_bytes_per_chip / HBM_bw
+    collective term = collective_bytes_per_chip / (links * link_bw)
+
+``compiled.cost_analysis()`` reports the per-device SPMD module, so FLOPs and
+bytes are already per-chip.  Collective bytes are *not* in cost_analysis —
+we parse the post-partitioning HLO text (``compiled.as_text()``) and sum the
+operand sizes of every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute (counting async ``-start`` forms once).
+
+Hardware model: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI
+(we credit 2 links per axis crossing for the ring reductions, conservative).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from dataclasses import dataclass, field
+from typing import Dict, Optional, Tuple
+
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # bytes/s / chip
+ICI_BW = 50e9                # bytes/s / link
+ICI_LINKS = 2                # effective links engaged per collective
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute", "collective-broadcast", "ragged-all-to-all")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(\(?[^=]*?)\s+"
+                     r"([\w\-]+)\(([^)]*)\)")
+
+
+def _shape_bytes(type_str: str) -> int:
+    """Bytes of an HLO type string, incl. tuples '(f32[2,3], u32[1])'."""
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Tuple[int, Dict[str, int]]:
+    """Sum of operand bytes of every collective op (per device), by kind."""
+    sizes: Dict[str, int] = {}
+    per_kind: Dict[str, int] = {}
+    total = 0
+    for line in hlo_text.splitlines():
+        m = _DEF_RE.match(line)
+        if not m:
+            continue
+        name, type_str, opcode, operands = m.groups()
+        sizes[name] = _shape_bytes(type_str)
+        kind = opcode[:-6] if opcode.endswith("-start") else opcode
+        if kind not in _COLLECTIVES or opcode.endswith("-done"):
+            continue
+        nbytes = 0
+        for op in operands.split(","):
+            op = op.strip().lstrip("%")
+            op = op.split(" ")[0]
+            nbytes += sizes.get(op, 0)
+        if nbytes == 0:                       # fall back to output size
+            nbytes = sizes[name]
+        total += nbytes
+        per_kind[kind] = per_kind.get(kind, 0) + nbytes
+    return total, per_kind
+
+
+@dataclass
+class Roofline:
+    flops: float                 # per chip
+    hbm_bytes: float             # per chip
+    coll_bytes: float            # per chip
+    coll_by_kind: Dict[str, int] = field(default_factory=dict)
+
+    @property
+    def compute_s(self) -> float:
+        return self.flops / PEAK_FLOPS
+
+    @property
+    def memory_s(self) -> float:
+        return self.hbm_bytes / HBM_BW
+
+    @property
+    def collective_s(self) -> float:
+        return self.coll_bytes / (ICI_LINKS * ICI_BW)
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def bound_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    def as_dict(self) -> dict:
+        return {
+            "flops_per_chip": self.flops,
+            "hbm_bytes_per_chip": self.hbm_bytes,
+            "collective_bytes_per_chip": self.coll_bytes,
+            "collective_by_kind": dict(self.coll_by_kind),
+            "compute_s": self.compute_s,
+            "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "dominant": self.dominant,
+        }
+
+
+def analyze(compiled) -> Roofline:
+    """Trip-count-aware analysis of the per-device SPMD module (hlo_cost)."""
+    from repro.parallel import hlo_cost
+    cost = hlo_cost.analyze_text(compiled.as_text())
+    return Roofline(flops=cost.flops, hbm_bytes=cost.bytes,
+                    coll_bytes=cost.coll_bytes,
+                    coll_by_kind={k: int(v) for k, v in cost.coll.items()})
+
+
+def analyze_text(text: str) -> Roofline:
+    from repro.parallel import hlo_cost
+    cost = hlo_cost.analyze_text(text)
+    return Roofline(flops=cost.flops, hbm_bytes=cost.bytes,
+                    coll_bytes=cost.coll_bytes,
+                    coll_by_kind={k: int(v) for k, v in cost.coll.items()})
+
+
+def model_flops(cfg, shape) -> float:
+    """6*N*D (dense) / 6*N_active*D (MoE) useful-compute baseline; decode
+    shapes process global_batch tokens per step."""
+    n = cfg.active_param_count()
+    if shape.kind == "train":
+        d = shape.total_tokens
+        return 6.0 * n * d
+    if shape.kind == "prefill":
+        d = shape.total_tokens
+        return 2.0 * n * d
+    return 2.0 * n * shape.global_batch            # decode: 1 tok/request

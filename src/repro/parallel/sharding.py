@@ -1,0 +1,148 @@
+"""Logical-axis sharding.
+
+Model code annotates tensors with *logical* axis names; a rules table maps
+logical names to mesh axes.  Outside a mesh context annotations are no-ops,
+so the same model code runs on 1 CPU device and on a 512-chip mesh.
+
+Training uses FSDP+TP: parameters are sharded over the ("pod","data") axes
+(ZeRO-3) *and* the "model" axis (tensor parallel).  Serving shards batch over
+("pod","data") and heads/experts over "model".
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+AxisName = Union[None, str, Tuple[str, ...]]
+
+# logical axis -> mesh axes, per regime.  'fsdp' means ("pod","data") when a
+# pod axis exists, else ("data",).
+TRAIN_RULES: Dict[str, str] = {
+    # activations
+    "batch": "fsdp",
+    "seq": None,
+    "seq_model": "model",    # context-parallel fallback (heads % tp != 0)
+    "embed": None,
+    "heads": "model",
+    "kv_heads": "model",
+    "q_proj": "model",       # fused head*dim projection dim
+    "kv_proj": "model",
+    "ff": "model",
+    "moe_ff": "model",
+    "vocab": "model",
+    "experts": "fsdp",       # expert dim of MoE weights (EP over fsdp axes)
+    "expert_groups": "fsdp", # dispatched token groups
+    # weights: second weight axis sharded over fsdp for ZeRO-3
+    "embed_fsdp": "fsdp",
+    "layers": None,
+    "conv": None,
+    "state": None,
+    "latent": None,
+}
+
+SERVE_RULES: Dict[str, str] = dict(TRAIN_RULES)
+SERVE_RULES.update({
+    "batch": "fsdp",
+    "embed_fsdp": None,      # weights replicated over data axes when serving
+    "experts": "fsdp",       # EP: experts spread over the data axis (llama4
+                             # 400B does not fit with model-axis-only sharding)
+    "expert_groups": None,
+    "cache_seq": "model",    # KV caches sequence-sharded over the model axis
+})
+
+
+class _Ctx(threading.local):
+    def __init__(self):
+        self.mesh: Optional[Mesh] = None
+        self.rules: Dict[str, str] = {}
+
+
+_CTX = _Ctx()
+
+
+def _mesh_axes(mesh: Mesh, logical: str, rules: Dict[str, str]) -> AxisName:
+    target = rules.get(logical, None)
+    if target is None:
+        return None
+    if target == "fsdp":
+        axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+        return axes or None
+    return target if target in mesh.axis_names else None
+
+
+def spec_for(names: Sequence[Optional[str]],
+             mesh: Optional[Mesh] = None,
+             rules: Optional[Dict[str, str]] = None,
+             dims: Optional[Sequence[int]] = None) -> P:
+    """PartitionSpec for a tensor whose dims have the given logical names.
+
+    If ``dims`` is given, a mesh-axis assignment that does not evenly divide
+    the dim is dropped (e.g. batch=1 on a 16-way data axis -> replicated).
+    """
+    mesh = mesh or _CTX.mesh
+    rules = rules or _CTX.rules
+    if mesh is None:
+        return P(*([None] * len(names)))
+    used = set()
+    out = []
+    for i, n in enumerate(names):
+        ax = _mesh_axes(mesh, n, rules) if n else None
+        if ax is not None:
+            axes = (ax,) if isinstance(ax, str) else tuple(ax)
+            axes = tuple(a for a in axes if a not in used)
+            if dims is not None and axes:
+                size = 1
+                for a in axes:
+                    size *= mesh.shape[a]
+                # drop trailing axes until divisible
+                while axes and dims[i] % size != 0:
+                    size //= mesh.shape[axes[-1]]
+                    axes = axes[:-1]
+            used.update(axes)
+            ax = axes if len(axes) > 1 else (axes[0] if axes else None)
+        out.append(ax)
+    return P(*out)
+
+
+def sharding_for(names: Sequence[Optional[str]],
+                 dims: Optional[Sequence[int]] = None) -> Optional[NamedSharding]:
+    mesh = _CTX.mesh
+    if mesh is None:
+        return None
+    return NamedSharding(mesh, spec_for(names, dims=dims))
+
+
+def constrain(x, *names: Optional[str]):
+    """with_sharding_constraint on logical axis names; no-op outside a mesh."""
+    mesh = _CTX.mesh
+    if mesh is None:
+        return x
+    spec = spec_for(names, dims=x.shape)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: Optional[Mesh], rules: Dict[str, str]):
+    prev = (_CTX.mesh, _CTX.rules)
+    _CTX.mesh, _CTX.rules = mesh, dict(rules)
+    try:
+        if mesh is not None:
+            with mesh:
+                yield
+        else:
+            yield
+    finally:
+        _CTX.mesh, _CTX.rules = prev
+
+
+def current_mesh() -> Optional[Mesh]:
+    return _CTX.mesh
+
+
+def override_rule(logical: str, target: Optional[str]):
+    """Point a logical axis at a different mesh axis (perf hillclimbing knob)."""
+    _CTX.rules[logical] = target

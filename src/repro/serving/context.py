@@ -1,0 +1,228 @@
+"""Execution context emulation (paper §5.2 / I2).
+
+Stateful modules (attention, Mamba, MoE) cannot be profiled from the trace
+alone: decode-phase execution needs KV-cache memory, per-request lengths and
+SSM state.  Dooly reuses the serving engine's own initialization code — these
+builders are the *same* module constructors the engine (serving/engine.py)
+runs in production, parameterized by phase and backend, so the profiled
+computation is exactly the served computation.
+
+``build_context(cfg, kind, ...)`` returns a ModuleContext whose ``fn`` is
+jit-able and whose ``input_spec(toks, reqs, ctx)`` produces the inputs for
+any sweep point (ShapeDtypeStructs for the analytical oracle; call
+``materialize`` for wall-clock measurement).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn_mod
+from repro.models import mamba as mamba_mod
+from repro.models import mla as mla_mod
+from repro.models import moe as moe_mod
+from repro.models.layers import abstract_params, init_params
+
+Tree = Any
+
+
+@dataclass
+class ModuleContext:
+    kind: str
+    phase: str                       # 'prefill' | 'decode'
+    backend: str
+    fn: Callable                     # fn(params, *inputs)
+    params: Tree                     # module weights (abstract)
+    input_spec: Callable             # (toks, reqs, ctx) -> tuple of SDS
+    static_attrs: Dict[str, Any]     # signature component 3
+
+    def abstract_inputs(self, toks: int, reqs: int, ctx: int):
+        return self.input_spec(toks, reqs, ctx)
+
+    def materialize(self, tree: Tree, key: Optional[jax.Array] = None):
+        key = key if key is not None else jax.random.key(0)
+
+        def gen(sds):
+            dt = jnp.dtype(sds.dtype)
+            if dt.kind in "iu":
+                return jnp.zeros(sds.shape, dt)
+            return (jax.random.normal(key, sds.shape, jnp.float32) * 0.02
+                    ).astype(dt)
+        return jax.tree.map(gen, tree)
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, jnp.dtype(dtype))
+
+
+def build_context(cfg: ModelConfig, kind: str, *, phase: str = "prefill",
+                  backend: str = "xla", window: int = 0) -> ModuleContext:
+    d = cfg.d_model
+    dt = cfg.dtype
+    # NOTE: only *latency-relevant* attributes enter the signature digest —
+    # rope_theta, init scales etc. change values, not cost, and would block
+    # the cross-model dedup the paper demonstrates (GQA 32/8/128 shared
+    # between Llama-3's layers and Command-R7B's non-SWA layers).
+    attrs = {"kind": kind, "window": window, "d_model": d}
+
+    if kind == "self_attn" and cfg.attn_type == "mla":
+        kind = "mla_attn"
+
+    if kind == "self_attn":
+        attrs.update({"n_heads": cfg.n_heads, "n_kv_heads": cfg.n_kv_heads,
+                      "head_dim": cfg.resolved_head_dim, "causal": True})
+        spec = attn_mod.attn_spec(cfg)
+        params = abstract_params(spec, dt)
+        if phase == "prefill":
+            # engine-faithful chunked prefill: the chunk's queries attend the
+            # WHOLE cache (ctx slots) — cost O(toks * ctx).  ctx==0 profiles
+            # the plain full-sequence prefill (cache sized to the chunk).
+            hd = cfg.resolved_head_dim
+
+            def fn(p, x, k_cache, v_cache, lengths):
+                from repro.kernels import ref as kref
+                b, c, _ = x.shape
+                positions = lengths[:, None] + jnp.arange(c)[None, :]
+                q = attn_mod.linear(p["q"], x, "q_proj").reshape(
+                    b, c, cfg.n_heads, hd)
+                k, v = attn_mod.compute_kv(p, x, cfg, positions)
+                if cfg.rope_theta > 0:
+                    q = attn_mod.apply_rope(q, positions, cfg.rope_theta)
+                from repro.models.transformer import _write_chunk
+                k_cache = _write_chunk(k_cache, k, lengths)
+                v_cache = _write_chunk(v_cache, v, lengths)
+                y = kref.chunk_cache_attention_impl(backend)(
+                    q, k_cache, v_cache, lengths, window=window)
+                y = y.reshape(b, c, cfg.n_heads * hd)
+                return attn_mod.linear(p["o"], y, "o_proj")
+
+            def inputs(toks, reqs, ctx):
+                smax = max(ctx, toks)
+                return (_sds((reqs, toks, d), dt),
+                        _sds((reqs, smax, cfg.n_kv_heads, hd), dt),
+                        _sds((reqs, smax, cfg.n_kv_heads, hd), dt),
+                        _sds((reqs,), jnp.int32))
+        else:
+            slots = min(window, 1 << 20) if window > 0 else None
+
+            def fn(p, x, k_cache, v_cache, lengths):
+                cache = {"k": k_cache, "v": v_cache}
+                out, _ = attn_mod.decode_attention(
+                    p, x, cache, cfg, lengths=lengths, window=window,
+                    impl=backend)
+                return out
+
+            def inputs(toks, reqs, ctx):
+                s = min(window, ctx) if window > 0 else ctx
+                hd = cfg.resolved_head_dim
+                return (_sds((reqs, 1, d), dt),
+                        _sds((reqs, s, cfg.n_kv_heads, hd), dt),
+                        _sds((reqs, s, cfg.n_kv_heads, hd), dt),
+                        _sds((reqs,), jnp.int32))
+        return ModuleContext(kind, phase, backend, fn, params, inputs, attrs)
+
+    if kind == "cross_attn":
+        attrs.update({"n_heads": cfg.n_heads, "n_kv_heads": cfg.n_kv_heads,
+                      "head_dim": cfg.resolved_head_dim, "causal": False})
+        spec = attn_mod.attn_spec(cfg)
+        params = abstract_params(spec, dt)
+        hd = cfg.resolved_head_dim
+
+        def fn(p, x, enc_k, enc_v):
+            return attn_mod.attention(p, x, cfg, positions=None,
+                                      impl=backend, kv_override=(enc_k, enc_v))
+
+        def inputs(toks, reqs, ctx):
+            q_len = toks if phase == "prefill" else 1
+            return (_sds((reqs, q_len, d), dt),
+                    _sds((reqs, ctx, cfg.n_kv_heads, hd), dt),
+                    _sds((reqs, ctx, cfg.n_kv_heads, hd), dt))
+        return ModuleContext(kind, phase, backend, fn, params, inputs, attrs)
+
+    if kind == "mla_attn":
+        m = cfg.mla
+        attrs.update({"n_heads": cfg.n_heads,
+                      "q_lora_rank": m.q_lora_rank,
+                      "kv_lora_rank": m.kv_lora_rank,
+                      "qk_nope": m.qk_nope_head_dim,
+                      "qk_rope": m.qk_rope_head_dim,
+                      "v_head": m.v_head_dim})
+        spec = mla_mod.mla_spec(cfg)
+        params = abstract_params(spec, dt)
+        if phase == "prefill":
+            def fn(p, x, positions):
+                return mla_mod.mla_attention(p, x, cfg, positions=positions,
+                                             impl=backend)
+
+            def inputs(toks, reqs, ctx):
+                return (_sds((reqs, toks, d), dt),
+                        _sds((reqs, toks), jnp.int32))
+        else:
+            def fn(p, x, c, k_rope, lengths):
+                out, _ = mla_mod.mla_decode(p, x, {"c": c, "k_rope": k_rope},
+                                            cfg, lengths=lengths)
+                return out
+
+            def inputs(toks, reqs, ctx):
+                return (_sds((reqs, 1, d), dt),
+                        _sds((reqs, ctx, m.kv_lora_rank), dt),
+                        _sds((reqs, ctx, m.qk_rope_head_dim), dt),
+                        _sds((reqs,), jnp.int32))
+        return ModuleContext(kind, phase, backend, fn, params, inputs, attrs)
+
+    if kind == "mamba":
+        attrs.update({"d_inner": cfg.ssm_d_inner, "state": cfg.ssm_state,
+                      "conv": cfg.ssm_conv,
+                      "dt_rank": cfg.resolved_dt_rank})
+        spec = mamba_mod.mamba_spec(cfg)
+        params = abstract_params(spec, dt)
+        if phase == "prefill":
+            def fn(p, x):
+                return mamba_mod.mamba_mixer(p, x, cfg)
+
+            def inputs(toks, reqs, ctx):
+                return (_sds((reqs, toks, d), dt),)
+        else:
+            def fn(p, x, conv, h):
+                out, _ = mamba_mod.mamba_step(p, x, {"conv": conv, "h": h},
+                                              cfg)
+                return out
+
+            def inputs(toks, reqs, ctx):
+                return (_sds((reqs, 1, d), dt),
+                        _sds((reqs, cfg.ssm_conv - 1, cfg.ssm_d_inner), dt),
+                        _sds((reqs, cfg.ssm_d_inner, cfg.ssm_state),
+                             jnp.float32))
+        return ModuleContext(kind, phase, backend, fn, params, inputs, attrs)
+
+    if kind == "moe":
+        attrs.update({"n_experts": cfg.n_experts, "top_k": cfg.top_k,
+                      "moe_d_ff": cfg.moe_d_ff,
+                      "n_shared": cfg.n_shared_experts})
+        spec = moe_mod.moe_spec(cfg)
+        params = abstract_params(spec, dt)
+
+        def fn(p, x):
+            out, _ = moe_mod.moe_ffn(p, x, cfg)
+            return out
+
+        def inputs(toks, reqs, ctx):
+            t = toks if phase == "prefill" else 1
+            return (_sds((reqs, t, d), dt),)
+        return ModuleContext(kind, phase, backend, fn, params, inputs, attrs)
+
+    raise KeyError(f"no execution-context builder for module kind {kind!r}")
+
+
+def phases_for(kind: str, cfg: ModelConfig) -> Tuple[str, ...]:
+    """Which phases a stateful module must be profiled in (App. D)."""
+    if kind == "moe":
+        return ("prefill",)          # decode == prefill with toks=1
+    if kind == "mamba":
+        return ("prefill", "decode")
+    return ("prefill", "decode")

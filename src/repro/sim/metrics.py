@@ -1,0 +1,52 @@
+"""Serving metrics: TTFT / TPOT / throughput + MAPE comparisons."""
+from __future__ import annotations
+
+from typing import Dict, List, Sequence
+
+import numpy as np
+
+from repro.serving.scheduler import Request
+
+
+def request_metrics(requests: Sequence[Request]) -> Dict[str, np.ndarray]:
+    done = [r for r in requests if r.done]
+    ttft = np.array([r.first_token_t - r.arrival for r in done])
+    tpot = np.array([
+        (r.finish_t - r.first_token_t) / max(r.generated - 1, 1)
+        for r in done])
+    return {"ttft": ttft, "tpot": tpot,
+            "finish": np.array([r.finish_t for r in done]),
+            "n_done": np.array([len(done)])}
+
+
+def percentiles(x: np.ndarray, ps=(50, 90, 99)) -> Dict[str, float]:
+    return {f"p{p}": float(np.percentile(x, p)) for p in ps} if len(x) \
+        else {f"p{p}": 0.0 for p in ps}
+
+
+def mape(pred: np.ndarray, ref: np.ndarray) -> float:
+    ref = np.asarray(ref, float)
+    pred = np.asarray(pred, float)
+    m = ref > 1e-12
+    if not m.any():
+        return 0.0
+    return float(np.mean(np.abs(pred[m] - ref[m]) / ref[m]) * 100.0)
+
+
+def percentile_mape(pred: np.ndarray, ref: np.ndarray,
+                    ps=(50, 90, 99)) -> Dict[str, float]:
+    return {f"p{p}": mape(np.array([np.percentile(pred, p)]),
+                          np.array([np.percentile(ref, p)]))
+            for p in ps} if len(pred) and len(ref) else {}
+
+
+def compare(sim: Dict[str, np.ndarray], real: Dict[str, np.ndarray]
+            ) -> Dict[str, float]:
+    out = {}
+    for key in ("ttft", "tpot"):
+        out[f"{key}_mape"] = mape(sim[key], real[key])
+        for p, v in percentile_mape(sim[key], real[key]).items():
+            out[f"{key}_{p}_mape"] = v
+    out["makespan_mape"] = mape(sim["finish"][-1:], real["finish"][-1:]) \
+        if len(sim["finish"]) and len(real["finish"]) else 0.0
+    return out

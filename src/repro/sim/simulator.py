@@ -1,0 +1,165 @@
+"""DoolySim (paper §7.1): end-to-end serving simulation.
+
+Drives the *same* Scheduler class the real engine runs (bit-identical batch
+composition), advances virtual time by predicted iteration latency, and
+predicts each iteration by walking the model's call graph — per-signature
+regression models over the latency database, counts from the
+model_operations table (the collapsed canonical modules x multiplicity).
+
+Mirrors the engine's execution structure: each prefill chunk is one model
+call at (toks=c, reqs=1, ctx=start); the decode batch is one call at
+(reqs=max_num_seqs, ctx=max_seq) — static TPU-style shapes.  ``lm_head``
+ops run on the chunk's last position only, matching Model.prefill_chunk.
+"""
+from __future__ import annotations
+
+import json
+from dataclasses import dataclass
+from typing import Any, Dict, List, Optional
+
+from repro.configs.base import ModelConfig
+from repro.core.database import LatencyDB
+from repro.core.latency_model import LatencyModel
+from repro.serving.scheduler import (IterationPlan, Request, Scheduler,
+                                     SchedulerConfig)
+
+_STATEFUL = ("self_attn", "cross_attn", "mla_attn", "mamba", "moe")
+
+
+@dataclass
+class _OpRow:
+    sig: str
+    module: str
+    count: int
+    kind: str            # op_name from signatures table
+    stateful: bool
+
+
+class DoolySim:
+    def __init__(self, cfg: ModelConfig, db: LatencyDB, *, hardware: str,
+                 backend: str, sched_config: SchedulerConfig, max_seq: int,
+                 overhead_s: float = 0.0, chunk_overhead_s: float = 0.0,
+                 tp: int = 1):
+        self.cfg = cfg
+        self.db = db
+        self.chunk_overhead_s = chunk_overhead_s
+        self.decode_scale = 1.0
+        self.lm = LatencyModel(db, hardware)
+        self.sched_config = sched_config
+        self.max_seq = max_seq
+        self.overhead_s = overhead_s
+        cid = db.config_id(cfg.name, backend, hardware, tp)
+        self.rows: List[_OpRow] = []
+        for sig, module, count in db.model_operations(cid):
+            meta = db.signature(sig)
+            kind = meta[0] if meta else "?"
+            self.rows.append(_OpRow(sig, module, count, kind,
+                                    kind in _STATEFUL))
+
+    # ------------------------------------------------------------------
+
+    def predict_call(self, *, phase: str, toks: int, reqs: int,
+                     ctx: int) -> float:
+        """One model call: sum per-signature predictions over the call
+        graph."""
+        total = 0.0
+        for row in self.rows:
+            t, r = toks, reqs
+            if "lm_head" in row.module and phase == "prefill":
+                t = 1
+            if row.stateful:
+                if row.kind == "moe":
+                    total += row.count * self.lm.predict(
+                        row.sig, "prefill", toks=t, reqs=r, ctx=0)
+                else:
+                    total += row.count * self.lm.predict(
+                        row.sig, phase, toks=t, reqs=r, ctx=ctx)
+            else:
+                total += row.count * self.lm.predict(
+                    row.sig, "prefill", toks=t, reqs=r, ctx=0)
+        return total
+
+    def predict_iteration(self, plan: IterationPlan) -> float:
+        from repro.serving.engine import bucket_chunk
+        total = self.overhead_s + self.chunk_overhead_s * len(plan.prefills)
+        for chunk in plan.prefills:
+            c = chunk.length if self.cfg.ssm_state > 0 else bucket_chunk(
+                chunk.length, self.sched_config.chunk_size)
+            # the engine's chunk attention scans the whole smax-slot cache
+            total += self.predict_call(phase="prefill", toks=c,
+                                       reqs=1, ctx=self.max_seq)
+        if plan.decodes:
+            total += self.decode_scale * self.predict_call(
+                phase="decode", toks=1,
+                reqs=self.sched_config.max_num_seqs, ctx=self.max_seq)
+        return total
+
+    def predict_record(self, rec) -> float:
+        """Model-time prediction for an engine IterationRecord (no
+        overhead terms) — used for calibration."""
+        from repro.serving.engine import bucket_chunk
+        total = 0.0
+        for length, start in rec.chunks:
+            c = length if self.cfg.ssm_state > 0 else bucket_chunk(
+                length, self.sched_config.chunk_size)
+            total += self.predict_call(phase="prefill", toks=c, reqs=1,
+                                       ctx=self.max_seq)
+        if rec.n_decodes:
+            total += self.decode_scale * self.predict_call(
+                phase="decode", toks=1,
+                reqs=self.sched_config.max_num_seqs, ctx=self.max_seq)
+        return total
+
+    def calibrate(self, records) -> Dict[str, float]:
+        """Fit the engine's CPU overhead model (a + b * n_chunks) from a
+        calibration run — the Vidur-style CPU-overhead profiling step.
+        Median residuals per iteration composition (robust to queue noise,
+        avoids chunk/decode colinearity)."""
+        import numpy as np
+        # decode program: stable multiplicative correction (op-sum vs the
+        # fused compiled program), then additive residual
+        dec_pred = [self.predict_record(r) for r in records
+                    if r.n_chunks == 0]
+        dec_meas = [r.model_s for r in records if r.n_chunks == 0]
+        if dec_pred and np.median(dec_pred) > 0:
+            self.decode_scale = float(np.median(
+                np.array(dec_meas) / np.array(dec_pred)))
+        # predict_record now applies decode_scale itself
+        dec_only = [m - self.predict_record(r)
+                    for m, r in zip(dec_meas,
+                                    [r for r in records if r.n_chunks == 0])]
+        a = float(np.median(dec_only)) if dec_only else 0.0
+        a = max(a, 0.0)
+        with_chunks = [(r.model_s - self.predict_record(r) - a) / r.n_chunks
+                       for r in records if r.n_chunks > 0]
+        b = float(np.median(with_chunks)) if with_chunks else 0.0
+        self.overhead_s = a
+        self.chunk_overhead_s = max(b, 0.0)
+        return {"overhead_s": self.overhead_s,
+                "chunk_overhead_s": self.chunk_overhead_s,
+                "decode_scale": self.decode_scale}
+
+    # ------------------------------------------------------------------
+
+    def run(self, requests: List[Request]) -> Dict[str, Any]:
+        sched = Scheduler(self.sched_config)
+        pending = sorted(requests, key=lambda r: r.arrival)
+        i = 0
+        clock = 0.0
+        iterations = []
+        while i < len(pending) or sched.has_work():
+            while i < len(pending) and pending[i].arrival <= clock:
+                sched.add_request(pending[i])
+                i += 1
+            plan = sched.schedule()
+            if plan.empty:
+                if i < len(pending):
+                    clock = pending[i].arrival
+                    continue
+                break
+            dt = self.predict_iteration(plan)
+            clock += dt
+            sched.complete_iteration(plan, clock)
+            iterations.append((clock, plan.n_tokens, dt))
+        return {"requests": requests, "iterations": iterations,
+                "makespan": clock}

@@ -1,0 +1,114 @@
+"""Fault-tolerant checkpointing: step-tagged manifests, atomic rename,
+async save thread, and *elastic restore* (re-shard a checkpoint onto a
+different mesh — shardings are logical, so restore just re-places leaves).
+
+Layout:
+    <dir>/step_000123.tmp/...   (written)
+    <dir>/step_000123/          (atomic rename on completion)
+    <dir>/MANIFEST.json         (latest committed step; written last)
+
+A crashed save leaves only a .tmp directory, which restore ignores —
+restart always resumes from the last *committed* step (checkpoint/restart
+fault tolerance).
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import time
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Tree = Any
+
+
+def _flatten(tree: Tree) -> Tuple[List[np.ndarray], Any]:
+    leaves, treedef = jax.tree.flatten(tree)
+    return [np.asarray(x) for x in leaves], treedef
+
+
+def save(directory: str, step: int, state: Tree) -> str:
+    os.makedirs(directory, exist_ok=True)
+    name = f"step_{step:08d}"
+    tmp = os.path.join(directory, name + ".tmp")
+    final = os.path.join(directory, name)
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+    leaves, treedef = _flatten(state)
+    np.savez(os.path.join(tmp, "leaves.npz"),
+             **{f"l{i}": x for i, x in enumerate(leaves)})
+    with open(os.path.join(tmp, "treedef.json"), "w") as f:
+        json.dump({"n_leaves": len(leaves), "step": step}, f)
+    os.replace(tmp, final)                       # atomic commit
+    manifest = os.path.join(directory, "MANIFEST.json")
+    tmp_m = manifest + ".tmp"
+    with open(tmp_m, "w") as f:
+        json.dump({"latest_step": step, "path": name,
+                   "time": time.time()}, f)
+    os.replace(tmp_m, manifest)
+    return final
+
+
+class AsyncCheckpointer:
+    """Host-offload save thread: training continues while the previous
+    state (already device_get'd) serializes."""
+
+    def __init__(self, directory: str):
+        self.directory = directory
+        self._thread: Optional[threading.Thread] = None
+
+    def save(self, step: int, state: Tree):
+        host_state = jax.tree.map(np.asarray, jax.device_get(state))
+        self.wait()
+        self._thread = threading.Thread(
+            target=save, args=(self.directory, step, host_state),
+            daemon=True)
+        self._thread.start()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+
+def latest_step(directory: str) -> Optional[int]:
+    manifest = os.path.join(directory, "MANIFEST.json")
+    if not os.path.exists(manifest):
+        return None
+    with open(manifest) as f:
+        return json.load(f)["latest_step"]
+
+
+def restore(directory: str, like: Tree, step: Optional[int] = None,
+            shardings: Optional[Tree] = None) -> Tuple[Tree, int]:
+    """Restore into the structure of ``like``.  ``shardings`` (optional
+    NamedSharding tree) re-places leaves on the *current* mesh — elastic
+    restart onto a larger/smaller mesh works because shardings are logical.
+    """
+    step = step if step is not None else latest_step(directory)
+    if step is None:
+        raise FileNotFoundError(f"no committed checkpoint in {directory}")
+    path = os.path.join(directory, f"step_{step:08d}")
+    data = np.load(os.path.join(path, "leaves.npz"))
+    leaves_like, treedef = jax.tree.flatten(like)
+    leaves = []
+    for i, ref in enumerate(leaves_like):
+        x = data[f"l{i}"]
+        if tuple(x.shape) != tuple(ref.shape):
+            raise ValueError(f"leaf {i}: checkpoint shape {x.shape} != "
+                             f"expected {ref.shape}")
+        leaves.append(x.astype(ref.dtype))
+    state = jax.tree.unflatten(treedef, leaves)
+    if shardings is not None:
+        state = jax.tree.map(
+            lambda x, s: jax.device_put(x, s) if s is not None else
+            jnp.asarray(x), state, shardings)
+    else:
+        state = jax.tree.map(jnp.asarray, state)
+    return state, step

@@ -1,0 +1,9 @@
+import os
+
+# smoke tests and benches see the REAL device count (1 CPU); only
+# launch/dryrun.py forces 512 placeholder devices.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax  # noqa: E402
+
+jax.config.update("jax_enable_x64", False)

@@ -1,0 +1,140 @@
+"""Per-kernel allclose sweeps: Pallas (interpret mode) + flash_xla vs the
+pure-jnp oracles in kernels/ref.py, across shapes and dtypes."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+from repro.kernels.flash_xla import flash_attention_xla
+from repro.kernels.mamba_scan import mamba_scan
+
+KEY = jax.random.key(0)
+
+
+def _qkv(b, sq, sk, h, kv, d, dtype=jnp.float32):
+    ks = jax.random.split(KEY, 3)
+    return (jax.random.normal(ks[0], (b, sq, h, d), dtype),
+            jax.random.normal(ks[1], (b, sk, kv, d), dtype),
+            jax.random.normal(ks[2], (b, sk, kv, d), dtype))
+
+
+FLASH_CASES = [
+    (2, 128, 128, 4, 2, 64, True, 0),
+    (1, 256, 256, 8, 8, 32, True, 0),
+    (2, 128, 128, 4, 1, 64, True, 48),
+    (1, 100, 100, 2, 2, 64, False, 0),
+    (1, 64, 192, 4, 2, 32, True, 0),
+]
+
+
+@pytest.mark.parametrize("b,sq,sk,h,kv,d,causal,win", FLASH_CASES)
+def test_pallas_flash_forward(b, sq, sk, h, kv, d, causal, win):
+    q, k, v = _qkv(b, sq, sk, h, kv, d)
+    out = ops.flash_attention(q, k, v, causal, win)
+    exp = ref.attention(q, k, v, causal=causal, window=win)
+    np.testing.assert_allclose(out, exp, atol=2e-5, rtol=2e-5)
+
+
+@pytest.mark.parametrize("b,sq,sk,h,kv,d,causal,win", FLASH_CASES[:3])
+def test_pallas_flash_backward(b, sq, sk, h, kv, d, causal, win):
+    q, k, v = _qkv(b, sq, sk, h, kv, d)
+
+    def f(fn):
+        return lambda q, k, v: (fn(q, k, v) * (q.sum() + 1.0)).sum()
+    g1 = jax.grad(f(lambda q, k, v: ops.flash_attention(q, k, v, causal, win)),
+                  argnums=(0, 1, 2))(q, k, v)
+    g2 = jax.grad(f(lambda q, k, v: ref.attention(q, k, v, causal=causal,
+                                                  window=win)),
+                  argnums=(0, 1, 2))(q, k, v)
+    for a, b_ in zip(g1, g2):
+        scale = float(np.abs(b_).max()) + 1e-6
+        np.testing.assert_allclose(a / scale, b_ / scale, atol=2e-6)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_pallas_flash_dtypes(dtype):
+    q, k, v = _qkv(1, 128, 128, 4, 2, 64, dtype)
+    out = ops.flash_attention(q, k, v, True, 0)
+    exp = ref.attention(q, k, v, causal=True)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(out.astype(jnp.float32),
+                               exp.astype(jnp.float32), atol=tol, rtol=tol)
+
+
+@pytest.mark.parametrize("b,sq,sk,h,kv,d,causal,win", FLASH_CASES)
+def test_flash_xla_forward(b, sq, sk, h, kv, d, causal, win):
+    q, k, v = _qkv(b, sq, sk, h, kv, d)
+    out = flash_attention_xla(q, k, v, causal, win, 0, 64)
+    exp = ref.attention(q, k, v, causal=causal, window=win)
+    np.testing.assert_allclose(out, exp, atol=2e-5, rtol=2e-5)
+
+
+@pytest.mark.parametrize("b,sq,sk,h,kv,d,causal,win", FLASH_CASES[:3])
+def test_flash_xla_backward(b, sq, sk, h, kv, d, causal, win):
+    q, k, v = _qkv(b, sq, sk, h, kv, d)
+
+    def f(fn):
+        return lambda q, k, v: (fn(q, k, v) * (q.sum() + 1.0)).sum()
+    g1 = jax.grad(f(lambda q, k, v: flash_attention_xla(q, k, v, causal,
+                                                        win, 0, 64)),
+                  argnums=(0, 1, 2))(q, k, v)
+    g2 = jax.grad(f(lambda q, k, v: ref.attention(q, k, v, causal=causal,
+                                                  window=win)),
+                  argnums=(0, 1, 2))(q, k, v)
+    for a, b_ in zip(g1, g2):
+        scale = float(np.abs(b_).max()) + 1e-6
+        np.testing.assert_allclose(a / scale, b_ / scale, atol=2e-6)
+
+
+DECODE_CASES = [
+    (2, 4, 2, 256, 64, 0),
+    (3, 8, 1, 512, 64, 0),
+    (2, 4, 4, 256, 64, 64),
+    (1, 8, 2, 128, 32, 0),
+]
+
+
+@pytest.mark.parametrize("b,h,kv,smax,d,win", DECODE_CASES)
+def test_pallas_decode(b, h, kv, smax, d, win):
+    ks = jax.random.split(KEY, 4)
+    q = jax.random.normal(ks[0], (b, 1, h, d))
+    kc = jax.random.normal(ks[1], (b, smax, kv, d))
+    vc = jax.random.normal(ks[2], (b, smax, kv, d))
+    lengths = jax.random.randint(ks[3], (b,), 1, smax)
+    out = ops.decode_attention(q, kc, vc, lengths, window=win)
+    exp = ref.decode_attention(q, kc, vc, lengths, window=win)
+    np.testing.assert_allclose(out, exp, atol=2e-5, rtol=2e-5)
+
+
+@pytest.mark.parametrize("b,s,di,n,chunk,bd", [
+    (2, 64, 32, 8, 48, 16), (1, 300, 64, 16, 128, 64), (2, 50, 16, 4, 16, 16)])
+def test_pallas_mamba_scan(b, s, di, n, chunk, bd):
+    ks = jax.random.split(KEY, 6)
+    x = jax.random.normal(ks[0], (b, s, di))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, di)))
+    A = -jnp.exp(jax.random.normal(ks[2], (di, n)) * 0.3)
+    B = jax.random.normal(ks[3], (b, s, n))
+    C = jax.random.normal(ks[4], (b, s, n))
+    D = jax.random.normal(ks[5], (di,))
+    h0 = jax.random.normal(ks[0], (b, di, n))
+    y1, h1 = mamba_scan(x, dt, A, B, C, D, h0, chunk=chunk, block_d=bd,
+                        interpret=True)
+    y2, h2 = ref.selective_scan(x, dt, A, B, C, D, h0)
+    np.testing.assert_allclose(y1, y2, atol=5e-5, rtol=5e-5)
+    np.testing.assert_allclose(h1, h2, atol=5e-5, rtol=5e-5)
+
+
+def test_chunk_cache_attention_matches_plain():
+    b, c, h, kv, d, smax = 2, 16, 4, 2, 32, 64
+    ks = jax.random.split(KEY, 3)
+    start = 24
+    q = jax.random.normal(ks[0], (b, c, h, d))
+    k_all = jax.random.normal(ks[1], (b, start + c, kv, d))
+    v_all = jax.random.normal(ks[2], (b, start + c, kv, d))
+    kc = jnp.zeros((b, smax, kv, d)).at[:, :start + c].set(k_all)
+    vc = jnp.zeros((b, smax, kv, d)).at[:, :start + c].set(v_all)
+    lengths = jnp.full((b,), start, jnp.int32)
+    out = ref.chunk_cache_attention(q, kc, vc, lengths)
+    exp = ref.attention(q, k_all, v_all, causal=True, q_offset=start)
+    np.testing.assert_allclose(out, exp, atol=2e-5, rtol=2e-5)

@@ -1,0 +1,111 @@
+"""Per-architecture smoke tests: reduced config, one forward/train step on
+CPU, output shapes + no NaNs; prefill+decode consistency with the full
+forward; chunked prefill consistency."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.models.moe as moe_mod
+from repro.configs import ASSIGNED_ARCHS, SHAPES, get_smoke_config
+from repro.models import build_model
+from repro.train.trainer import init_train_state, make_train_step
+
+
+def _batch(cfg, b, s, key):
+    batch = {"tokens": jax.random.randint(key, (b, s), 0, cfg.vocab_size),
+             "labels": jax.random.randint(key, (b, s), 0, cfg.vocab_size)}
+    if cfg.is_encdec:
+        batch["frames"] = jax.random.normal(key, (b, 16, cfg.d_model),
+                                            jnp.float32)
+    elif cfg.frontend != "none":
+        batch["frames"] = jax.random.normal(
+            key, (b, cfg.n_frontend_tokens, cfg.d_model), jnp.float32)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+def test_smoke_forward_and_train_step(arch):
+    cfg = get_smoke_config(arch)
+    model = build_model(cfg)
+    b, s = 2, 32
+    batch = _batch(cfg, b, s, jax.random.key(1))
+    params = model.init(jax.random.key(0))
+    logits, aux = model.forward(params, batch)
+    assert logits.shape == (b, s, cfg.vocab_size)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+    state = init_train_state(model, jax.random.key(0))
+    step = make_train_step(model, microbatches=2)
+    state2, metrics = jax.jit(step)(state, batch)
+    assert int(state2["step"]) == 1
+    assert np.isfinite(float(metrics["loss"]))
+    assert np.isfinite(float(metrics["grad_norm"]))
+
+
+@pytest.mark.parametrize("arch", ["yi-9b", "olmoe-1b-7b", "hymba-1.5b",
+                                  "falcon-mamba-7b", "minicpm3-4b",
+                                  "granite-20b", "command-r7b"])
+def test_prefill_decode_matches_forward(arch, monkeypatch):
+    monkeypatch.setattr(moe_mod, "CAPACITY_FACTOR", 8.0)   # drop-free
+    cfg = get_smoke_config(arch)
+    model = build_model(cfg)
+    b, s = 2, 24
+    batch = _batch(cfg, b, s, jax.random.key(1))
+    params = model.init(jax.random.key(0))
+    logits_full, _ = model.forward(params, batch)
+    s0 = s - 4
+    pre = dict(batch)
+    pre["tokens"] = batch["tokens"][:, :s0]
+    lg, cache = model.prefill(params, pre, max_seq=s + 8)
+    np.testing.assert_allclose(lg, logits_full[:, s0 - 1], atol=1e-4,
+                               rtol=1e-4)
+    lengths = jnp.full((b,), s0, jnp.int32)
+    for t in range(s0, s):
+        lg, cache = model.decode_step(params, cache, batch["tokens"][:, t],
+                                      lengths)
+        np.testing.assert_allclose(lg, logits_full[:, t], atol=1e-4,
+                                   rtol=1e-4)
+        lengths = lengths + 1
+
+
+@pytest.mark.parametrize("arch", ["yi-9b", "hymba-1.5b", "falcon-mamba-7b",
+                                  "minicpm3-4b"])
+def test_chunked_prefill_matches_forward(arch, monkeypatch):
+    monkeypatch.setattr(moe_mod, "CAPACITY_FACTOR", 8.0)
+    cfg = get_smoke_config(arch)
+    model = build_model(cfg)
+    b, s = 2, 24
+    batch = _batch(cfg, b, s, jax.random.key(1))
+    params = model.init(jax.random.key(0))
+    logits_full, _ = model.forward(params, batch)
+    cache = model.zero_cache(b, 40, use_ring=False)
+    lengths = jnp.zeros((b,), jnp.int32)
+    for c0 in range(0, s, 8):
+        lg, cache = model.prefill_chunk(params, cache,
+                                        batch["tokens"][:, c0:c0 + 8],
+                                        lengths)
+        lengths = lengths + 8
+        np.testing.assert_allclose(lg, logits_full[:, c0 + 7], atol=1e-4,
+                                   rtol=1e-4)
+
+
+def test_long500k_applicability():
+    """Sub-quadratic archs run long_500k; full-attention archs are skipped
+    (DESIGN.md §Shape applicability)."""
+    from repro.configs import get_config
+    eligible = {a for a in ASSIGNED_ARCHS if get_config(a).subquadratic}
+    assert eligible == {"hymba-1.5b", "falcon-mamba-7b"}
+
+
+def test_param_counts_plausible():
+    from repro.configs import get_config
+    expect = {"yi-9b": (8e9, 10e9), "starcoder2-15b": (14e9, 17e9),
+              "granite-20b": (18e9, 22e9), "falcon-mamba-7b": (6e9, 8.5e9),
+              "llama4-maverick-400b-a17b": (3.5e11, 4.6e11),
+              "internvl2-26b": (18e9, 28e9)}
+    for arch, (lo, hi) in expect.items():
+        n = get_config(arch).param_count()
+        assert lo <= n <= hi, (arch, n)
+    a17 = get_config("llama4-maverick-400b-a17b").active_param_count()
+    assert 1.2e10 <= a17 <= 2.2e10, a17

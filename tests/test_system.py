@@ -1,0 +1,44 @@
+"""End-to-end Dooly pipeline integration: trace -> opset -> signatures ->
+profile -> latency DB -> DoolySim, on two architecture families."""
+import jax
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro.core.database import LatencyDB
+from repro.core.profiler import QUICK_SWEEP, DoolyProf
+from repro.serving.scheduler import SchedulerConfig
+from repro.sim.simulator import DoolySim
+from repro.sim.workload import synthetic
+
+
+def test_full_pipeline_two_archs():
+    db = LatencyDB()
+    prof = DoolyProf(db, oracle="cpu_wallclock", hardware="cpu",
+                     sweep=QUICK_SWEEP)
+    r1 = prof.profile_model(get_smoke_config("yi-9b"), backend="xla")
+    r2 = prof.profile_model(get_smoke_config("granite-20b"), backend="xla")
+    # structurally similar dense models share operator signatures
+    assert r2.n_reused > 0
+    stats = db.stats()
+    assert stats["signatures"] > 5
+    assert stats["measurements"] > 10
+
+    sched = SchedulerConfig(max_num_seqs=2, max_batch_tokens=64,
+                            chunk_size=32)
+    sim = DoolySim(get_smoke_config("yi-9b"), db, hardware="cpu",
+                   backend="xla", sched_config=sched, max_seq=128)
+    res = sim.run(synthetic(5, rate=5.0, prompt_len=30, out_len=8,
+                            vocab=get_smoke_config("yi-9b").vocab_size))
+    assert all(r.done for r in res["requests"])
+    assert res["makespan"] > 0
+
+
+def test_analytical_oracle_pipeline():
+    """tpu_analytical oracle: full-size signatures, zero allocation."""
+    db = LatencyDB()
+    prof = DoolyProf(db, oracle="tpu_analytical", hardware="tpu-v5e",
+                     sweep=QUICK_SWEEP)
+    rep = prof.profile_model(get_smoke_config("hymba-1.5b"), backend="xla")
+    assert rep.n_new > 0
+    rows = db.measurements(rep.entries[0].sig, "tpu-v5e")
+    assert rows and all(lat > 0 for *_, lat in rows)
