@@ -27,7 +27,11 @@ SMOKE_SWEEP = SweepConfig(toks=(32, 128), reqs=(1, 2), ctx=(128,),
 
 def run(full: bool = False, db_path: str = ":memory:",
         archs=None, backends=BACKENDS) -> Dict:
-    db = LatencyDB(db_path)
+    with LatencyDB(db_path) as db:
+        return _run(db, full, archs, backends)
+
+
+def _run(db: LatencyDB, full: bool, archs, backends) -> Dict:
     oracle = "tpu_analytical" if full else "cpu_wallclock"
     hw = "tpu-v5e" if full else "cpu"
     sweep = FULL_SWEEP if full else SMOKE_SWEEP

@@ -1,0 +1,187 @@
+"""Perf section: profiling/simulation hot-path throughput (PR-over-PR).
+
+Two timed pipelines, each optimized-vs-baseline where the baseline is the
+pre-optimization code path (kept alive behind flags for exactly this
+purpose):
+
+* ``dedup`` — the measurement-DB pipeline of a smoke-scale dedup_savings
+  run: the measurement rows harvested from a real smoke profile are (a)
+  written per-row with autocommit on a rollback-journal DB vs bulk in one
+  WAL transaction, and (b) replayed for a 12-model x 3-backend corpus via
+  the pre-PR full-fetch linear scan (re-implemented inline below) vs the
+  cached point lookup.  The jax tracing / signature computation around the
+  DB is identical in both modes and excluded from the timing.
+* ``sim`` — a 200-request ``DoolySim.run`` with the scalar per-row
+  ``predict_call`` vs the vectorized + memoized path, plus a numerical
+  equivalence check between the two (gate: 1e-9).
+
+A gate failure raises SystemExit so the CI step goes red.
+
+Writes ``BENCH_perf.json`` next to the CWD so later PRs can track the
+trajectory.
+"""
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+import time
+from typing import Dict, List, Tuple
+
+from repro.configs import get_smoke_config
+from repro.core.database import LatencyDB
+from repro.core.profiler import DoolyProf, SweepConfig
+from repro.core.runner import trace_model
+from repro.serving.scheduler import SchedulerConfig
+from repro.sim.simulator import DoolySim
+from repro.sim.workload import sharegpt_like
+
+DEDUP_ARCHS = ("llama3-8b", "command-r7b")
+DEDUP_SWEEP = SweepConfig(toks=(32, 128), reqs=(1, 2), ctx=(128,),
+                          op_points=((32, 1), (128, 1), (32, 2)))
+# smoke-scale dedup_savings replays the shared-signature sweep points once
+# per (model, backend) pass over the corpus
+CORPUS_PASSES = 12 * 3
+
+SIM_SWEEP = SweepConfig(toks=(8, 64), reqs=(1, 2), ctx=(64, 128),
+                        op_points=((8, 1), (16, 1), (64, 1), (32, 4)))
+SIM_REQUESTS = 200
+
+
+def _harvest_rows() -> List[Tuple]:
+    """Profile the dedup archs once (in-memory) and return the measurement
+    rows a smoke dedup_savings run produces."""
+    with LatencyDB() as db:
+        prof = DoolyProf(db, oracle="tpu_analytical", hardware="tpu-v5e",
+                         sweep=DEDUP_SWEEP)
+        for arch in DEDUP_ARCHS:
+            cfg = get_smoke_config(arch)
+            prof.profile_model(cfg, backend="xla",
+                               trace=trace_model(cfg))
+        return db.conn.execute("SELECT * FROM measurements").fetchall()
+
+
+def bench_dedup(scratch_dir: str) -> Dict:
+    rows = _harvest_rows()
+    keys = [(r[0], (r[2], r[3], r[4], r[5])) for r in rows]
+    hw = rows[0][1]
+
+    # baseline: rollback journal, one autocommit per row, linear-scan replay
+    base = LatencyDB(os.path.join(scratch_dir, "base.sqlite"), wal=False)
+    t0 = time.perf_counter()
+    for r in rows:
+        base.add_measurement(*r)
+    base_write_s = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    for _ in range(CORPUS_PASSES):
+        for sig, key in keys:
+            for p, t, rq, c, _lat in base.measurements(sig, hw):
+                if (p, t, rq, c) == key:
+                    break
+    base_replay_s = time.perf_counter() - t0
+    base.close()
+
+    # optimized: WAL, one bulk transaction, read-through cached point lookup
+    opt = LatencyDB(os.path.join(scratch_dir, "opt.sqlite"))
+    t0 = time.perf_counter()
+    with opt.transaction():
+        opt.add_measurements_bulk(rows)
+    opt_write_s = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    for _ in range(CORPUS_PASSES):
+        for sig, key in keys:
+            opt.lookup_measurement(sig, hw, *key)
+    opt_replay_s = time.perf_counter() - t0
+    identical = (opt.conn.execute("SELECT * FROM measurements").fetchall()
+                 == rows)
+    opt.close()
+
+    baseline_s = base_write_s + base_replay_s
+    optimized_s = opt_write_s + opt_replay_s
+    return {"n_rows": len(rows), "corpus_passes": CORPUS_PASSES,
+            "baseline_write_s": base_write_s,
+            "baseline_replay_s": base_replay_s,
+            "optimized_write_s": opt_write_s,
+            "optimized_replay_s": opt_replay_s,
+            "baseline_s": baseline_s, "optimized_s": optimized_s,
+            "speedup": baseline_s / optimized_s,
+            "bulk_rows_identical": identical}
+
+
+def bench_sim() -> Dict:
+    cfg = get_smoke_config("llama3-8b")
+    db = LatencyDB()
+    DoolyProf(db, oracle="tpu_analytical", hardware="tpu-v5e",
+              sweep=SIM_SWEEP).profile_model(cfg, backend="xla")
+    sched = SchedulerConfig(max_num_seqs=4, max_batch_tokens=64,
+                            chunk_size=32)
+    mk = lambda: DoolySim(cfg, db, hardware="tpu-v5e", backend="xla",
+                          sched_config=sched, max_seq=128)
+    reqs = lambda: sharegpt_like(SIM_REQUESTS, rate=20.0, seed=7,
+                                 scale=0.05, vocab=cfg.vocab_size)
+
+    base = mk()
+    base.predict_call = base.predict_call_scalar
+    # warm the regression fits (memoized pre-PR as well) out of the timing
+    base.predict_call_scalar(phase="prefill", toks=8, reqs=1, ctx=128)
+    t0 = time.perf_counter()
+    res_base = base.run(reqs())
+    base_s = time.perf_counter() - t0
+
+    fast = mk()
+    t0 = time.perf_counter()
+    res_fast = fast.run(reqs())
+    fast_s = time.perf_counter() - t0
+
+    max_diff = max(
+        abs(fast.predict_call(phase=p, toks=t, reqs=r, ctx=c)
+            - base.predict_call_scalar(phase=p, toks=t, reqs=r, ctx=c))
+        for p, t, r, c in fast._call_cache)
+    db.close()
+    return {"n_requests": SIM_REQUESTS,
+            "n_iterations": len(res_fast["iterations"]),
+            "distinct_calls": len(fast._call_cache),
+            "baseline_s": base_s, "optimized_s": fast_s,
+            "speedup": base_s / fast_s,
+            "makespan_baseline": res_base["makespan"],
+            "makespan_optimized": res_fast["makespan"],
+            "max_abs_diff_s": max_diff}
+
+
+def main(out_path: str = "BENCH_perf.json") -> Dict:
+    with tempfile.TemporaryDirectory(dir=".") as scratch:
+        dedup = bench_dedup(scratch)
+    sim = bench_sim()
+    res = {"dedup": dedup, "sim": sim}
+
+    print(f"# dedup DB pipeline ({dedup['n_rows']} rows, "
+          f"{dedup['corpus_passes']} corpus passes)")
+    print(f"  write:  {dedup['baseline_write_s'] * 1e3:9.2f} ms -> "
+          f"{dedup['optimized_write_s'] * 1e3:9.2f} ms")
+    print(f"  replay: {dedup['baseline_replay_s'] * 1e3:9.2f} ms -> "
+          f"{dedup['optimized_replay_s'] * 1e3:9.2f} ms")
+    print(f"  total:  {dedup['speedup']:8.1f}x  "
+          f"(bulk rows identical: {dedup['bulk_rows_identical']})")
+    print(f"# 200-request DoolySim.run ({sim['n_iterations']} iterations, "
+          f"{sim['distinct_calls']} distinct predict_call keys)")
+    print(f"  {sim['baseline_s'] * 1e3:9.2f} ms -> "
+          f"{sim['optimized_s'] * 1e3:9.2f} ms  ({sim['speedup']:.1f}x)")
+    print(f"  makespan {sim['makespan_baseline']:.6f} -> "
+          f"{sim['makespan_optimized']:.6f}, "
+          f"max |scalar - vectorized| = {sim['max_abs_diff_s']:.2e} s")
+
+    ok = (dedup["speedup"] >= 5.0 and sim["speedup"] >= 5.0
+          and sim["max_abs_diff_s"] < 1e-9 and dedup["bulk_rows_identical"])
+    res["pass"] = ok
+    print(f"gates (>=5x dedup, >=5x sim, <1e-9 equivalence): "
+          f"{'PASS' if ok else 'FAIL'}")
+    with open(out_path, "w") as f:
+        json.dump(res, f, indent=2)
+    print(f"wrote {out_path}")
+    if not ok:
+        raise SystemExit("perf gates failed (see BENCH_perf.json)")
+    return res
+
+
+if __name__ == "__main__":
+    main()

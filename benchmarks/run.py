@@ -8,7 +8,7 @@ from __future__ import annotations
 import sys
 import time
 
-SECTIONS = ("taint", "dedup", "sim", "inversion", "roofline")
+SECTIONS = ("taint", "dedup", "sim", "inversion", "roofline", "perf")
 
 
 def main() -> None:
@@ -46,6 +46,13 @@ def main() -> None:
         print("=" * 72)
         from benchmarks import roofline
         roofline.main()
+    if "perf" in wanted:
+        print("=" * 72)
+        print("Perf: profiling/simulation hot-path throughput "
+              "(baseline vs optimized, BENCH_perf.json)")
+        print("=" * 72)
+        from benchmarks import perf
+        perf.main()
     print(f"\ntotal: {time.time() - t0:.1f}s")
 
 

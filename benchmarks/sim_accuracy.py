@@ -27,7 +27,11 @@ SWEEP = SweepConfig(toks=(8, 16, 32, 64, 128), reqs=(1, 2, 8),
 def run(arch: str = "llama3-8b", n_requests: int = 25, backend: str = "xla",
         seed: int = 1):
     cfg = get_smoke_config(arch)
-    db = LatencyDB()
+    with LatencyDB() as db:
+        return _run(cfg, db, arch, n_requests, backend, seed)
+
+
+def _run(cfg, db, arch, n_requests, backend, seed):
     DoolyProf(db, oracle="cpu_wallclock", hardware="cpu",
               sweep=SWEEP).profile_model(cfg, backend=backend)
     # controlled calibration trace (isolated prefill/decode iterations)

@@ -18,7 +18,11 @@ from repro.sim.workload import sharegpt_like, synthetic
 def main():
     cfg = get_smoke_config("llama3-8b")
     cfg2 = get_smoke_config("command-r7b")
-    db = LatencyDB()
+    with LatencyDB() as db:
+        _main(cfg, cfg2, db)
+
+
+def _main(cfg, cfg2, db):
     sweep = SweepConfig(toks=(8, 16, 32, 64, 128), reqs=(1, 2, 8),
                         ctx=(64, 256),
                         op_points=((8, 1), (16, 1), (64, 1), (128, 1)))

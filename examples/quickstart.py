@@ -36,13 +36,13 @@ def main():
           f"({[m.kind for m in mods]})")
 
     # 3. duplication-aware profiling into the latency DB (§6)
-    db = LatencyDB()
-    prof = DoolyProf(db, oracle="cpu_wallclock", hardware="cpu",
-                     sweep=QUICK_SWEEP)
-    rep = prof.profile_model(cfg, backend="xla", trace=mt)
-    print(f"\nprofiled: {rep.n_new} new signatures, {rep.n_reused} reused, "
-          f"{rep.spent_s:.3f}s spent")
-    print("db:", db.stats())
+    with LatencyDB() as db:
+        prof = DoolyProf(db, oracle="cpu_wallclock", hardware="cpu",
+                         sweep=QUICK_SWEEP)
+        rep = prof.profile_model(cfg, backend="xla", trace=mt)
+        print(f"\nprofiled: {rep.n_new} new signatures, "
+              f"{rep.n_reused} reused, {rep.spent_s:.3f}s spent")
+        print("db:", db.stats())
 
 
 if __name__ == "__main__":

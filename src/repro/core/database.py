@@ -5,12 +5,23 @@ Three orthogonal axes: profiled configurations (hardware x model x backend x
 tp), unique signatures, and workload-dependent measurements.  Communication
 ops live in a separate sub-schema keyed by (topology, tp_degree) — their
 latency does not depend on model architecture.
+
+Write model: the connection runs in autocommit (``isolation_level=None``)
+with WAL journaling, so single-row writers remain safe, while hot paths
+batch through ``transaction()`` + the ``*_bulk`` ``executemany`` APIs —
+one fsync per profiled model instead of one per measurement row.
+
+Read model: point lookups ride the measurements primary key
+(sig_hash, hardware, phase, num_toks, num_reqs, ctx_len, ...), and
+``measurement_map``/``lookup_measurement`` keep a read-through in-memory
+cache per (sig_hash, hardware) so replay never re-fetches or linearly
+scans the measurement list.  Writes invalidate the affected cache entries.
 """
 from __future__ import annotations
 
 import sqlite3
-from dataclasses import dataclass
-from typing import Any, Dict, Iterable, List, Optional, Tuple
+from contextlib import contextmanager
+from typing import (Any, Dict, Iterable, List, Optional, Sequence, Tuple)
 
 from repro.core.signature import Signature
 
@@ -34,26 +45,76 @@ CREATE TABLE IF NOT EXISTS measurements (
     oracle TEXT NOT NULL, latency_us REAL NOT NULL,
     PRIMARY KEY(sig_hash, hardware, phase, num_toks, num_reqs,
                 ctx_len, oracle));
+CREATE INDEX IF NOT EXISTS idx_measurements_hw ON measurements(hardware);
 CREATE TABLE IF NOT EXISTS comm_ops (
     topology TEXT NOT NULL, tp_degree INTEGER NOT NULL,
     op TEXT NOT NULL, bytes INTEGER NOT NULL, latency_us REAL NOT NULL,
     PRIMARY KEY(topology, tp_degree, op, bytes));
 """
 
+# (phase, num_toks, num_reqs, ctx_len) -> latency_us
+MeasKey = Tuple[str, int, int, int]
+
 
 class LatencyDB:
-    def __init__(self, path: str = ":memory:"):
-        self.conn = sqlite3.connect(path)
+    def __init__(self, path: str = ":memory:", *, wal: bool = True):
+        # autocommit + explicit BEGIN/COMMIT in transaction(): sqlite3's
+        # implicit transaction handling would otherwise fight executescript
+        self.conn = sqlite3.connect(path, isolation_level=None)
+        if wal:
+            self.conn.execute("PRAGMA journal_mode=WAL")
+            self.conn.execute("PRAGMA synchronous=NORMAL")
         self.conn.executescript(_SCHEMA)
+        self._txn_depth = 0
+        self._meas_cache: Dict[Tuple[str, str], Dict[MeasKey, float]] = {}
+        # bumped on every measurement write; readers (LatencyModel) use it
+        # to invalidate their bulk-loaded snapshots
+        self.measurement_generation = 0
+
+    # -- lifecycle ------------------------------------------------------------
+
+    def close(self):
+        if self.conn is not None:
+            self.conn.close()
+            self.conn = None
+        self._meas_cache.clear()
+
+    def __enter__(self) -> "LatencyDB":
+        return self
+
+    def __exit__(self, exc_type, exc, tb):
+        self.close()
+        return False
+
+    @contextmanager
+    def transaction(self):
+        """Explicit transaction scope; reentrant (inner scopes join the
+        outermost one).  All bulk writes inside commit with one fsync."""
+        if self._txn_depth == 0:
+            self.conn.execute("BEGIN")
+        self._txn_depth += 1
+        try:
+            yield self
+        except BaseException:
+            self._txn_depth -= 1
+            if self._txn_depth == 0:
+                self.conn.execute("ROLLBACK")
+                # drop any cache entries warmed from now-rolled-back rows
+                self._meas_cache.clear()
+                self.measurement_generation += 1
+            raise
+        else:
+            self._txn_depth -= 1
+            if self._txn_depth == 0:
+                self.conn.execute("COMMIT")
 
     # -- configurations -----------------------------------------------------
 
     def config_id(self, model: str, backend: str, hardware: str,
                   tp: int = 1) -> int:
-        cur = self.conn.execute(
+        self.conn.execute(
             "INSERT OR IGNORE INTO configurations(model,backend,hardware,tp)"
             " VALUES(?,?,?,?)", (model, backend, hardware, tp))
-        self.conn.commit()
         row = self.conn.execute(
             "SELECT id FROM configurations WHERE model=? AND backend=? AND "
             "hardware=? AND tp=?", (model, backend, hardware, tp)).fetchone()
@@ -64,6 +125,9 @@ class LatencyDB:
     def has_signature(self, sig_hash: str, hardware: str) -> bool:
         """Dedup check: do measurements already exist for this signature on
         this hardware? (primary-key lookup, §6)."""
+        cached = self._meas_cache.get((sig_hash, hardware))
+        if cached:
+            return True
         row = self.conn.execute(
             "SELECT 1 FROM measurements WHERE sig_hash=? AND hardware=? "
             "LIMIT 1", (sig_hash, hardware)).fetchone()
@@ -73,14 +137,25 @@ class LatencyDB:
         self.conn.execute(
             "INSERT OR IGNORE INTO signatures VALUES(?,?,?,?,?)",
             (sig.hash, sig.op_name, sig.spec, sig.fingerprint, sig.attrs))
-        self.conn.commit()
+
+    def insert_signatures_bulk(self, sigs: Iterable[Signature]):
+        self.conn.executemany(
+            "INSERT OR IGNORE INTO signatures VALUES(?,?,?,?,?)",
+            [(s.hash, s.op_name, s.spec, s.fingerprint, s.attrs)
+             for s in sigs])
 
     def add_model_operation(self, config_id: int, sig_hash: str,
                             module: str, count: int):
         self.conn.execute(
             "INSERT OR REPLACE INTO model_operations VALUES(?,?,?,?)",
             (config_id, sig_hash, module, count))
-        self.conn.commit()
+
+    def add_model_operations_bulk(
+            self, rows: Iterable[Tuple[int, str, str, int]]):
+        """rows: (config_id, sig_hash, module, count)."""
+        self.conn.executemany(
+            "INSERT OR REPLACE INTO model_operations VALUES(?,?,?,?)",
+            list(rows))
 
     # -- measurements ---------------------------------------------------------
 
@@ -91,7 +166,19 @@ class LatencyDB:
             "INSERT OR REPLACE INTO measurements VALUES(?,?,?,?,?,?,?,?)",
             (sig_hash, hardware, phase, num_toks, num_reqs, ctx_len,
              oracle, latency_us))
-        self.conn.commit()
+        self._meas_cache.pop((sig_hash, hardware), None)
+        self.measurement_generation += 1
+
+    def add_measurements_bulk(self, rows: Sequence[Tuple]):
+        """rows: (sig_hash, hardware, phase, num_toks, num_reqs, ctx_len,
+        oracle, latency_us) tuples, written with one executemany."""
+        rows = list(rows)
+        self.conn.executemany(
+            "INSERT OR REPLACE INTO measurements VALUES(?,?,?,?,?,?,?,?)",
+            rows)
+        for r in rows:
+            self._meas_cache.pop((r[0], r[1]), None)
+        self.measurement_generation += 1
 
     def measurements(self, sig_hash: str, hardware: Optional[str] = None,
                      phase: Optional[str] = None) -> List[Tuple]:
@@ -105,6 +192,37 @@ class LatencyDB:
             q += " AND phase=?"
             args.append(phase)
         return self.conn.execute(q, args).fetchall()
+
+    def measurements_for_hardware(
+            self, hardware: str) -> List[Tuple[str, str, int, int, int,
+                                               float]]:
+        """All (sig_hash, phase, num_toks, num_reqs, ctx_len, latency_us)
+        rows for one hardware in a single query — the latency model's
+        bulk-load path."""
+        return self.conn.execute(
+            "SELECT sig_hash,phase,num_toks,num_reqs,ctx_len,latency_us "
+            "FROM measurements WHERE hardware=?", (hardware,)).fetchall()
+
+    def measurement_map(self, sig_hash: str,
+                        hardware: str) -> Dict[MeasKey, float]:
+        """Read-through cached {(phase, toks, reqs, ctx): latency_us} for one
+        (signature, hardware).  One fetch, then O(1) point lookups."""
+        key = (sig_hash, hardware)
+        cached = self._meas_cache.get(key)
+        if cached is None:
+            cached = {(p, t, r, c): lat
+                      for p, t, r, c, lat in self.measurements(
+                          sig_hash, hardware)}
+            self._meas_cache[key] = cached
+        return cached
+
+    def lookup_measurement(self, sig_hash: str, hardware: str, phase: str,
+                           num_toks: int, num_reqs: int,
+                           ctx_len: int) -> Optional[float]:
+        """Point lookup (latency_us), index-backed on a cold cache and
+        dict-backed after."""
+        return self.measurement_map(sig_hash, hardware).get(
+            (phase, num_toks, num_reqs, ctx_len))
 
     def model_operations(self, config_id: int) -> List[Tuple[str, str, int]]:
         return self.conn.execute(
@@ -123,7 +241,6 @@ class LatencyDB:
         self.conn.execute(
             "INSERT OR REPLACE INTO comm_ops VALUES(?,?,?,?,?)",
             (topology, tp_degree, op, nbytes, latency_us))
-        self.conn.commit()
 
     def comm_latency(self, topology: str, tp_degree: int, op: str,
                      nbytes: int) -> Optional[float]:

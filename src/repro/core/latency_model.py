@@ -9,17 +9,41 @@ Features follow Vidur/Revati: token count for non-attention operations;
 
 Signatures with fewer than 3 measurements fall back to nearest-point
 scaling by total token count.
+
+Measurements for the target hardware are bulk-loaded in one query on first
+use and fits are cached; ``precompile`` stacks every fitted coefficient
+vector into one matrix per phase so ``predict_batch`` evaluates all
+signatures of a model call with a single matmul instead of N scalar
+``predict`` calls.
 """
 from __future__ import annotations
 
+import math
 from dataclasses import dataclass
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from repro.core.database import LatencyDB
 
 RIDGE = 1e-8
+
+_N_FEATURES = {"prefill": 5, "decode": 4}
+
+
+def nearest_point_scale(points, toks: int, reqs: int) -> float:
+    """Under-measured fallback shared by LatencyModel and DoolyProf._replay:
+    pick the measured point nearest in log total-token count and scale its
+    latency linearly.  ``points`` is an ordered iterable of
+    (toks, reqs, latency_us); returns seconds."""
+    pts = list(points)
+    if not pts:
+        return 0.0
+    tot = max(toks, 1) * max(reqs, 1)
+    best = min(pts, key=lambda p: abs(
+        math.log(max(p[0], 1) * max(p[1], 1)) - math.log(tot)))
+    bt = max(best[0], 1) * max(best[1], 1)
+    return best[2] / 1e6 * (tot / bt)
 
 
 def _features(phase: str, toks: int, reqs: int, ctx: int) -> np.ndarray:
@@ -34,6 +58,15 @@ def _features(phase: str, toks: int, reqs: int, ctx: int) -> np.ndarray:
 class _Fit:
     coef: Optional[np.ndarray]
     points: List[Tuple[int, int, int, float]]     # (toks, reqs, ctx, us)
+    floor: float = 0.0                            # min latency_us * 0.05
+
+
+@dataclass
+class _BatchFit:
+    """Stacked fits for an ordered signature tuple at one phase."""
+    coef: np.ndarray                 # (n, d); zero rows where not fitted
+    floor: np.ndarray                # (n,)   ; 0 where not fitted
+    fallback: List[int]              # indices needing the scalar path
 
 
 class LatencyModel:
@@ -41,42 +74,108 @@ class LatencyModel:
         self.db = db
         self.hardware = hardware
         self._fits: Dict[Tuple[str, str], _Fit] = {}
+        self._batches: Dict[Tuple[Tuple[str, ...], str], _BatchFit] = {}
+        # (sig_hash, phase) -> points, bulk-loaded once per hardware
+        self._points: Optional[Dict[Tuple[str, str],
+                                    List[Tuple[int, int, int, float]]]] = None
+        self._points_gen = -1
+
+    # -- fitting -------------------------------------------------------------
+
+    def _load_points(self) -> Dict[Tuple[str, str],
+                                   List[Tuple[int, int, int, float]]]:
+        gen = self.db.measurement_generation
+        if self._points is None or self._points_gen != gen:
+            # reload the snapshot on DB writes; existing fits stay cached
+            # (matching the old per-signature lazy-query semantics)
+            self._points_gen = gen
+            self._points = {}
+            for sig, p, t, r, c, lat in self.db.measurements_for_hardware(
+                    self.hardware):
+                self._points.setdefault((sig, p), []).append((t, r, c, lat))
+        return self._points
 
     def _fit(self, sig_hash: str, phase: str) -> _Fit:
         key = (sig_hash, phase)
         if key in self._fits:
             return self._fits[key]
-        rows = self.db.measurements(sig_hash, self.hardware, phase)
-        pts = [(t, r, c, lat) for (_, t, r, c, lat) in rows]
+        pts = self._load_points().get(key, [])
         coef = None
+        floor = 0.0
         if len(pts) >= 4:
             X = np.stack([_features(phase, t, r, c) for t, r, c, _ in pts])
             y = np.array([lat for *_, lat in pts])
             A = X.T @ X + RIDGE * np.eye(X.shape[1])
             coef = np.linalg.solve(A, X.T @ y)
-        fit = _Fit(coef, pts)
+            floor = min(lat for *_, lat in pts) * 0.05
+        fit = _Fit(coef, pts, floor)
         self._fits[key] = fit
         return fit
+
+    def precompile(self, sig_hashes: Optional[Sequence[str]] = None):
+        """Fit every (signature, phase) up front.  Defaults to every
+        signature measured on this hardware."""
+        if sig_hashes is None:
+            sig_hashes = sorted({s for s, _ in self._load_points()})
+        for sig in sig_hashes:
+            for phase in ("prefill", "decode"):
+                self._fit(sig, phase)
+
+    def _compile_batch(self, sigs: Tuple[str, ...], phase: str) -> _BatchFit:
+        key = (sigs, phase)
+        batch = self._batches.get(key)
+        if batch is None:
+            d = _N_FEATURES[phase]
+            coef = np.zeros((len(sigs), d))
+            floor = np.zeros(len(sigs))
+            fallback = []
+            for i, sig in enumerate(sigs):
+                fit = self._fit(sig, phase)
+                if fit.coef is not None:
+                    coef[i] = fit.coef
+                    floor[i] = fit.floor
+                else:
+                    fallback.append(i)
+            batch = _BatchFit(coef, floor, fallback)
+            self._batches[key] = batch
+        return batch
+
+    # -- prediction ----------------------------------------------------------
 
     def predict(self, sig_hash: str, phase: str, *, toks: int = 1,
                 reqs: int = 1, ctx: int = 0) -> float:
         """Predicted latency in seconds."""
         fit = self._fit(sig_hash, phase)
         if fit.coef is None:
-            if not fit.points:
-                # fall back to any phase's measurements
-                alt = self._fit(sig_hash,
-                                "prefill" if phase == "decode" else "decode")
-                if not alt.points:
-                    return 0.0
-                fit = alt
-            # nearest-point scaling by total tokens
-            tot = max(toks, 1) * max(reqs, 1)
-            best = min(fit.points,
-                       key=lambda p: abs(np.log(max(p[0], 1) * max(p[1], 1))
-                                         - np.log(tot)))
-            bt = max(best[0], 1) * max(best[1], 1)
-            return best[3] / 1e6 * (tot / bt)
+            return self._predict_fallback(sig_hash, phase, fit, toks, reqs)
         y = float(fit.coef @ _features(phase, toks, reqs, ctx))
-        floor = min(lat for *_, lat in fit.points) * 0.05
-        return max(y, floor, 0.0) / 1e6
+        return max(y, fit.floor, 0.0) / 1e6
+
+    def _predict_fallback(self, sig_hash: str, phase: str, fit: _Fit,
+                          toks: int, reqs: int) -> float:
+        if not fit.points:
+            # fall back to any phase's measurements
+            alt = self._fit(sig_hash,
+                            "prefill" if phase == "decode" else "decode")
+            if not alt.points:
+                return 0.0
+            fit = alt
+        return nearest_point_scale(
+            ((t, r, lat) for t, r, _, lat in fit.points), toks, reqs)
+
+    def predict_batch(self, sig_hashes: Sequence[str], phase: str, *,
+                      toks: int = 1, reqs: int = 1,
+                      ctx: int = 0) -> np.ndarray:
+        """Predicted latency (seconds) for every signature at one workload
+        point — one matmul over the stacked coefficient matrix, scalar
+        fallback only for under-measured signatures."""
+        sigs = tuple(sig_hashes)
+        batch = self._compile_batch(sigs, phase)
+        feat = _features(phase, toks, reqs, ctx)
+        out = np.maximum(batch.coef @ feat, batch.floor)
+        np.maximum(out, 0.0, out=out)
+        out /= 1e6
+        for i in batch.fallback:
+            out[i] = self._predict_fallback(
+                sigs[i], phase, self._fit(sigs[i], phase), toks, reqs)
+        return out

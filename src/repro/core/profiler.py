@@ -11,6 +11,12 @@ Sweeps are taint-driven (§5.2): MODEL_CONFIG dims fixed, NUM_TOKS/NUM_REQS
 dims set per sweep point, MIX dims recalculated.  Stateful modules sweep
 both phases — prefill over (toks x reqs), decode over (ctx x reqs) — with
 execution contexts built by the serving engine (App. D).
+
+Writes are staged in memory during profile_model and flushed in one DB
+transaction per model (signatures, measurements, and call-graph counts via
+the bulk APIs); replay for deduplicated signatures uses the DB's cached
+point lookup, falling back to the nearest point by total token count with
+the same scaling semantics as LatencyModel.
 """
 from __future__ import annotations
 
@@ -24,6 +30,7 @@ import jax
 from repro.configs.base import ModelConfig
 from repro.core import backends as oracles
 from repro.core.database import LatencyDB
+from repro.core.latency_model import nearest_point_scale
 from repro.core.opset import Entry, ModuleEntry, OpEntry, find_runnable_set
 from repro.core.runner import ModelTrace, trace_model
 from repro.core.signature import (Signature, module_entry_signature,
@@ -107,6 +114,11 @@ class DoolyProf:
         self.oracle = oracle
         self.hardware = hardware
         self.sweep = sweep or SweepConfig()
+        # measurements staged during the current profile_model, flushed in
+        # one transaction per model; indexed for same-model dedup/replay
+        self._pending_rows: List[Tuple] = []
+        self._pending_sigs: Dict[str, Signature] = {}   # deduped by hash
+        self._pending_index: Dict[str, Dict[Tuple, float]] = {}
 
     # ------------------------------------------------------------------
 
@@ -114,6 +126,9 @@ class DoolyProf:
                       tp: int = 1, trace: Optional[ModelTrace] = None
                       ) -> ProfileReport:
         t0 = time.time()
+        # discard any staging left by a previous profile_model that raised —
+        # stale pending rows would corrupt this model's dedup accounting
+        self._clear_pending()
         mt = trace or trace_model(cfg)
         entries = find_runnable_set(mt.trace)
         report = ProfileReport(model=cfg.name, backend=backend)
@@ -121,31 +136,74 @@ class DoolyProf:
         config_id = self.db.config_id(cfg.name, backend, self.hardware, tp)
 
         counts: Dict[Tuple[str, str], int] = {}
-        for entry in entries:
-            if isinstance(entry, ModuleEntry) and entry.context_kind:
-                rep = self._profile_stateful(entry, cfg, backend, config_id)
-            elif isinstance(entry, OpEntry):
-                rep = self._profile_op(entry, cfg, backend, config_id)
-            else:
-                continue        # absorbed non-stateful module: rare; skip
-            if rep is not None:
-                report.entries.append(rep)
-                key = (rep.sig, _module_of(entry))
-                counts[key] = counts.get(key, 0) + entry.count
+        try:
+            for entry in entries:
+                if isinstance(entry, ModuleEntry) and entry.context_kind:
+                    rep = self._profile_stateful(entry, cfg, backend,
+                                                 config_id)
+                elif isinstance(entry, OpEntry):
+                    rep = self._profile_op(entry, cfg, backend, config_id)
+                else:
+                    continue    # absorbed non-stateful module: rare; skip
+                if rep is not None:
+                    report.entries.append(rep)
+                    key = (rep.sig, _module_of(entry))
+                    counts[key] = counts.get(key, 0) + entry.count
+        except Exception as profile_err:
+            # flush the measurements already paid for before propagating,
+            # so a retry dedups against them instead of re-measuring.
+            # Exception only: a KeyboardInterrupt must not commit a
+            # partially-swept model that later runs treat as measured.
+            try:
+                self._flush(())
+            except Exception:
+                pass        # keep the original profiling error
+            raise profile_err
         # aggregate duplicate (sig, module) pairs (e.g. q_proj & o_proj share
         # a signature inside the same canonical layer)
-        for (sig, module), count in counts.items():
-            self.db.add_model_operation(config_id, sig, module, count)
+        self._flush([(config_id, sig, module, count)
+                     for (sig, module), count in counts.items()])
         return report
+
+    # -- staged writes --------------------------------------------------
+
+    def _flush(self, op_rows):
+        # one transaction per model: signatures, measurements, and the
+        # call-graph counts land with a single commit
+        with self.db.transaction():
+            self.db.insert_signatures_bulk(self._pending_sigs.values())
+            self.db.add_measurements_bulk(self._pending_rows)
+            if op_rows:
+                self.db.add_model_operations_bulk(op_rows)
+        self._clear_pending()
+
+    def _clear_pending(self):
+        self._pending_rows.clear()
+        self._pending_sigs.clear()
+        self._pending_index.clear()
+
+    def _record_sig(self, sig: Signature):
+        self._pending_sigs[sig.hash] = sig
+
+    def _record_measurement(self, sig_hash: str, key: Tuple,
+                            latency_us: float):
+        self._pending_rows.append(
+            (sig_hash, self.hardware) + key + (self.oracle, latency_us))
+        self._pending_index.setdefault(sig_hash, {})[key] = latency_us
+
+    def _known(self, sig_hash: str) -> bool:
+        """Dedup check, including measurements staged for this model."""
+        return (sig_hash in self._pending_index
+                or self.db.has_signature(sig_hash, self.hardware))
 
     # ------------------------------------------------------------------
 
     def _profile_op(self, entry: OpEntry, cfg, backend, config_id
                     ) -> Optional[EntryReport]:
         sig = op_entry_signature(entry)
-        self.db.insert_signature(sig)
+        self._record_sig(sig)
         group = "linear" if entry.kind == "dot_general" else "other"
-        reused = self.db.has_signature(sig.hash, self.hardware)
+        reused = self._known(sig.hash)
         points = (self.sweep.op_points if entry.sweepable
                   else ((0, 0),))
         cost = 0.0
@@ -155,8 +213,7 @@ class DoolyProf:
                 lat = self._replay(sig.hash, key)
             else:
                 lat = self._measure_op(entry, toks or None, reqs or None)
-                self.db.add_measurement(sig.hash, self.hardware, *key,
-                                        self.oracle, lat * 1e6)
+                self._record_measurement(sig.hash, key, lat * 1e6)
             cost += lat * self.sweep.repeats
         return EntryReport(sig.hash, entry.kind, group, "", entry.count,
                            reused, cost)
@@ -167,8 +224,8 @@ class DoolyProf:
         ctx_pre = build_context(cfg, entry.context_kind, phase="prefill",
                                 backend=backend, window=window)
         sig = module_entry_signature(entry, ctx_pre)
-        self.db.insert_signature(sig)
-        reused = self.db.has_signature(sig.hash, self.hardware)
+        self._record_sig(sig)
+        reused = self._known(sig.hash)
         variant = self._variant(ctx_pre)
         cost = 0.0
         for phase in phases_for(entry.context_kind, cfg):
@@ -181,8 +238,7 @@ class DoolyProf:
                     lat = self._replay(sig.hash, key)
                 else:
                     lat = self._measure_module(mc, toks, reqs, ctx)
-                    self.db.add_measurement(sig.hash, self.hardware, *key,
-                                            self.oracle, lat * 1e6)
+                    self._record_measurement(sig.hash, key, lat * 1e6)
                 cost += lat * self.sweep.repeats
         return EntryReport(sig.hash, entry.context_kind, "attention"
                            if "attn" in entry.context_kind
@@ -229,9 +285,23 @@ class DoolyProf:
         return oracles.measure(self.oracle, mc.fn, full)
 
     def _replay(self, sig_hash: str, key) -> float:
-        phase, toks, reqs, ctx = key
-        for p, t, r, c, lat in self.db.measurements(sig_hash, self.hardware):
-            if (p, t, r, c) == (phase, toks, reqs, ctx):
-                return lat / 1e6
-        rows = self.db.measurements(sig_hash, self.hardware)
-        return (rows[0][4] / 1e6) if rows else 0.0
+        pending = self._pending_index.get(sig_hash)
+        if pending is not None and key in pending:
+            return pending[key] / 1e6
+        stored = self.db.measurement_map(sig_hash, self.hardware)
+        lat = stored.get(key)
+        if lat is not None:
+            return lat / 1e6
+        points = dict(stored)
+        if pending:
+            points.update(pending)
+        return self._replay_nearest(points, key)
+
+    @staticmethod
+    def _replay_nearest(points: Dict[Tuple, float], key) -> float:
+        """Exact sweep point missing: nearest point by total token count,
+        scaled — the exact fallback LatencyModel uses."""
+        _, toks, reqs, _ = key
+        return nearest_point_scale(
+            ((t, r, lat) for (_, t, r, _), lat in points.items()),
+            toks, reqs)

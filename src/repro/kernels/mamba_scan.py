@@ -23,6 +23,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.pltpu_compat import tpu_compiler_params
+
 
 def _kernel(x_ref, dt_ref, b_ref, c_ref, a_ref, d_ref, h0_ref,
             y_ref, hout_ref, h_ref, *, t: int, nc: int, seq: int):
@@ -102,7 +104,7 @@ def mamba_scan(x, dt, A, Bc, Cc, D, h0=None, *, block_d: int = 0,
             jax.ShapeDtypeStruct((b, di, n), jnp.float32),
         ],
         scratch_shapes=[pltpu.VMEM((bd, n), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(x, dt, Bc, Cc, A, D, h0)

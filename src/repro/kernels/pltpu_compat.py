@@ -1,0 +1,16 @@
+"""jax version compat: pltpu.TPUCompilerParams was renamed to
+pltpu.CompilerParams in newer jax; resolve whichever exists once."""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+_CLS = (getattr(pltpu, "CompilerParams", None)
+        or getattr(pltpu, "TPUCompilerParams", None))
+if _CLS is None:
+    raise ImportError(
+        "jax.experimental.pallas.tpu exposes neither CompilerParams nor "
+        "TPUCompilerParams; unsupported jax version")
+
+
+def tpu_compiler_params(**kwargs):
+    return _CLS(**kwargs)

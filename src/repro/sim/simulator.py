@@ -10,12 +10,25 @@ Mirrors the engine's execution structure: each prefill chunk is one model
 call at (toks=c, reqs=1, ctx=start); the decode batch is one call at
 (reqs=max_num_seqs, ctx=max_seq) — static TPU-style shapes.  ``lm_head``
 ops run on the chunk's last position only, matching Model.prefill_chunk.
+
+Prediction is vectorized: at construction the call-graph rows are split
+into groups that share a workload mapping (stateful rows follow the call's
+phase/ctx; MoE and stateless operator rows always evaluate as prefill with
+ctx=0; ``lm_head`` rows clamp to the chunk's last position), each group is
+evaluated through ``LatencyModel.predict_batch`` as one matmul, and
+``predict_call`` is memoized on (phase, toks, reqs, ctx) — decode batches
+and power-of-two-bucketed prefill chunks draw from a tiny discrete set, so
+a long trace collapses to a handful of distinct evaluations.  The scalar
+reference path is kept as ``predict_call_scalar`` (equivalence tests and
+the perf benchmark's baseline).
 """
 from __future__ import annotations
 
 import json
 from dataclasses import dataclass
-from typing import Any, Dict, List, Optional
+from typing import Any, Dict, List, Optional, Tuple
+
+import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.core.database import LatencyDB
@@ -55,13 +68,48 @@ class DoolySim:
             kind = meta[0] if meta else "?"
             self.rows.append(_OpRow(sig, module, count, kind,
                                     kind in _STATEFUL))
+        # group rows by workload mapping, built once: (follows_call_phase,
+        # lm_head) -> (sig tuple, counts vector).  follows_call_phase is
+        # stateful non-MoE; everything else evaluates as prefill/ctx=0.
+        self._groups: Dict[Tuple[bool, bool],
+                           Tuple[Tuple[str, ...], np.ndarray]] = {}
+        buckets: Dict[Tuple[bool, bool], List[_OpRow]] = {}
+        for row in self.rows:
+            k = (row.stateful and row.kind != "moe", "lm_head" in row.module)
+            buckets.setdefault(k, []).append(row)
+        for k, rows in buckets.items():
+            self._groups[k] = (tuple(r.sig for r in rows),
+                               np.array([float(r.count) for r in rows]))
+        self._call_cache: Dict[Tuple[str, int, int, int], float] = {}
 
     # ------------------------------------------------------------------
 
     def predict_call(self, *, phase: str, toks: int, reqs: int,
                      ctx: int) -> float:
         """One model call: sum per-signature predictions over the call
-        graph."""
+        graph.  Vectorized (one predict_batch matmul per row group) and
+        memoized on the workload key."""
+        key = (phase, toks, reqs, ctx)
+        cached = self._call_cache.get(key)
+        if cached is not None:
+            return cached
+        total = 0.0
+        for (follows_phase, lm_head), (sigs, counts) in self._groups.items():
+            t = 1 if lm_head and phase == "prefill" else toks
+            if follows_phase:
+                preds = self.lm.predict_batch(sigs, phase, toks=t,
+                                              reqs=reqs, ctx=ctx)
+            else:
+                preds = self.lm.predict_batch(sigs, "prefill", toks=t,
+                                              reqs=reqs, ctx=0)
+            total += float(counts @ preds)
+        self._call_cache[key] = total
+        return total
+
+    def predict_call_scalar(self, *, phase: str, toks: int, reqs: int,
+                            ctx: int) -> float:
+        """Reference scalar path: per-row LatencyModel.predict, no caching.
+        predict_call must match this within 1e-9."""
         total = 0.0
         for row in self.rows:
             t, r = toks, reqs
@@ -115,7 +163,10 @@ class DoolySim:
         calibration run — the Vidur-style CPU-overhead profiling step.
         Median residuals per iteration composition (robust to queue noise,
         avoids chunk/decode colinearity)."""
-        import numpy as np
+        # reset so recalibration is idempotent: predict_record applies
+        # decode_scale, and fitting the ratio on already-scaled predictions
+        # would compound corrections across calls
+        self.decode_scale = 1.0
         # decode program: stable multiplicative correction (op-sum vs the
         # fused compiled program), then additive residual
         dec_pred = [self.predict_record(r) for r in records

@@ -1,0 +1,151 @@
+"""Equivalence gates for the vectorized/batched hot paths: predict_batch
+and the memoized predict_call must match the scalar path within 1e-9, bulk
+DB writes must be byte-identical to the per-row path, and the replay
+fallback must use nearest-point-by-total-tokens semantics."""
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.core.database import LatencyDB
+from repro.core.latency_model import LatencyModel
+from repro.core.profiler import QUICK_SWEEP, DoolyProf
+from repro.serving.scheduler import SchedulerConfig
+from repro.sim.simulator import DoolySim
+
+HW = "cpu"
+
+
+def _seed_db(db: LatencyDB):
+    """Two fitted signatures (both phases), one under-measured (fallback),
+    one decode-only."""
+    rng = np.random.default_rng(0)
+    for i, sig in enumerate(("a" * 64, "b" * 64)):
+        for t in (8, 16, 32, 64, 128):
+            for r in (1, 2, 4):
+                db.add_measurement(sig, HW, "prefill", t, r, 0, "o",
+                                   5.0 * (i + 1) + 0.2 * t * r
+                                   + rng.uniform(0, .1))
+        for c in (64, 128, 256, 512):
+            for r in (1, 2, 4):
+                db.add_measurement(sig, HW, "decode", 1, r, c, "o",
+                                   2.0 * (i + 1) + 0.01 * r * c
+                                   + rng.uniform(0, .1))
+    db.add_measurement("c" * 64, HW, "prefill", 16, 1, 0, "o", 7.0)
+    db.add_measurement("c" * 64, HW, "prefill", 64, 1, 0, "o", 21.0)
+    db.add_measurement("d" * 64, HW, "decode", 1, 2, 128, "o", 3.0)
+
+
+@pytest.mark.parametrize("phase,point", [
+    ("prefill", (16, 1, 0)), ("prefill", (48, 2, 128)),
+    ("prefill", (128, 4, 512)), ("decode", (1, 2, 96)),
+    ("decode", (1, 4, 512)), ("decode", (1, 1, 0)),
+])
+def test_predict_batch_matches_scalar(phase, point):
+    db = LatencyDB()
+    _seed_db(db)
+    lm = LatencyModel(db, HW)
+    sigs = ("a" * 64, "b" * 64, "c" * 64, "d" * 64)
+    toks, reqs, ctx = point
+    batch = lm.predict_batch(sigs, phase, toks=toks, reqs=reqs, ctx=ctx)
+    scalar = [lm.predict(s, phase, toks=toks, reqs=reqs, ctx=ctx)
+              for s in sigs]
+    np.testing.assert_allclose(batch, scalar, rtol=0, atol=1e-9)
+
+
+def test_precompile_covers_all_measured_signatures():
+    db = LatencyDB()
+    _seed_db(db)
+    lm = LatencyModel(db, HW)
+    lm.precompile()
+    assert ("a" * 64, "prefill") in lm._fits
+    assert ("d" * 64, "decode") in lm._fits
+
+
+@pytest.fixture(scope="module")
+def profiled_sim():
+    cfg = get_smoke_config("llama3-8b")
+    db = LatencyDB()
+    DoolyProf(db, oracle="cpu_wallclock", hardware=HW,
+              sweep=QUICK_SWEEP).profile_model(cfg, backend="xla")
+    sched = SchedulerConfig(max_num_seqs=4, max_batch_tokens=64,
+                            chunk_size=32)
+    return DoolySim(cfg, db, hardware=HW, backend="xla",
+                    sched_config=sched, max_seq=128)
+
+
+def test_predict_call_matches_scalar(profiled_sim):
+    sim = profiled_sim
+    for phase, toks, reqs, ctx in [("prefill", 8, 1, 128),
+                                   ("prefill", 32, 1, 128),
+                                   ("decode", 1, 4, 128),
+                                   ("decode", 1, 2, 64)]:
+        fast = sim.predict_call(phase=phase, toks=toks, reqs=reqs, ctx=ctx)
+        ref = sim.predict_call_scalar(phase=phase, toks=toks, reqs=reqs,
+                                      ctx=ctx)
+        assert abs(fast - ref) < 1e-9
+        # memoized second call returns the identical value
+        assert sim.predict_call(phase=phase, toks=toks, reqs=reqs,
+                                ctx=ctx) == fast
+
+
+def test_bulk_writes_identical_to_per_row():
+    rows = [("s%02d" % (i % 5) * 8, "hw", "prefill" if i % 2 else "decode",
+             8 * (1 + i % 3), 1 + i % 2, 64 * (i % 2), "o", 1.5 + i)
+            for i in range(40)]
+    per_row = LatencyDB()
+    for r in rows:
+        per_row.add_measurement(*r)
+    bulk = LatencyDB()
+    with bulk.transaction():
+        bulk.add_measurements_bulk(rows)
+    assert per_row.stats() == bulk.stats()
+    for sig in {r[0] for r in rows}:
+        assert per_row.measurements(sig) == bulk.measurements(sig)
+
+
+def test_measurement_cache_invalidated_on_write():
+    db = LatencyDB()
+    db.add_measurement("a" * 64, "hw", "prefill", 8, 1, 0, "o", 1.0)
+    assert db.lookup_measurement("a" * 64, "hw", "prefill", 8, 1, 0) == 1.0
+    db.add_measurement("a" * 64, "hw", "prefill", 16, 1, 0, "o", 2.0)
+    assert db.lookup_measurement("a" * 64, "hw", "prefill", 16, 1, 0) == 2.0
+
+
+def test_replay_nearest_point_fallback():
+    db = LatencyDB()
+    prof = DoolyProf(db, oracle="cpu_wallclock", hardware="cpu",
+                     sweep=QUICK_SWEEP)
+    sig = "e" * 64
+    db.add_measurement(sig, "cpu", "prefill", 8, 1, 0, "o", 10.0)
+    db.add_measurement(sig, "cpu", "prefill", 64, 1, 0, "o", 80.0)
+    # exact hit
+    assert prof._replay(sig, ("prefill", 8, 1, 0)) == pytest.approx(10e-6)
+    # missing key: nearest by total tokens (16 -> the 8-tok point), scaled
+    assert prof._replay(sig, ("prefill", 16, 1, 0)) == \
+        pytest.approx(10e-6 * 2)
+    # far side picks the 64-tok point
+    assert prof._replay(sig, ("prefill", 128, 1, 0)) == \
+        pytest.approx(80e-6 * 2)
+
+
+def test_rollback_discards_rows_and_cache():
+    db = LatencyDB()
+    row = ("a" * 64, "hw", "prefill", 8, 1, 0, "o", 1.0)
+    with pytest.raises(RuntimeError):
+        with db.transaction():
+            db.add_measurements_bulk([row])
+            # warm the read-through cache from uncommitted rows
+            assert db.lookup_measurement("a" * 64, "hw", "prefill",
+                                         8, 1, 0) == 1.0
+            raise RuntimeError("boom")
+    assert db.stats()["measurements"] == 0
+    assert db.lookup_measurement("a" * 64, "hw", "prefill", 8, 1, 0) is None
+
+
+def test_db_close_and_context_manager(tmp_path):
+    path = str(tmp_path / "lat.sqlite")
+    with LatencyDB(path) as db:
+        db.add_measurement("a" * 64, "hw", "prefill", 8, 1, 0, "o", 1.0)
+    assert db.conn is None
+    with LatencyDB(path) as db2:
+        assert db2.stats()["measurements"] == 1

@@ -4,7 +4,7 @@ workloads; TOKS/REQS scale exactly), ambiguity detection + retrace."""
 import jax
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp_compat import given, settings, st
 
 from repro.configs import get_smoke_config
 from repro.core import taint as T
