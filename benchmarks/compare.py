@@ -1,0 +1,96 @@
+"""Perf-trajectory regression gate.
+
+Diffs a freshly produced ``BENCH_perf.json`` against a committed baseline
+and exits nonzero if the trajectory regressed:
+
+* any ``speedup`` value drops by more than ``TOLERANCE`` (30%) relative to
+  the baseline, or
+* any ``pass`` flag that was true in the baseline flips to false.
+
+Sections present only in the new results (new benchmarks) are reported but
+never fail the gate; sections missing from the new results do fail it —
+a deleted benchmark would otherwise hide a regression.
+
+    PYTHONPATH=src python -m benchmarks.compare BASELINE [NEW]
+
+NEW defaults to ``BENCH_perf.json`` in the CWD.  In CI the committed file
+is copied aside before the benchmark overwrites it, then compared.
+"""
+from __future__ import annotations
+
+import json
+import sys
+from typing import Any, Dict, List, Tuple
+
+TOLERANCE = 0.30
+
+
+def compare(baseline: Dict[str, Any], new: Dict[str, Any],
+            tolerance: float = TOLERANCE) -> Tuple[List[str], List[str]]:
+    """Returns (failures, notes); empty failures means the gate passes."""
+    failures: List[str] = []
+    notes: List[str] = []
+    _walk(baseline, new, "", tolerance, failures, notes)
+    return failures, notes
+
+
+def _walk(base: Any, new: Any, path: str, tol: float,
+          failures: List[str], notes: List[str]):
+    if not isinstance(base, dict):
+        return
+    if not isinstance(new, dict):
+        failures.append(f"{path or '<root>'}: section missing or malformed "
+                        "in new results")
+        return
+    for key, bval in base.items():
+        where = f"{path}{key}"
+        if key not in new:
+            if key in ("speedup", "pass") or isinstance(bval, dict):
+                failures.append(f"{where}: missing from new results")
+            continue
+        nval = new[key]
+        if key == "speedup" and isinstance(bval, (int, float)):
+            if not isinstance(nval, (int, float)):
+                failures.append(f"{where}: {nval!r} is not a number")
+            elif nval < (1.0 - tol) * bval:
+                failures.append(
+                    f"{where}: {bval:.2f}x -> {nval:.2f}x "
+                    f"({(1 - nval / bval) * 100:.0f}% regression, "
+                    f"tolerance {tol * 100:.0f}%)")
+            else:
+                notes.append(f"{where}: {bval:.2f}x -> {nval:.2f}x")
+        elif key == "pass" and bval is True:
+            if nval is not True:
+                failures.append(f"{where}: flipped true -> {nval!r}")
+        elif isinstance(bval, dict):
+            _walk(bval, nval, where + ".", tol, failures, notes)
+    for key, nval in new.items():
+        if key not in base and isinstance(nval, dict):
+            notes.append(f"{path}{key}: new section (no baseline)")
+
+
+def main(argv: List[str]) -> int:
+    if not argv or len(argv) > 2:
+        print(__doc__)
+        return 2
+    baseline_path = argv[0]
+    new_path = argv[1] if len(argv) > 1 else "BENCH_perf.json"
+    with open(baseline_path) as f:
+        baseline = json.load(f)
+    with open(new_path) as f:
+        new = json.load(f)
+    failures, notes = compare(baseline, new)
+    for note in notes:
+        print(f"  ok    {note}")
+    for failure in failures:
+        print(f"  FAIL  {failure}")
+    if failures:
+        print(f"perf trajectory REGRESSED ({len(failures)} failure(s) vs "
+              f"{baseline_path})")
+        return 1
+    print(f"perf trajectory OK vs {baseline_path}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv[1:]))

@@ -9,9 +9,8 @@ and the Figure-5 amortization curve (cumulative hours vs models profiled).
 """
 from __future__ import annotations
 
-import json
 from collections import defaultdict
-from typing import Dict, List
+from typing import Dict
 
 from repro.configs import CORPUS_ARCHS, get_config, get_smoke_config
 from repro.core.database import LatencyDB

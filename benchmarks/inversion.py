@@ -17,7 +17,6 @@ from typing import Dict, List
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs import get_smoke_config
 from repro.models import build_model

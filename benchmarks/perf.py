@@ -14,11 +14,20 @@ purpose):
 * ``sim`` — a 200-request ``DoolySim.run`` with the scalar per-row
   ``predict_call`` vs the vectorized + memoized path, plus a numerical
   equivalence check between the two (gate: 1e-9).
+* ``warm_start`` — model load on a measurement-only DB (refit every ridge
+  system from raw points) vs a warm DB carrying persisted coefficient
+  blobs in the ``fits`` table (decode, no solves).  Gate: >=5x and
+  bitwise-identical predictions.
+* ``trace`` — re-predicting a recorded 200-request trace via a per-call
+  ``predict_iteration`` loop (the PR-1 memoized path) vs one
+  ``predict_trace`` over the whole plan list.  Gate: >=2x and <=1e-9
+  makespan equivalence.
 
 A gate failure raises SystemExit so the CI step goes red.
 
 Writes ``BENCH_perf.json`` next to the CWD so later PRs can track the
-trajectory.
+trajectory (``benchmarks/compare.py`` diffs it against the committed
+baseline in CI and fails on regressions).
 """
 from __future__ import annotations
 
@@ -26,10 +35,13 @@ import json
 import os
 import tempfile
 import time
-from typing import Dict, List, Tuple
+from typing import Any, Dict, List, Tuple
+
+import numpy as np
 
 from repro.configs import get_smoke_config
 from repro.core.database import LatencyDB
+from repro.core.latency_model import LatencyModel
 from repro.core.profiler import DoolyProf, SweepConfig
 from repro.core.runner import trace_model
 from repro.serving.scheduler import SchedulerConfig
@@ -46,6 +58,10 @@ CORPUS_PASSES = 12 * 3
 SIM_SWEEP = SweepConfig(toks=(8, 64), reqs=(1, 2), ctx=(64, 128),
                         op_points=((8, 1), (16, 1), (64, 1), (32, 4)))
 SIM_REQUESTS = 200
+
+WARM_SIGS = 256          # synthetic fitted signatures in the warm-start DB
+WARM_HW = "tpu-v5e"
+TRACE_REPEATS = 5
 
 
 def _harvest_rows() -> List[Tuple]:
@@ -108,7 +124,7 @@ def bench_dedup(scratch_dir: str) -> Dict:
             "bulk_rows_identical": identical}
 
 
-def bench_sim() -> Dict:
+def bench_sim() -> Tuple[Dict, "DoolySim", Any]:
     cfg = get_smoke_config("llama3-8b")
     db = LatencyDB()
     DoolyProf(db, oracle="tpu_analytical", hardware="tpu-v5e",
@@ -121,7 +137,25 @@ def bench_sim() -> Dict:
                                  scale=0.05, vocab=cfg.vocab_size)
 
     base = mk()
-    base.predict_call = base.predict_call_scalar
+    # pre-PR-1 baseline, re-implemented inline (predict_iteration no longer
+    # routes through predict_call): scalar per-row prediction per chunk,
+    # no memoization
+    from repro.serving.engine import bucket_chunk
+
+    def scalar_iteration(plan):
+        total = base.overhead_s + base.chunk_overhead_s * len(plan.prefills)
+        for chunk in plan.prefills:
+            c = (chunk.length if cfg.ssm_state > 0
+                 else bucket_chunk(chunk.length, sched.chunk_size))
+            total += base.predict_call_scalar(phase="prefill", toks=c,
+                                              reqs=1, ctx=base.max_seq)
+        if plan.decodes:
+            total += base.decode_scale * base.predict_call_scalar(
+                phase="decode", toks=1, reqs=sched.max_num_seqs,
+                ctx=base.max_seq)
+        return total
+
+    base.predict_iteration = scalar_iteration
     # warm the regression fits (memoized pre-PR as well) out of the timing
     base.predict_call_scalar(phase="prefill", toks=8, reqs=1, ctx=128)
     t0 = time.perf_counter()
@@ -137,22 +171,110 @@ def bench_sim() -> Dict:
         abs(fast.predict_call(phase=p, toks=t, reqs=r, ctx=c)
             - base.predict_call_scalar(phase=p, toks=t, reqs=r, ctx=c))
         for p, t, r, c in fast._call_cache)
-    db.close()
-    return {"n_requests": SIM_REQUESTS,
-            "n_iterations": len(res_fast["iterations"]),
-            "distinct_calls": len(fast._call_cache),
-            "baseline_s": base_s, "optimized_s": fast_s,
-            "speedup": base_s / fast_s,
-            "makespan_baseline": res_base["makespan"],
-            "makespan_optimized": res_fast["makespan"],
-            "max_abs_diff_s": max_diff}
+    res = {"n_requests": SIM_REQUESTS,
+           "n_iterations": len(res_fast["iterations"]),
+           "distinct_calls": len(fast._call_cache),
+           "baseline_s": base_s, "optimized_s": fast_s,
+           "speedup": base_s / fast_s,
+           "makespan_baseline": res_base["makespan"],
+           "makespan_optimized": res_fast["makespan"],
+           "max_abs_diff_s": max_diff}
+    return res, fast, reqs
+
+
+def bench_trace(sim: "DoolySim", reqs) -> Dict:
+    """Re-predicting a recorded trace: the PR-1 per-call memoized loop vs
+    one trace-level predict_trace (both on warm caches)."""
+    plans = sim.run(reqs(), record_plans=True)["plans"]
+    loop = np.array([sim.predict_iteration(p) for p in plans])   # warm both
+    batched = sim.predict_trace(plans)
+
+    base_s = min(_timed(lambda: [sim.predict_iteration(p) for p in plans])
+                 for _ in range(TRACE_REPEATS))
+    trace_s = min(_timed(lambda: sim.predict_trace(plans))
+                  for _ in range(TRACE_REPEATS))
+    return {"n_iterations": len(plans),
+            "baseline_s": base_s, "optimized_s": trace_s,
+            "speedup": base_s / trace_s,
+            "makespan_loop": float(loop.sum()),
+            "makespan_trace": float(batched.sum()),
+            "max_abs_diff_s": float(np.abs(loop - batched).max()),
+            "makespan_abs_diff_s": abs(float(loop.sum())
+                                       - float(batched.sum()))}
+
+
+def _timed(fn) -> float:
+    t0 = time.perf_counter()
+    fn()
+    return time.perf_counter() - t0
+
+
+def _seed_warm_db(path: str):
+    """WARM_SIGS synthetic signatures, both phases, enough deterministic
+    points each to fit — a corpus-scale stand-in for a real profile DB."""
+    rng = np.random.default_rng(11)
+    rows = []
+    for i in range(WARM_SIGS):
+        sig = f"{i:064x}"
+        a, b = 2.0 + rng.uniform(0, 4), 0.05 + rng.uniform(0, 0.2)
+        for t in (16, 64, 256, 1024):
+            for r in (1, 4):
+                rows.append((sig, WARM_HW, "prefill", t, r, 0, "o",
+                             a + b * t * r + rng.uniform(0, 0.1)))
+        for c in (256, 1024, 4096):
+            for r in (1, 4):
+                rows.append((sig, WARM_HW, "decode", 1, r, c, "o",
+                             a + 0.001 * b * r * c + rng.uniform(0, 0.1)))
+    with LatencyDB(path) as db:
+        with db.transaction():
+            db.add_measurements_bulk(rows)
+    return len(rows)
+
+
+def bench_warm_start(scratch_dir: str) -> Dict:
+    """Model load: refit every ridge system from raw measurements (cold) vs
+    decoding the persisted coefficient blobs (warm), same predictions."""
+    path = os.path.join(scratch_dir, "warm.sqlite")
+    n_rows = _seed_warm_db(path)
+    sigs = [f"{i:064x}" for i in range(WARM_SIGS)]
+    points = [(64, 1, 0), (256, 4, 1024), (1, 4, 2048)]
+
+    with LatencyDB(path) as db:
+        cold_s = min(_timed(lambda: LatencyModel(
+            db, WARM_HW, use_saved_fits=False).precompile(persist=False))
+            for _ in range(3))
+        cold_lm = LatencyModel(db, WARM_HW, use_saved_fits=False)
+        cold_lm.precompile(persist=False)
+        n_persisted = cold_lm.persist_fits()
+        cold_pred = np.stack(
+            [cold_lm.predict_batch(sigs, ph, toks=t, reqs=r, ctx=c)
+             for ph in ("prefill", "decode") for t, r, c in points])
+
+    with LatencyDB(path) as db:            # reopen: warm start from disk
+        warm_s = min(_timed(lambda: LatencyModel(
+            db, WARM_HW).precompile(persist=False)) for _ in range(3))
+        warm_lm = LatencyModel(db, WARM_HW)
+        warm_lm.precompile(persist=False)
+        warm_pred = np.stack(
+            [warm_lm.predict_batch(sigs, ph, toks=t, reqs=r, ctx=c)
+             for ph in ("prefill", "decode") for t, r, c in points])
+
+    return {"n_signatures": WARM_SIGS, "n_rows": n_rows,
+            "n_persisted_fits": n_persisted,
+            "baseline_s": cold_s, "optimized_s": warm_s,
+            "speedup": cold_s / warm_s,
+            "max_abs_diff_s": float(np.abs(cold_pred - warm_pred).max()),
+            "bitwise_equal": bool((cold_pred == warm_pred).all())}
 
 
 def main(out_path: str = "BENCH_perf.json") -> Dict:
     with tempfile.TemporaryDirectory(dir=".") as scratch:
         dedup = bench_dedup(scratch)
-    sim = bench_sim()
-    res = {"dedup": dedup, "sim": sim}
+        warm = bench_warm_start(scratch)
+    sim, fast_sim, reqs = bench_sim()
+    trace = bench_trace(fast_sim, reqs)
+    fast_sim.db.close()
+    res = {"dedup": dedup, "sim": sim, "warm_start": warm, "trace": trace}
 
     print(f"# dedup DB pipeline ({dedup['n_rows']} rows, "
           f"{dedup['corpus_passes']} corpus passes)")
@@ -169,11 +291,29 @@ def main(out_path: str = "BENCH_perf.json") -> Dict:
     print(f"  makespan {sim['makespan_baseline']:.6f} -> "
           f"{sim['makespan_optimized']:.6f}, "
           f"max |scalar - vectorized| = {sim['max_abs_diff_s']:.2e} s")
+    print(f"# warm-start model load ({warm['n_signatures']} signatures, "
+          f"{warm['n_persisted_fits']} persisted fits)")
+    print(f"  refit {warm['baseline_s'] * 1e3:9.2f} ms -> load "
+          f"{warm['optimized_s'] * 1e3:9.2f} ms  ({warm['speedup']:.1f}x, "
+          f"bitwise equal: {warm['bitwise_equal']})")
+    print(f"# trace-batched prediction ({trace['n_iterations']} recorded "
+          f"iterations)")
+    print(f"  per-call loop {trace['baseline_s'] * 1e3:9.2f} ms -> "
+          f"predict_trace {trace['optimized_s'] * 1e3:9.2f} ms  "
+          f"({trace['speedup']:.1f}x)")
+    print(f"  makespan {trace['makespan_loop']:.6f} vs "
+          f"{trace['makespan_trace']:.6f}, max per-iter diff = "
+          f"{trace['max_abs_diff_s']:.2e} s")
 
     ok = (dedup["speedup"] >= 5.0 and sim["speedup"] >= 5.0
-          and sim["max_abs_diff_s"] < 1e-9 and dedup["bulk_rows_identical"])
+          and sim["max_abs_diff_s"] < 1e-9 and dedup["bulk_rows_identical"]
+          and warm["speedup"] >= 5.0 and warm["bitwise_equal"]
+          and trace["speedup"] >= 2.0
+          and trace["max_abs_diff_s"] <= 1e-9
+          and trace["makespan_abs_diff_s"] <= 1e-9)
     res["pass"] = ok
-    print(f"gates (>=5x dedup, >=5x sim, <1e-9 equivalence): "
+    print("gates (>=5x dedup, >=5x sim, <1e-9 equivalence, >=5x warm "
+          "start + bitwise, >=2x trace + <=1e-9 makespan): "
           f"{'PASS' if ok else 'FAIL'}")
     with open(out_path, "w") as f:
         json.dump(res, f, indent=2)

@@ -1,12 +1,19 @@
 """End-to-end Dooly workflow: profile two models (watch the dedup), then
-serve a trace on the real engine and predict it with DoolySim.
+serve a trace on the real engine and predict it with DoolySim, and finally
+demonstrate the warm-start path — the fitted latency model persisted in
+the DB's ``fits`` table, so a fresh process skips refitting entirely.
 
     PYTHONPATH=src python examples/profile_and_simulate.py
 """
+import os
+import tempfile
+import time
+
 import numpy as np
 
 from repro.configs import get_smoke_config
 from repro.core.database import LatencyDB
+from repro.core.latency_model import LatencyModel
 from repro.core.profiler import DoolyProf, SweepConfig
 from repro.serving.engine import Engine
 from repro.serving.scheduler import SchedulerConfig
@@ -18,8 +25,40 @@ from repro.sim.workload import sharegpt_like, synthetic
 def main():
     cfg = get_smoke_config("llama3-8b")
     cfg2 = get_smoke_config("command-r7b")
-    with LatencyDB() as db:
-        _main(cfg, cfg2, db)
+    with tempfile.TemporaryDirectory() as scratch:
+        path = os.path.join(scratch, "latency.sqlite")
+        with LatencyDB(path) as db:
+            _main(cfg, cfg2, db)
+        _warm_start_demo(cfg, path)
+
+
+def _warm_start_demo(cfg, path):
+    """Warm-start workflow: the profile run above left fitted coefficients
+    in the DB (LatencyModel writes them back on first compile), so a fresh
+    process loads them instead of re-solving the ridge systems — and a
+    recorded trace can be re-predicted in one batched call."""
+    with LatencyDB(path) as db:
+        t0 = time.perf_counter()
+        cold = LatencyModel(db, "cpu", use_saved_fits=False)
+        cold.precompile()                      # refit + persist to `fits`
+        cold_s = time.perf_counter() - t0
+    with LatencyDB(path) as db:                # simulate a fresh process
+        t0 = time.perf_counter()
+        LatencyModel(db, "cpu").precompile()   # loads stored coefficients
+        warm_s = time.perf_counter() - t0
+        print(f"model load: refit {cold_s * 1e3:.1f} ms -> warm "
+              f"{warm_s * 1e3:.1f} ms ({db.stats()['fits']} stored fits)")
+        sched = SchedulerConfig(max_num_seqs=8, max_batch_tokens=128,
+                                chunk_size=64)
+        sim = DoolySim(cfg, db, hardware="cpu", backend="xla",
+                       sched_config=sched, max_seq=256)
+        res = sim.run(sharegpt_like(20, rate=2.0, seed=4, scale=0.08,
+                                    vocab=cfg.vocab_size),
+                      record_plans=True)
+        dts = sim.predict_trace(res["plans"])  # one batched re-prediction
+        print(f"trace re-predicted in one call: {len(dts)} iterations, "
+              f"makespan {dts.sum():.4f}s (sim said "
+              f"{res['makespan']:.4f}s)")
 
 
 def _main(cfg, cfg2, db):

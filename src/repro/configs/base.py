@@ -8,7 +8,7 @@ count) come from ``ShapeSpec`` and are tainted NUM_REQS / NUM_TOKS.
 from __future__ import annotations
 
 import dataclasses
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Optional, Tuple
 
 
@@ -208,18 +208,13 @@ class ModelConfig:
         """Active params per token (MoE: top_k + shared experts only)."""
         if self.n_experts == 0:
             return self.param_count()
-        dense_expert_equiv = self.with_overrides(
-            n_experts=0, top_k=0,
-            d_ff=self.moe_d_ff * (self.top_k + self.n_shared_experts))
         # crude but standard: replace each MoE layer's experts by top_k active ones
-        total = 0
         d = self.d_model
         full = self.param_count()
         moe_layers = sum(1 for k in self.layer_kinds() if k == "moe")
         nmat = 3 if self.act == "silu" else 2
         all_experts = moe_layers * (self.n_experts + self.n_shared_experts) * nmat * d * self.moe_d_ff
         active_experts = moe_layers * (self.top_k + self.n_shared_experts) * nmat * d * self.moe_d_ff
-        del dense_expert_equiv
         return int(full - all_experts + active_experts)
 
 

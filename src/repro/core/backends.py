@@ -15,7 +15,7 @@ under either oracle — which is exactly the paper's point.
 from __future__ import annotations
 
 import time
-from typing import Any, Callable, Sequence, Tuple
+from typing import Any, Callable, Sequence
 
 import jax
 import jax.numpy as jnp

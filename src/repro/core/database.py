@@ -16,6 +16,13 @@ Read model: point lookups ride the measurements primary key
 ``measurement_map``/``lookup_measurement`` keep a read-through in-memory
 cache per (sig_hash, hardware) so replay never re-fetches or linearly
 scans the measurement list.  Writes invalidate the affected cache entries.
+
+The ``fits`` table makes the *fitted* latency model a persisted artifact:
+ridge coefficient vectors (float64 blobs) keyed by (sig_hash, hardware,
+phase), bulk-saved/loaded so a warm-started simulator skips refitting
+entirely.  Measurement writes delete the fits they invalidate, keeping the
+two tables consistent; a ``meta`` schema-version row guards against opening
+a database written by a newer schema.
 """
 from __future__ import annotations
 
@@ -50,10 +57,22 @@ CREATE TABLE IF NOT EXISTS comm_ops (
     topology TEXT NOT NULL, tp_degree INTEGER NOT NULL,
     op TEXT NOT NULL, bytes INTEGER NOT NULL, latency_us REAL NOT NULL,
     PRIMARY KEY(topology, tp_degree, op, bytes));
+CREATE TABLE IF NOT EXISTS meta (
+    key TEXT PRIMARY KEY, value TEXT NOT NULL);
+CREATE TABLE IF NOT EXISTS fits (
+    sig_hash TEXT NOT NULL, hardware TEXT NOT NULL, phase TEXT NOT NULL,
+    n_features INTEGER NOT NULL, coef BLOB NOT NULL, floor REAL NOT NULL,
+    n_points INTEGER NOT NULL,
+    PRIMARY KEY(sig_hash, hardware, phase));
 """
+
+SCHEMA_VERSION = 2
 
 # (phase, num_toks, num_reqs, ctx_len) -> latency_us
 MeasKey = Tuple[str, int, int, int]
+
+# (sig_hash, hardware, phase, n_features, coef_blob, floor, n_points)
+FitRow = Tuple[str, str, str, int, bytes, float, int]
 
 
 class LatencyDB:
@@ -65,11 +84,31 @@ class LatencyDB:
             self.conn.execute("PRAGMA journal_mode=WAL")
             self.conn.execute("PRAGMA synchronous=NORMAL")
         self.conn.executescript(_SCHEMA)
+        self._check_schema_version()
         self._txn_depth = 0
         self._meas_cache: Dict[Tuple[str, str], Dict[MeasKey, float]] = {}
         # bumped on every measurement write; readers (LatencyModel) use it
         # to invalidate their bulk-loaded snapshots
         self.measurement_generation = 0
+        # bumped on every fits-table write/delete, same contract
+        self.fit_generation = 0
+
+    def _check_schema_version(self):
+        row = self.conn.execute(
+            "SELECT value FROM meta WHERE key='schema_version'").fetchone()
+        if row is not None and int(row[0]) > SCHEMA_VERSION:
+            raise RuntimeError(
+                f"latency DB schema v{row[0]} is newer than this code "
+                f"(v{SCHEMA_VERSION})")
+        if row is None or int(row[0]) != SCHEMA_VERSION:
+            self.conn.execute(
+                "INSERT OR REPLACE INTO meta VALUES('schema_version', ?)",
+                (str(SCHEMA_VERSION),))
+
+    def schema_version(self) -> int:
+        return int(self.conn.execute(
+            "SELECT value FROM meta WHERE key='schema_version'"
+        ).fetchone()[0])
 
     # -- lifecycle ------------------------------------------------------------
 
@@ -102,6 +141,7 @@ class LatencyDB:
                 # drop any cache entries warmed from now-rolled-back rows
                 self._meas_cache.clear()
                 self.measurement_generation += 1
+                self.fit_generation += 1
             raise
         else:
             self._txn_depth -= 1
@@ -168,6 +208,7 @@ class LatencyDB:
              oracle, latency_us))
         self._meas_cache.pop((sig_hash, hardware), None)
         self.measurement_generation += 1
+        self._invalidate_fits([(sig_hash, hardware)])
 
     def add_measurements_bulk(self, rows: Sequence[Tuple]):
         """rows: (sig_hash, hardware, phase, num_toks, num_reqs, ctx_len,
@@ -179,6 +220,7 @@ class LatencyDB:
         for r in rows:
             self._meas_cache.pop((r[0], r[1]), None)
         self.measurement_generation += 1
+        self._invalidate_fits({(r[0], r[1]) for r in rows})
 
     def measurements(self, sig_hash: str, hardware: Optional[str] = None,
                      phase: Optional[str] = None) -> List[Tuple]:
@@ -202,6 +244,13 @@ class LatencyDB:
         return self.conn.execute(
             "SELECT sig_hash,phase,num_toks,num_reqs,ctx_len,latency_us "
             "FROM measurements WHERE hardware=?", (hardware,)).fetchall()
+
+    def measured_hashes(self, hardware: str) -> List[str]:
+        """Distinct signature hashes with measurements on one hardware —
+        the dedup set handed to parallel sweep workers."""
+        return [r[0] for r in self.conn.execute(
+            "SELECT DISTINCT sig_hash FROM measurements WHERE hardware=?",
+            (hardware,)).fetchall()]
 
     def measurement_map(self, sig_hash: str,
                         hardware: str) -> Dict[MeasKey, float]:
@@ -234,6 +283,43 @@ class LatencyDB:
             "SELECT op_name, spec, fingerprint, attrs FROM signatures "
             "WHERE hash=?", (sig_hash,)).fetchone()
 
+    # -- persisted fits -------------------------------------------------------
+
+    def _invalidate_fits(self, pairs: Iterable[Tuple[str, str]]):
+        """New measurements make stored coefficients stale — drop them."""
+        pairs = list(pairs)
+        if not pairs:
+            return
+        self.conn.executemany(
+            "DELETE FROM fits WHERE sig_hash=? AND hardware=?", pairs)
+        self.fit_generation += 1
+
+    def save_fits_bulk(self, rows: Sequence[FitRow]):
+        """rows: (sig_hash, hardware, phase, n_features, coef_blob, floor,
+        n_points) tuples — one executemany, like the measurement bulk path."""
+        rows = list(rows)
+        if not rows:
+            return
+        self.conn.executemany(
+            "INSERT OR REPLACE INTO fits VALUES(?,?,?,?,?,?,?)", rows)
+        self.fit_generation += 1
+
+    def load_fits(self, hardware: str) -> List[Tuple[str, str, int, bytes,
+                                                     float, int]]:
+        """All (sig_hash, phase, n_features, coef_blob, floor, n_points)
+        fits for one hardware in a single query — the warm-start path."""
+        return self.conn.execute(
+            "SELECT sig_hash,phase,n_features,coef,floor,n_points "
+            "FROM fits WHERE hardware=?", (hardware,)).fetchall()
+
+    def clear_fits(self, hardware: Optional[str] = None):
+        if hardware is None:
+            self.conn.execute("DELETE FROM fits")
+        else:
+            self.conn.execute("DELETE FROM fits WHERE hardware=?",
+                              (hardware,))
+        self.fit_generation += 1
+
     # -- communication sub-schema ---------------------------------------------
 
     def add_comm(self, topology: str, tp_degree: int, op: str, nbytes: int,
@@ -241,6 +327,14 @@ class LatencyDB:
         self.conn.execute(
             "INSERT OR REPLACE INTO comm_ops VALUES(?,?,?,?,?)",
             (topology, tp_degree, op, nbytes, latency_us))
+
+    def record_comm_bulk(self, rows: Sequence[Tuple[str, int, str, int,
+                                                    float]]):
+        """rows: (topology, tp_degree, op, bytes, latency_us) tuples,
+        written with one executemany — the comm analogue of
+        ``add_measurements_bulk`` (previously comm writes were per-row)."""
+        self.conn.executemany(
+            "INSERT OR REPLACE INTO comm_ops VALUES(?,?,?,?,?)", list(rows))
 
     def comm_latency(self, topology: str, tp_degree: int, op: str,
                      nbytes: int) -> Optional[float]:
@@ -253,7 +347,7 @@ class LatencyDB:
     def stats(self) -> Dict[str, int]:
         out = {}
         for table in ("configurations", "signatures", "model_operations",
-                      "measurements", "comm_ops"):
+                      "measurements", "comm_ops", "fits"):
             out[table] = self.conn.execute(
                 f"SELECT COUNT(*) FROM {table}").fetchone()[0]
         return out

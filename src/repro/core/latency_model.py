@@ -14,11 +14,21 @@ Measurements for the target hardware are bulk-loaded in one query on first
 use and fits are cached; ``precompile`` stacks every fitted coefficient
 vector into one matrix per phase so ``predict_batch`` evaluates all
 signatures of a model call with a single matmul instead of N scalar
-``predict`` calls.
+``predict`` calls, and ``predict_batch_points`` extends that to a whole
+trace's workload points at once (one feature matrix, one matmul).
+
+The fitted model is a first-class persisted artifact: fits computed from
+measurements are staged and written back to the DB ``fits`` table (bulk,
+one transaction), and a fresh ``LatencyModel`` on a warm database loads the
+stored coefficient blobs instead of re-solving the ridge systems —
+predictions are bitwise-identical because the float64 coefficients
+round-trip exactly.  Measurement writes invalidate the stored fits (the DB
+deletes them), so a stale warm start silently degrades to refitting.
 """
 from __future__ import annotations
 
 import math
+import sqlite3
 from dataclasses import dataclass
 from typing import Dict, List, Optional, Sequence, Tuple
 
@@ -54,6 +64,20 @@ def _features(phase: str, toks: int, reqs: int, ctx: int) -> np.ndarray:
     return np.array([1.0, t * r, t * t * r, r, c * t * r])
 
 
+def _features_matrix(phase: str, points) -> np.ndarray:
+    """Vectorized ``_features`` over an (n, 3) array of (toks, reqs, ctx)
+    workload points -> (n, d) feature matrix (same elementwise float ops as
+    the scalar path)."""
+    pts = np.asarray(points, dtype=np.float64).reshape(-1, 3)
+    t = np.maximum(pts[:, 0], 1.0)
+    r = np.maximum(pts[:, 1], 1.0)
+    c = np.maximum(pts[:, 2], 0.0)
+    one = np.ones_like(t)
+    if phase == "decode":
+        return np.stack([one, r, r * c, c], axis=1)
+    return np.stack([one, t * r, t * t * r, r, c * t * r], axis=1)
+
+
 @dataclass
 class _Fit:
     coef: Optional[np.ndarray]
@@ -70,15 +94,26 @@ class _BatchFit:
 
 
 class LatencyModel:
-    def __init__(self, db: LatencyDB, hardware: str):
+    def __init__(self, db: LatencyDB, hardware: str, *,
+                 use_saved_fits: bool = True):
         self.db = db
         self.hardware = hardware
+        self.use_saved_fits = use_saved_fits
         self._fits: Dict[Tuple[str, str], _Fit] = {}
         self._batches: Dict[Tuple[Tuple[str, ...], str], _BatchFit] = {}
         # (sig_hash, phase) -> points, bulk-loaded once per hardware
         self._points: Optional[Dict[Tuple[str, str],
                                     List[Tuple[int, int, int, float]]]] = None
         self._points_gen = -1
+        # (sig_hash, phase) -> _Fit decoded from the DB fits table
+        self._saved: Optional[Dict[Tuple[str, str], _Fit]] = None
+        self._saved_gen = -1
+        # fits computed from points this session, not yet written back
+        self._dirty: Dict[Tuple[str, str],
+                          Tuple[np.ndarray, float, int]] = {}
+        # set when a write-back fails (read-only DB): stop retrying, the
+        # fits live in memory for this session only
+        self._persist_failed = False
 
     # -- fitting -------------------------------------------------------------
 
@@ -95,10 +130,31 @@ class LatencyModel:
                 self._points.setdefault((sig, p), []).append((t, r, c, lat))
         return self._points
 
+    def _load_saved(self) -> Dict[Tuple[str, str], _Fit]:
+        """Decode the persisted coefficient blobs for this hardware (one
+        query); reloaded whenever the DB's fits table changes."""
+        gen = self.db.fit_generation
+        if self._saved is None or self._saved_gen != gen:
+            self._saved_gen = gen
+            self._saved = {}
+            for sig, phase, d, blob, floor, _n in self.db.load_fits(
+                    self.hardware):
+                if d != _N_FEATURES.get(phase) or len(blob) != 8 * d:
+                    continue        # stale row from an older feature set
+                coef = np.frombuffer(blob, dtype=np.float64).copy()
+                self._saved[(sig, phase)] = _Fit(coef, [], floor)
+        return self._saved
+
     def _fit(self, sig_hash: str, phase: str) -> _Fit:
         key = (sig_hash, phase)
-        if key in self._fits:
-            return self._fits[key]
+        fit = self._fits.get(key)
+        if fit is not None:
+            return fit
+        if self.use_saved_fits:
+            saved = self._load_saved().get(key)
+            if saved is not None:
+                self._fits[key] = saved
+                return saved
         pts = self._load_points().get(key, [])
         coef = None
         floor = 0.0
@@ -108,18 +164,53 @@ class LatencyModel:
             A = X.T @ X + RIDGE * np.eye(X.shape[1])
             coef = np.linalg.solve(A, X.T @ y)
             floor = min(lat for *_, lat in pts) * 0.05
+            self._dirty[key] = (coef, floor, len(pts))
         fit = _Fit(coef, pts, floor)
         self._fits[key] = fit
         return fit
 
-    def precompile(self, sig_hashes: Optional[Sequence[str]] = None):
-        """Fit every (signature, phase) up front.  Defaults to every
-        signature measured on this hardware."""
+    def persist_fits(self) -> int:
+        """Write fits computed this session back to the DB ``fits`` table in
+        one bulk transaction; returns the number written.  A read-only
+        database keeps them in memory only (first failure disables further
+        attempts — the rollback churn would otherwise invalidate the DB's
+        read caches on every compile)."""
+        if not self._dirty or self._persist_failed:
+            return 0
+        rows = [(sig, self.hardware, phase, int(coef.shape[0]),
+                 np.ascontiguousarray(coef, dtype=np.float64).tobytes(),
+                 float(floor), int(n))
+                for (sig, phase), (coef, floor, n) in self._dirty.items()]
+        try:
+            with self.db.transaction():
+                self.db.save_fits_bulk(rows)
+        except sqlite3.OperationalError:
+            self._persist_failed = True
+            self._dirty.clear()
+            return 0
+        if self._saved is not None:
+            for key in self._dirty:
+                self._saved[key] = self._fits[key]
+            self._saved_gen = self.db.fit_generation
+        n = len(self._dirty)
+        self._dirty.clear()
+        return n
+
+    def precompile(self, sig_hashes: Optional[Sequence[str]] = None, *,
+                   persist: bool = True):
+        """Fit every (signature, phase) up front and (by default) persist
+        freshly computed coefficients.  Defaults to every signature
+        measured on this hardware (a cheap DISTINCT query); on a warm
+        database each fit is a stored-coefficient decode instead of a
+        ridge solve, and the raw measurements are only loaded if some
+        (signature, phase) has no persisted fit."""
         if sig_hashes is None:
-            sig_hashes = sorted({s for s, _ in self._load_points()})
+            sig_hashes = sorted(self.db.measured_hashes(self.hardware))
         for sig in sig_hashes:
             for phase in ("prefill", "decode"):
                 self._fit(sig, phase)
+        if persist:
+            self.persist_fits()
 
     def _compile_batch(self, sigs: Tuple[str, ...], phase: str) -> _BatchFit:
         key = (sigs, phase)
@@ -138,6 +229,9 @@ class LatencyModel:
                     fallback.append(i)
             batch = _BatchFit(coef, floor, fallback)
             self._batches[key] = batch
+            # write-back point: simulators compile a handful of batches per
+            # lifetime, so fresh fits land in the DB without an explicit call
+            self.persist_fits()
         return batch
 
     # -- prediction ----------------------------------------------------------
@@ -147,21 +241,21 @@ class LatencyModel:
         """Predicted latency in seconds."""
         fit = self._fit(sig_hash, phase)
         if fit.coef is None:
-            return self._predict_fallback(sig_hash, phase, fit, toks, reqs)
+            return self._predict_fallback(sig_hash, phase, toks, reqs)
         y = float(fit.coef @ _features(phase, toks, reqs, ctx))
         return max(y, fit.floor, 0.0) / 1e6
 
-    def _predict_fallback(self, sig_hash: str, phase: str, fit: _Fit,
+    def _predict_fallback(self, sig_hash: str, phase: str,
                           toks: int, reqs: int) -> float:
-        if not fit.points:
+        pts = self._load_points().get((sig_hash, phase), [])
+        if not pts:
             # fall back to any phase's measurements
-            alt = self._fit(sig_hash,
-                            "prefill" if phase == "decode" else "decode")
-            if not alt.points:
+            alt = "prefill" if phase == "decode" else "decode"
+            pts = self._load_points().get((sig_hash, alt), [])
+            if not pts:
                 return 0.0
-            fit = alt
         return nearest_point_scale(
-            ((t, r, lat) for t, r, _, lat in fit.points), toks, reqs)
+            ((t, r, lat) for t, r, _, lat in pts), toks, reqs)
 
     def predict_batch(self, sig_hashes: Sequence[str], phase: str, *,
                       toks: int = 1, reqs: int = 1,
@@ -176,6 +270,25 @@ class LatencyModel:
         np.maximum(out, 0.0, out=out)
         out /= 1e6
         for i in batch.fallback:
-            out[i] = self._predict_fallback(
-                sigs[i], phase, self._fit(sigs[i], phase), toks, reqs)
+            out[i] = self._predict_fallback(sigs[i], phase, toks, reqs)
+        return out
+
+    def predict_batch_points(self, sig_hashes: Sequence[str], phase: str,
+                             points) -> np.ndarray:
+        """Predicted latency (seconds) for every signature at every workload
+        point: ``points`` is an (n, 3) array-like of (toks, reqs, ctx);
+        returns (n_points, n_sigs).  One feature matrix and one matmul for
+        the whole set — the trace-level evaluation primitive."""
+        sigs = tuple(sig_hashes)
+        batch = self._compile_batch(sigs, phase)
+        X = _features_matrix(phase, points)
+        out = np.maximum(X @ batch.coef.T, batch.floor[None, :])
+        np.maximum(out, 0.0, out=out)
+        out /= 1e6
+        if batch.fallback:
+            pts = np.asarray(points, dtype=np.int64).reshape(-1, 3)
+            for i in batch.fallback:
+                for j in range(pts.shape[0]):
+                    out[j, i] = self._predict_fallback(
+                        sigs[i], phase, int(pts[j, 0]), int(pts[j, 1]))
         return out

@@ -19,17 +19,15 @@ are kept.
 """
 from __future__ import annotations
 
-import dataclasses
 from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+from typing import Any, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax._src import core as jcore
 
-from repro.core.callgraph import CanonicalModule, Node, build_hierarchy, collapse
-from repro.core.taint import (BOT, MODEL_CONFIG, NUM_REQS, NUM_TOKS, Taint)
+from repro.core.callgraph import Node, build_hierarchy, collapse
+from repro.core.taint import NUM_REQS, NUM_TOKS, Taint
 from repro.core.tracer import TaintedTrace, TraceOp
 
 Tree = Any
@@ -198,7 +196,6 @@ def extract_subjaxpr(ops: List[TraceOp]):
     if not outvars:
         outvars = [v for v in eqns[-1].outvars
                    if not isinstance(v, jcore.DropVar)]
-    import jax.api_util as api_util
     dbg = None
     try:
         jaxpr = jcore.Jaxpr(constvars=(), invars=tuple(invars),

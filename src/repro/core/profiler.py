@@ -17,21 +17,34 @@ transaction per model (signatures, measurements, and call-graph counts via
 the bulk APIs); replay for deduplicated signatures uses the DB's cached
 point lookup, falling back to the nearest point by total token count with
 the same scaling semantics as LatencyModel.
+
+``profile_model(..., workers=N)`` parallelizes the sweep across processes:
+each worker re-traces the model, measures only the disjoint signature
+shard it owns (stable hash partition, minus signatures the parent DB
+already knows), and ships its measurement rows back; the parent then runs
+the normal profiling pass with those pre-measured latencies substituted
+for oracle calls, so reports, dedup accounting, and the one-transaction
+flush are identical to a serial run (bit-identical rows under a
+deterministic oracle).
+
+``profile_comm`` sweeps the communication sub-schema (ring-model ICI
+latencies per (topology, tp, op, bytes)) and lands all rows through
+``record_comm_bulk`` in one transaction — the comm analogue of the
+measurement bulk path.
 """
 from __future__ import annotations
 
 import re
 import time
+from concurrent.futures import ProcessPoolExecutor
 from dataclasses import dataclass, field
-from typing import Any, Dict, List, Optional, Tuple
-
-import jax
+from typing import Dict, FrozenSet, List, Optional, Tuple
 
 from repro.configs.base import ModelConfig
 from repro.core import backends as oracles
 from repro.core.database import LatencyDB
 from repro.core.latency_model import nearest_point_scale
-from repro.core.opset import Entry, ModuleEntry, OpEntry, find_runnable_set
+from repro.core.opset import ModuleEntry, OpEntry, find_runnable_set
 from repro.core.runner import ModelTrace, trace_model
 from repro.core.signature import (Signature, module_entry_signature,
                                   op_entry_signature)
@@ -56,6 +69,23 @@ class SweepConfig:
 
 QUICK_SWEEP = SweepConfig(toks=(64, 256), reqs=(1, 2), ctx=(128, 512),
                           op_points=((64, 1), (256, 1), (64, 2)))
+
+COMM_OPS = ("all-reduce", "all-gather", "reduce-scatter")
+COMM_SIZES = tuple(1 << s for s in range(17, 28, 2))   # 128 KiB .. 128 MiB
+
+
+def _sweep_shard(payload) -> List[Tuple]:
+    """ProcessPoolExecutor worker: re-trace the model and measure only the
+    signature shard this process owns, returning raw measurement rows.
+    Module-level so it pickles under the spawn start method."""
+    (cfg, backend, tp, oracle, hardware, sweep, known, shard,
+     n_shards) = payload
+    with LatencyDB() as db:
+        prof = DoolyProf(db, oracle=oracle, hardware=hardware, sweep=sweep)
+        prof._shard = (shard, n_shards)
+        prof._shard_skip = known
+        prof.profile_model(cfg, backend=backend, tp=tp)
+        return db.conn.execute("SELECT * FROM measurements").fetchall()
 
 
 @dataclass
@@ -119,12 +149,25 @@ class DoolyProf:
         self._pending_rows: List[Tuple] = []
         self._pending_sigs: Dict[str, Signature] = {}   # deduped by hash
         self._pending_index: Dict[str, Dict[Tuple, float]] = {}
+        # parallel-sweep state: shard ownership (worker side) and the
+        # pre-measured latency map substituted for oracle calls (parent side)
+        self._shard: Optional[Tuple[int, int]] = None
+        self._shard_skip: FrozenSet[str] = frozenset()
+        self._premeasured: Optional[Dict[Tuple[str, Tuple], float]] = None
 
     # ------------------------------------------------------------------
 
     def profile_model(self, cfg: ModelConfig, backend: str = "xla",
-                      tp: int = 1, trace: Optional[ModelTrace] = None
-                      ) -> ProfileReport:
+                      tp: int = 1, trace: Optional[ModelTrace] = None,
+                      workers: int = 1) -> ProfileReport:
+        if workers > 1:
+            pre = self._parallel_premeasure(cfg, backend, tp, workers)
+            prev = self._premeasured
+            self._premeasured = pre
+            try:
+                return self.profile_model(cfg, backend, tp, trace)
+            finally:
+                self._premeasured = prev
         t0 = time.time()
         # discard any staging left by a previous profile_model that raised —
         # stale pending rows would corrupt this model's dedup accounting
@@ -165,6 +208,40 @@ class DoolyProf:
                      for (sig, module), count in counts.items()])
         return report
 
+    # -- parallel sweeps ------------------------------------------------
+
+    def _parallel_premeasure(self, cfg: ModelConfig, backend: str, tp: int,
+                             workers: int) -> Dict[Tuple[str, Tuple], float]:
+        """Fan the sweep out to ``workers`` processes over disjoint
+        signature shards; merge their rows into a {(sig_hash, key):
+        latency_us} map the parent pass reads instead of measuring."""
+        import multiprocessing as mp
+        known = frozenset(self.db.measured_hashes(self.hardware))
+        payloads = [(cfg, backend, tp, self.oracle, self.hardware,
+                     self.sweep, known, i, workers) for i in range(workers)]
+        pre: Dict[Tuple[str, Tuple], float] = {}
+        # spawn, not fork: the parent holds a live jax runtime
+        with ProcessPoolExecutor(
+                max_workers=workers,
+                mp_context=mp.get_context("spawn")) as ex:
+            for rows in ex.map(_sweep_shard, payloads):
+                for sig, _hw, phase, toks, reqs, ctx, _orc, lat_us in rows:
+                    pre[(sig, (phase, toks, reqs, ctx))] = lat_us
+        return pre
+
+    def _owns(self, sig_hash: str) -> bool:
+        """Worker-side shard filter; parents own every signature."""
+        if self._shard is None:
+            return True
+        idx, n = self._shard
+        return (sig_hash not in self._shard_skip
+                and int(sig_hash, 16) % n == idx)
+
+    def _premeasured_us(self, sig_hash: str, key: Tuple) -> Optional[float]:
+        if self._premeasured is None:
+            return None
+        return self._premeasured.get((sig_hash, key))
+
     # -- staged writes --------------------------------------------------
 
     def _flush(self, op_rows):
@@ -201,6 +278,8 @@ class DoolyProf:
     def _profile_op(self, entry: OpEntry, cfg, backend, config_id
                     ) -> Optional[EntryReport]:
         sig = op_entry_signature(entry)
+        if not self._owns(sig.hash):
+            return None
         self._record_sig(sig)
         group = "linear" if entry.kind == "dot_general" else "other"
         reused = self._known(sig.hash)
@@ -212,8 +291,14 @@ class DoolyProf:
             if reused:
                 lat = self._replay(sig.hash, key)
             else:
-                lat = self._measure_op(entry, toks or None, reqs or None)
-                self._record_measurement(sig.hash, key, lat * 1e6)
+                # store the worker's exact µs value: no unit round-trip,
+                # so parallel rows are bit-identical to a serial sweep
+                lat_us = self._premeasured_us(sig.hash, key)
+                if lat_us is None:
+                    lat_us = self._measure_op(
+                        entry, toks or None, reqs or None) * 1e6
+                self._record_measurement(sig.hash, key, lat_us)
+                lat = lat_us / 1e6
             cost += lat * self.sweep.repeats
         return EntryReport(sig.hash, entry.kind, group, "", entry.count,
                            reused, cost)
@@ -224,6 +309,8 @@ class DoolyProf:
         ctx_pre = build_context(cfg, entry.context_kind, phase="prefill",
                                 backend=backend, window=window)
         sig = module_entry_signature(entry, ctx_pre)
+        if not self._owns(sig.hash):
+            return None
         self._record_sig(sig)
         reused = self._known(sig.hash)
         variant = self._variant(ctx_pre)
@@ -237,8 +324,12 @@ class DoolyProf:
                 if reused:
                     lat = self._replay(sig.hash, key)
                 else:
-                    lat = self._measure_module(mc, toks, reqs, ctx)
-                    self._record_measurement(sig.hash, key, lat * 1e6)
+                    lat_us = self._premeasured_us(sig.hash, key)
+                    if lat_us is None:
+                        lat_us = self._measure_module(
+                            mc, toks, reqs, ctx) * 1e6
+                    self._record_measurement(sig.hash, key, lat_us)
+                    lat = lat_us / 1e6
                 cost += lat * self.sweep.repeats
         return EntryReport(sig.hash, entry.context_kind, "attention"
                            if "attn" in entry.context_kind
@@ -296,6 +387,31 @@ class DoolyProf:
         if pending:
             points.update(pending)
         return self._replay_nearest(points, key)
+
+    # ------------------------------------------------------------------
+
+    def profile_comm(self, topology: str = "ici-ring",
+                     tp_degrees: Tuple[int, ...] = (2, 4, 8),
+                     ops: Tuple[str, ...] = COMM_OPS,
+                     sizes: Tuple[int, ...] = COMM_SIZES) -> int:
+        """Sweep the communication sub-schema: ring-model ICI latency per
+        (topology, tp, op, bytes), all rows landed through
+        ``record_comm_bulk`` in one transaction.  Returns the row count."""
+        rows = [(topology, tp, op, nbytes,
+                 self._comm_latency_us(op, tp, nbytes))
+                for tp in tp_degrees for op in ops for nbytes in sizes]
+        with self.db.transaction():
+            self.db.record_comm_bulk(rows)
+        return len(rows)
+
+    @staticmethod
+    def _comm_latency_us(op: str, tp: int, nbytes: int) -> float:
+        """Ring collective on the v5e ICI model: all-reduce moves
+        2(n-1)/n of the buffer per chip, gather/scatter half that, plus a
+        fixed per-collective launch latency."""
+        from repro.parallel.roofline import ICI_BW, ICI_LINKS
+        wire = (2.0 if op == "all-reduce" else 1.0) * (tp - 1) / tp
+        return 1.0 + nbytes * wire / (ICI_LINKS * ICI_BW) * 1e6
 
     @staticmethod
     def _replay_nearest(points: Dict[Tuple, float], key) -> float:

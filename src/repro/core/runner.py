@@ -12,9 +12,8 @@ collision-free prime — exactly the paper's retrace-with-different-prompt.
 """
 from __future__ import annotations
 
-import dataclasses
 from dataclasses import dataclass
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp

@@ -20,12 +20,12 @@ import hashlib
 import json
 import re
 from dataclasses import dataclass
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Dict, Tuple
 
 import jax
 
-from repro.core.opset import ModuleEntry, OpEntry, generate_inputs
-from repro.core.taint import MODEL_CONFIG, NUM_REQS, NUM_TOKS, Taint
+from repro.core.opset import ModuleEntry, OpEntry
+from repro.core.taint import MODEL_CONFIG, NUM_REQS, NUM_TOKS
 
 PROBE_TOKS = 8
 PROBE_REQS = 2

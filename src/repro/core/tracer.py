@@ -21,15 +21,13 @@ equation's source_info — the JAX analogue of ``Module.__call__`` hooks
 """
 from __future__ import annotations
 
-import dataclasses
 from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+from typing import Any, Callable, Dict, List, Sequence, Tuple
 
 import jax
-import jax.numpy as jnp
 from jax._src import core as jcore
 
-from repro.core.taint import (BOT, MODEL, REQS, TOKS, AmbiguityError, Taint,
+from repro.core.taint import (BOT, REQS, TOKS, AmbiguityError, Taint,
                               TaintRegistry, combine, merge_dims, split_mix)
 
 Tree = Any

@@ -16,7 +16,6 @@ are repeated to H per *chunk* only (a few MB), never for the full sequence.
 from __future__ import annotations
 
 import functools
-from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -224,7 +224,6 @@ def chunk_cache_attention_impl(impl: str):
 
 def selective_scan(x, dt, A, Bc, Cc, D, h0=None):
     b, s, di = x.shape
-    n = A.shape[1]
     xf, dtf = x.astype(jnp.float32), dt.astype(jnp.float32)
     Bf, Cf = Bc.astype(jnp.float32), Cc.astype(jnp.float32)
     dA = jnp.exp(dtf[..., None] * A[None, None])            # (B,S,Di,N)

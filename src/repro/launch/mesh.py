@@ -7,7 +7,6 @@ else sees the real device count.
 from __future__ import annotations
 
 import math
-from typing import Optional
 
 import jax
 

@@ -8,7 +8,7 @@ layer: the causal-conv tail (conv-1 inputs) and the SSM hidden state.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -116,8 +116,6 @@ def init_mamba_state(cfg: ModelConfig, batch: int, dtype):
 def mamba_step(p: Tree, x: jax.Array, state: Tree, cfg: ModelConfig
                ) -> Tuple[jax.Array, Tree]:
     """One-token decode.  x: (B,1,D)."""
-    b = x.shape[0]
-    kw = cfg.ssm_conv
     with jax.named_scope("mamba"):
         xz = linear(p["in_proj"], x[:, 0], "in_proj")          # (B,2Di)
         u_raw, z = jnp.split(xz, 2, axis=-1)

@@ -9,7 +9,7 @@ decode matmuls stay MXU-shaped.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Tuple
+from typing import Any, Tuple
 
 import jax
 import jax.numpy as jnp

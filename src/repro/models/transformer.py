@@ -13,7 +13,6 @@ collapses the structurally identical subtrees (paper §5.1).
 """
 from __future__ import annotations
 
-import dataclasses
 from dataclasses import dataclass
 from typing import Any, Dict, List, Optional, Tuple
 
@@ -25,11 +24,7 @@ from repro.models import attention as attn_mod
 from repro.models import mamba as mamba_mod
 from repro.models import mla as mla_mod
 from repro.models import moe as moe_mod
-from repro.models.layers import (ParamSpec, abstract_params, axes_tree,
-                                 embedding, embedding_spec, init_params, linear,
-                                 mlp, mlp_spec, rmsnorm, rmsnorm_spec,
-                                 stack_specs)
-from repro.parallel.sharding import constrain
+from repro.models.layers import (mlp, mlp_spec, rmsnorm, rmsnorm_spec)
 
 Tree = Any
 

@@ -14,7 +14,6 @@ any sweep point (ShapeDtypeStructs for the analytical oracle; call
 """
 from __future__ import annotations
 
-import dataclasses
 from dataclasses import dataclass
 from typing import Any, Callable, Dict, Optional, Tuple
 
@@ -26,7 +25,7 @@ from repro.models import attention as attn_mod
 from repro.models import mamba as mamba_mod
 from repro.models import mla as mla_mod
 from repro.models import moe as moe_mod
-from repro.models.layers import abstract_params, init_params
+from repro.models.layers import abstract_params
 
 Tree = Any
 
@@ -108,8 +107,6 @@ def build_context(cfg: ModelConfig, kind: str, *, phase: str = "prefill",
                         _sds((reqs, smax, cfg.n_kv_heads, hd), dt),
                         _sds((reqs,), jnp.int32))
         else:
-            slots = min(window, 1 << 20) if window > 0 else None
-
             def fn(p, x, k_cache, v_cache, lengths):
                 cache = {"k": k_cache, "v": v_cache}
                 out, _ = attn_mod.decode_attention(

@@ -1,7 +1,7 @@
 """Serving metrics: TTFT / TPOT / throughput + MAPE comparisons."""
 from __future__ import annotations
 
-from typing import Dict, List, Sequence
+from typing import Dict, Sequence
 
 import numpy as np
 

@@ -21,12 +21,21 @@ and power-of-two-bucketed prefill chunks draw from a tiny discrete set, so
 a long trace collapses to a handful of distinct evaluations.  The scalar
 reference path is kept as ``predict_call_scalar`` (equivalence tests and
 the perf benchmark's baseline).
+
+Whole traces batch one level higher: ``predict_trace`` flattens a list of
+iteration plans into the set of distinct workload points, evaluates every
+missing point with one feature matrix and one
+``LatencyModel.predict_batch_points`` matmul per (row group, phase), then
+assembles per-iteration latencies with ``np.bincount`` instead of a Python
+loop per call.  ``predict_iteration`` is a thin slice over it (a
+single-plan trace).  Plans may be live ``IterationPlan`` objects or the
+``(chunk_lengths, n_decodes)`` tuples that ``run(record_plans=True)``
+returns, so a recorded trace can be re-predicted without re-scheduling.
 """
 from __future__ import annotations
 
-import json
 from dataclasses import dataclass
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Dict, List, Tuple
 
 import numpy as np
 
@@ -37,6 +46,18 @@ from repro.serving.scheduler import (IterationPlan, Request, Scheduler,
                                      SchedulerConfig)
 
 _STATEFUL = ("self_attn", "cross_attn", "mla_attn", "mamba", "moe")
+
+
+def _bucket_chunks_vec(lengths: np.ndarray, chunk_size: int) -> np.ndarray:
+    """Vectorized ``engine.bucket_chunk``: smallest power-of-two bucket
+    >= length (min 8), clamped to chunk_size; lengths beyond chunk_size
+    pass through.  Exact for integer lengths (log2 of a power of two is
+    exact in float64)."""
+    c = np.maximum(lengths.astype(np.float64), 1.0)
+    b = 8.0 * np.exp2(np.ceil(np.maximum(np.log2(c / 8.0), 0.0)))
+    return np.where(lengths <= chunk_size,
+                    np.minimum(b, chunk_size),
+                    lengths).astype(np.int64)
 
 
 @dataclass
@@ -127,20 +148,106 @@ class DoolySim:
                     row.sig, "prefill", toks=t, reqs=r, ctx=0)
         return total
 
-    def predict_iteration(self, plan: IterationPlan) -> float:
+    def _normalize_plan(self, plan) -> Tuple[Tuple[int, ...], bool]:
+        """(bucketed chunk token counts, has_decodes) for an IterationPlan
+        or a recorded (chunk_lengths, n_decodes) tuple."""
         from repro.serving.engine import bucket_chunk
-        total = self.overhead_s + self.chunk_overhead_s * len(plan.prefills)
-        for chunk in plan.prefills:
-            c = chunk.length if self.cfg.ssm_state > 0 else bucket_chunk(
-                chunk.length, self.sched_config.chunk_size)
-            # the engine's chunk attention scans the whole smax-slot cache
-            total += self.predict_call(phase="prefill", toks=c,
-                                       reqs=1, ctx=self.max_seq)
-        if plan.decodes:
-            total += self.decode_scale * self.predict_call(
-                phase="decode", toks=1,
-                reqs=self.sched_config.max_num_seqs, ctx=self.max_seq)
-        return total
+        if isinstance(plan, IterationPlan):
+            lengths: Tuple[int, ...] = tuple(c.length for c in plan.prefills)
+            n_dec = len(plan.decodes)
+        else:
+            lengths, n_dec = plan
+        if self.cfg.ssm_state <= 0:
+            lengths = tuple(bucket_chunk(length,
+                                         self.sched_config.chunk_size)
+                            for length in lengths)
+        return lengths, bool(n_dec)
+
+    def _eval_calls(self, keys: List[Tuple[str, int, int, int]]):
+        """Evaluate predict_call for many (phase, toks, reqs, ctx) keys at
+        once — per row group and mapped phase, one feature matrix and one
+        predict_batch_points matmul — and memoize the totals."""
+        totals = np.zeros(len(keys))
+        for (follows_phase, lm_head), (sigs, counts) in self._groups.items():
+            by_phase: Dict[str, Tuple[List[int], List[Tuple[int, int, int]]]]
+            by_phase = {}
+            for j, (phase, toks, reqs, ctx) in enumerate(keys):
+                t = 1 if lm_head and phase == "prefill" else toks
+                if follows_phase:
+                    ph, pt = phase, (t, reqs, ctx)
+                else:
+                    ph, pt = "prefill", (t, reqs, 0)
+                idx, pts = by_phase.setdefault(ph, ([], []))
+                idx.append(j)
+                pts.append(pt)
+            for ph, (idx, pts) in by_phase.items():
+                preds = self.lm.predict_batch_points(sigs, ph, pts)
+                totals[idx] += preds @ counts
+        for j, key in enumerate(keys):
+            self._call_cache[key] = float(totals[j])
+
+    def predict_trace(self, plans) -> np.ndarray:
+        """Per-iteration predicted latency (seconds) for a whole trace of
+        plans, batched: chunk bucketing is vectorized across the flattened
+        trace, every distinct workload point is evaluated once (through the
+        memoized call cache), and per-plan sums assemble with bincount.
+        predict_iteration(p) == predict_trace([p])[0]."""
+        n = len(plans)
+        cache = self._call_cache
+        dec_key = ("decode", 1, self.sched_config.max_num_seqs, self.max_seq)
+        if n < 16:
+            # small traces (predict_iteration's single plan): plain Python
+            # keeps run()'s per-iteration cost at dict-lookup level
+            norm = [self._normalize_plan(p) for p in plans]
+            missing = sorted(
+                {("prefill", c, 1, self.max_seq)
+                 for chunks, _ in norm for c in chunks}
+                | ({dec_key} if any(d for _, d in norm) else set()))
+            missing = [k for k in missing if k not in cache]
+            if missing:
+                self._eval_calls(missing)
+            out = np.empty(n)
+            for i, (chunks, has_dec) in enumerate(norm):
+                total = self.overhead_s + self.chunk_overhead_s * len(chunks)
+                for c in chunks:
+                    total += cache[("prefill", c, 1, self.max_seq)]
+                if has_dec:
+                    total += self.decode_scale * cache[dec_key]
+                out[i] = total
+            return out
+        # flatten the whole trace, bucket once, assemble vectorized
+        counts = np.empty(n, dtype=np.intp)
+        dec = np.empty(n, dtype=np.float64)
+        raw: List[int] = []
+        for i, plan in enumerate(plans):
+            if isinstance(plan, IterationPlan):
+                lengths = [c.length for c in plan.prefills]
+                n_dec = len(plan.decodes)
+            else:
+                lengths, n_dec = plan
+            counts[i] = len(lengths)
+            dec[i] = 1.0 if n_dec else 0.0
+            raw.extend(lengths)
+        flat = np.asarray(raw, dtype=np.int64)
+        if self.cfg.ssm_state <= 0:
+            flat = _bucket_chunks_vec(flat, self.sched_config.chunk_size)
+        uniq, inv = np.unique(flat, return_inverse=True)
+        keys = [("prefill", int(c), 1, self.max_seq) for c in uniq]
+        if dec.any():
+            keys.append(dec_key)
+        missing = [k for k in keys if k not in cache]
+        if missing:
+            self._eval_calls(missing)
+        lat_uniq = np.fromiter((cache[k] for k in keys[:len(uniq)]),
+                               dtype=np.float64, count=len(uniq))
+        plan_idx = np.repeat(np.arange(n, dtype=np.intp), counts)
+        chunk_sum = np.bincount(plan_idx, weights=lat_uniq[inv], minlength=n)
+        dec_lat = cache[dec_key] if dec.any() else 0.0
+        return (self.overhead_s + self.chunk_overhead_s * counts
+                + chunk_sum + dec * (self.decode_scale * dec_lat))
+
+    def predict_iteration(self, plan: IterationPlan) -> float:
+        return float(self.predict_trace((plan,))[0])
 
     def predict_record(self, rec) -> float:
         """Model-time prediction for an engine IterationRecord (no
@@ -192,12 +299,14 @@ class DoolySim:
 
     # ------------------------------------------------------------------
 
-    def run(self, requests: List[Request]) -> Dict[str, Any]:
+    def run(self, requests: List[Request], *,
+            record_plans: bool = False) -> Dict[str, Any]:
         sched = Scheduler(self.sched_config)
         pending = sorted(requests, key=lambda r: r.arrival)
         i = 0
         clock = 0.0
         iterations = []
+        plans: List[Tuple[Tuple[int, ...], int]] = []
         while i < len(pending) or sched.has_work():
             while i < len(pending) and pending[i].arrival <= clock:
                 sched.add_request(pending[i])
@@ -212,5 +321,11 @@ class DoolySim:
             clock += dt
             sched.complete_iteration(plan, clock)
             iterations.append((clock, plan.n_tokens, dt))
-        return {"requests": requests, "iterations": iterations,
-                "makespan": clock}
+            if record_plans:
+                plans.append((tuple(c.length for c in plan.prefills),
+                              len(plan.decodes)))
+        out = {"requests": requests, "iterations": iterations,
+               "makespan": clock}
+        if record_plans:
+            out["plans"] = plans
+        return out

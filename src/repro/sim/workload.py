@@ -7,7 +7,7 @@ Scales down for the CPU smoke engine via the ``scale`` factor.
 from __future__ import annotations
 
 import math
-from typing import List, Optional
+from typing import List
 
 import numpy as np
 

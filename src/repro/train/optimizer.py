@@ -11,9 +11,8 @@ Each optimizer exposes:
 """
 from __future__ import annotations
 
-import dataclasses
 from dataclasses import dataclass
-from typing import Any, Callable, Dict
+from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -44,7 +43,8 @@ class AdamW:
     weight_decay: float = 0.1
 
     def init(self, params: Tree) -> Tree:
-        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        def zeros(p):
+            return jnp.zeros(p.shape, jnp.float32)
         return {"m": jax.tree.map(zeros, params),
                 "v": jax.tree.map(zeros, params),
                 "count": jnp.zeros((), jnp.int32)}
@@ -121,7 +121,6 @@ class Adafactor:
                 u = u + self.weight_decay * p.astype(jnp.float32)
             return ns, (p.astype(jnp.float32) - lr * u).astype(p.dtype)
 
-        is_state = lambda x: isinstance(x, dict) and ("v" in x or "vr" in x)
         flat = jax.tree.map(upd, grads, state["f"], params,
                             is_leaf=lambda x: False)
         # flat mirrors params with (ns, new_p) tuples at leaves

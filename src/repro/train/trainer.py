@@ -15,8 +15,7 @@
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Callable, Dict, Optional
+from typing import Any, Callable, Optional
 
 import jax
 import jax.numpy as jnp

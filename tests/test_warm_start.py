@@ -1,0 +1,200 @@
+"""Warm-start + trace-batching gates: persisted ridge coefficients must
+round-trip bitwise through the DB ``fits`` table, ``predict_trace`` must
+match a looped ``predict_iteration`` within 1e-9, a 2-process profiler
+sweep must produce exactly the rows a serial sweep does, and the comm
+sub-schema's bulk path must match per-row writes."""
+import importlib.util
+import os
+
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.core.database import SCHEMA_VERSION, LatencyDB
+from repro.core.latency_model import LatencyModel
+from repro.core.profiler import QUICK_SWEEP, DoolyProf
+from repro.serving.scheduler import SchedulerConfig
+from repro.sim.simulator import DoolySim
+from repro.sim.workload import sharegpt_like
+
+HW = "cpu"
+
+
+def _seed_db(db: LatencyDB):
+    """Two fitted signatures (both phases) and one under-measured one."""
+    rng = np.random.default_rng(3)
+    for i, sig in enumerate(("a" * 64, "b" * 64)):
+        for t in (8, 16, 32, 64, 128):
+            for r in (1, 2, 4):
+                db.add_measurement(sig, HW, "prefill", t, r, 0, "o",
+                                   5.0 * (i + 1) + 0.2 * t * r
+                                   + rng.uniform(0, .1))
+        for c in (64, 128, 256, 512):
+            for r in (1, 2, 4):
+                db.add_measurement(sig, HW, "decode", 1, r, c, "o",
+                                   2.0 * (i + 1) + 0.01 * r * c
+                                   + rng.uniform(0, .1))
+    db.add_measurement("c" * 64, HW, "prefill", 16, 1, 0, "o", 7.0)
+    db.add_measurement("c" * 64, HW, "prefill", 64, 1, 0, "o", 21.0)
+
+
+SIGS = ("a" * 64, "b" * 64, "c" * 64)
+POINTS = [("prefill", 16, 1, 0), ("prefill", 48, 2, 128),
+          ("decode", 1, 4, 512), ("decode", 1, 1, 96)]
+
+
+def test_fit_round_trip_bitwise(tmp_path):
+    path = str(tmp_path / "lat.sqlite")
+    with LatencyDB(path) as db:
+        _seed_db(db)
+        fresh = LatencyModel(db, HW, use_saved_fits=False)
+        fresh.precompile()                      # fits + writes them back
+        cold = [fresh.predict(s, p, toks=t, reqs=r, ctx=c)
+                for s in SIGS for p, t, r, c in POINTS]
+        assert db.stats()["fits"] == 4          # 2 fitted sigs x 2 phases
+    with LatencyDB(path) as db2:                # fresh connection: warm start
+        warm_lm = LatencyModel(db2, HW)
+        warm = [warm_lm.predict(s, p, toks=t, reqs=r, ctx=c)
+                for s in SIGS for p, t, r, c in POINTS]
+        assert cold == warm                     # bitwise, not approx
+        # the warm model decoded stored fits rather than re-solving
+        assert warm_lm._fits[("a" * 64, "prefill")] is \
+            warm_lm._load_saved()[("a" * 64, "prefill")]
+
+
+def test_predict_batch_points_matches_predict_batch():
+    db = LatencyDB()
+    _seed_db(db)
+    lm = LatencyModel(db, HW)
+    pts = [(16, 1, 0), (48, 2, 128), (128, 4, 512)]
+    for phase in ("prefill", "decode"):
+        grid = lm.predict_batch_points(SIGS, phase, pts)
+        for j, (t, r, c) in enumerate(pts):
+            single = lm.predict_batch(SIGS, phase, toks=t, reqs=r, ctx=c)
+            np.testing.assert_allclose(grid[j], single, rtol=0, atol=1e-12)
+
+
+def test_fits_invalidated_by_measurement_write():
+    db = LatencyDB()
+    _seed_db(db)
+    LatencyModel(db, HW).precompile()
+    assert db.stats()["fits"] == 4
+    db.add_measurement("a" * 64, HW, "prefill", 256, 1, 0, "o", 60.0)
+    assert db.conn.execute(
+        "SELECT COUNT(*) FROM fits WHERE sig_hash=?",
+        ("a" * 64,)).fetchone()[0] == 0
+    # a fresh model refits from the new points instead of loading stale fits
+    lm2 = LatencyModel(db, HW)
+    assert ("a" * 64, "prefill") not in lm2._load_saved()
+
+
+def test_schema_version_guard(tmp_path):
+    path = str(tmp_path / "future.sqlite")
+    with LatencyDB(path) as db:
+        db.conn.execute("INSERT OR REPLACE INTO meta VALUES"
+                        "('schema_version', ?)", (str(SCHEMA_VERSION + 1),))
+    with pytest.raises(RuntimeError):
+        LatencyDB(path)
+
+
+@pytest.fixture(scope="module")
+def profiled_sim():
+    cfg = get_smoke_config("llama3-8b")
+    db = LatencyDB()
+    DoolyProf(db, oracle="tpu_analytical", hardware="tpu-v5e",
+              sweep=QUICK_SWEEP).profile_model(cfg, backend="xla")
+    sched = SchedulerConfig(max_num_seqs=4, max_batch_tokens=64,
+                            chunk_size=32)
+    return cfg, DoolySim(cfg, db, hardware="tpu-v5e", backend="xla",
+                         sched_config=sched, max_seq=128)
+
+
+def test_predict_trace_matches_iteration_loop(profiled_sim):
+    cfg, sim = profiled_sim
+    res = sim.run(sharegpt_like(40, rate=20.0, seed=5, scale=0.05,
+                                vocab=cfg.vocab_size), record_plans=True)
+    plans = res["plans"]
+    assert len(plans) > 100
+    loop = np.array([sim.predict_iteration(p) for p in plans])
+    trace = sim.predict_trace(plans)
+    assert np.abs(loop - trace).max() <= 1e-9
+    assert abs(loop.sum() - trace.sum()) <= 1e-9      # makespan equivalence
+    # per-iteration dt recorded by run() matches the batched re-prediction
+    dts = np.array([dt for _, _, dt in res["iterations"]])
+    assert np.abs(dts - trace).max() <= 1e-9
+
+
+def test_predict_trace_small_and_large_paths_agree(profiled_sim):
+    cfg, sim = profiled_sim
+    plans = [((3,), 2), ((17, 5), 0), ((), 4), ((32,), 1)] * 8
+    large = sim.predict_trace(plans)               # >=16: vectorized path
+    small = np.concatenate(
+        [sim.predict_trace(plans[i:i + 4]) for i in range(0, len(plans), 4)])
+    assert np.abs(large - small).max() <= 1e-9
+
+
+def test_parallel_profile_rows_match_serial():
+    cfg = get_smoke_config("llama3-8b")
+    q = ("SELECT * FROM measurements ORDER BY "
+         "sig_hash, phase, num_toks, num_reqs, ctx_len")
+    with LatencyDB() as db_s:
+        DoolyProf(db_s, oracle="tpu_analytical", hardware="tpu-v5e",
+                  sweep=QUICK_SWEEP).profile_model(cfg, backend="xla")
+        serial = db_s.conn.execute(q).fetchall()
+    with LatencyDB() as db_p:
+        rep = DoolyProf(db_p, oracle="tpu_analytical", hardware="tpu-v5e",
+                        sweep=QUICK_SWEEP).profile_model(cfg, backend="xla",
+                                                         workers=2)
+        parallel = db_p.conn.execute(q).fetchall()
+    assert serial == parallel
+    assert rep.n_new > 0
+
+
+def test_comm_bulk_matches_per_row():
+    per_row, bulk = LatencyDB(), LatencyDB()
+    rows = [("ici-ring", tp, op, nbytes, 1.0 + tp * nbytes / 1e6)
+            for tp in (2, 4) for op in ("all-reduce", "all-gather")
+            for nbytes in (1 << 20, 1 << 24)]
+    for r in rows:
+        per_row.add_comm(*r)
+    bulk.record_comm_bulk(rows)
+    assert (per_row.conn.execute("SELECT * FROM comm_ops").fetchall()
+            == bulk.conn.execute("SELECT * FROM comm_ops").fetchall())
+
+
+def test_profile_comm_populates_sub_schema():
+    db = LatencyDB()
+    n = DoolyProf(db, oracle="tpu_analytical").profile_comm(
+        tp_degrees=(2, 8), sizes=(1 << 20, 1 << 24))
+    assert db.stats()["comm_ops"] == n > 0
+    small = db.comm_latency("ici-ring", 2, "all-reduce", 1 << 20)
+    big = db.comm_latency("ici-ring", 8, "all-reduce", 1 << 24)
+    assert small is not None and big is not None and big > small
+
+
+def _load_compare():
+    path = os.path.join(os.path.dirname(__file__), "..", "benchmarks",
+                        "compare.py")
+    spec = importlib.util.spec_from_file_location("bench_compare", path)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def test_compare_trajectory_gate():
+    compare = _load_compare()
+    base = {"sim": {"speedup": 10.0, "x": 1}, "pass": True}
+    ok, _ = compare.compare(base, {"sim": {"speedup": 8.0}, "pass": True})
+    assert ok == []
+    fails, _ = compare.compare(base, {"sim": {"speedup": 6.0}, "pass": True})
+    assert any("sim.speedup" in f for f in fails)
+    fails, _ = compare.compare(base, {"sim": {"speedup": 9.0},
+                                      "pass": False})
+    assert any("pass" in f for f in fails)
+    # removed section fails; new section doesn't
+    fails, _ = compare.compare(base, {"pass": True})
+    assert fails
+    ok, notes = compare.compare(
+        base, {"sim": {"speedup": 10.0}, "trace": {"speedup": 3.0},
+               "pass": True})
+    assert ok == [] and any("trace" in n for n in notes)
