@@ -22,6 +22,13 @@ purpose):
   ``predict_iteration`` loop (the PR-1 memoized path) vs one
   ``predict_trace`` over the whole plan list.  Gate: >=2x and <=1e-9
   makespan equivalence.
+* ``sweep`` — a 32-scenario configuration grid (4 models x 2 scheduler
+  configs x 4 burst workloads) evaluated by a per-scenario
+  ``DoolySim.run(via_replay=False)`` loop (fresh sim per scenario — the
+  pre-sweep way to run a config search) vs the ``repro.sweep`` engine
+  (shared scheduler replays, content-dedup, one batched prediction pass
+  per fit group).  Gates: >=3x and <=1e-9 makespan equivalence for the
+  exact-replay groups (all 32 here are exact).
 
 A gate failure raises SystemExit so the CI step goes red.
 
@@ -62,6 +69,9 @@ SIM_REQUESTS = 200
 WARM_SIGS = 256          # synthetic fitted signatures in the warm-start DB
 WARM_HW = "tpu-v5e"
 TRACE_REPEATS = 5
+
+SWEEP_MODELS = ("llama3-8b", "command-r7b", "yi-9b", "starcoder2-15b")
+SWEEP_REPEATS = 3
 
 
 def _harvest_rows() -> List[Tuple]:
@@ -203,6 +213,63 @@ def bench_trace(sim: "DoolySim", reqs) -> Dict:
                                        - float(batched.sum()))}
 
 
+def bench_sweep() -> Dict:
+    """Configuration search over a 32-scenario grid: per-scenario run()
+    loop (fresh simulator each, interleaved scalar path) vs the sweep
+    engine's shared-replay + batched-prediction path."""
+    import math
+
+    from repro.sim.replay import clone_sorted
+    from repro.sweep import SchedSpec, Sweep, WorkloadSpec, expand_grid
+
+    db = LatencyDB()
+    prof = DoolyProf(db, oracle="tpu_analytical", hardware="tpu-v5e",
+                     sweep=SIM_SWEEP)
+    cfgs = {m: get_smoke_config(m) for m in SWEEP_MODELS}
+    for m in SWEEP_MODELS:
+        prof.profile_model(cfgs[m], backend="xla")
+
+    scheds = [SchedSpec(4, 64, 32), SchedSpec(8, 128, 32)]
+    workloads = ([WorkloadSpec(kind="sharegpt", n=64, rate=math.inf,
+                               seed=7, scale=0.05)]
+                 + [WorkloadSpec(kind="synthetic", n=48, rate=math.inf,
+                                 seed=s, prompt_len=96, out_len=24)
+                    for s in (0, 1, 2)])
+    scenarios = expand_grid(SWEEP_MODELS, scheds, workloads)
+    requests = {w: w.build() for w in workloads}
+
+    def baseline():
+        out = []
+        for scn in scenarios:
+            sim = DoolySim(cfgs[scn.model], db, hardware=scn.hardware,
+                           backend=scn.backend,
+                           sched_config=scn.sched.to_config(),
+                           max_seq=scn.max_seq)
+            res = sim.run(clone_sorted(requests[scn.workload]),
+                          via_replay=False)
+            out.append(res["makespan"])
+        return out
+
+    def optimized():
+        res = Sweep(db).run(scenarios)
+        return [r.makespan for r in res.results], res.summary
+
+    base_mks = baseline()                               # warm fits
+    opt_mks, summary = optimized()
+    base_s = min(_timed(baseline) for _ in range(SWEEP_REPEATS))
+    opt_s = min(_timed(optimized) for _ in range(SWEEP_REPEATS))
+    max_diff = max(abs(a - b) for a, b in zip(base_mks, opt_mks))
+    db.close()
+    return {"n_scenarios": len(scenarios),
+            "n_models": len(SWEEP_MODELS),
+            "plan_replays": summary["plan_replays"],
+            "deduped": summary["deduped"],
+            "exact_replay": summary["exact_replay"],
+            "baseline_s": base_s, "optimized_s": opt_s,
+            "speedup": base_s / opt_s,
+            "max_makespan_diff_s": max_diff}
+
+
 def _timed(fn) -> float:
     t0 = time.perf_counter()
     fn()
@@ -274,7 +341,9 @@ def main(out_path: str = "BENCH_perf.json") -> Dict:
     sim, fast_sim, reqs = bench_sim()
     trace = bench_trace(fast_sim, reqs)
     fast_sim.db.close()
-    res = {"dedup": dedup, "sim": sim, "warm_start": warm, "trace": trace}
+    sweep = bench_sweep()
+    res = {"dedup": dedup, "sim": sim, "warm_start": warm, "trace": trace,
+           "sweep": sweep}
 
     print(f"# dedup DB pipeline ({dedup['n_rows']} rows, "
           f"{dedup['corpus_passes']} corpus passes)")
@@ -305,15 +374,28 @@ def main(out_path: str = "BENCH_perf.json") -> Dict:
           f"{trace['makespan_trace']:.6f}, max per-iter diff = "
           f"{trace['max_abs_diff_s']:.2e} s")
 
+    print(f"# scenario sweep ({sweep['n_scenarios']} scenarios, "
+          f"{sweep['n_models']} models, {sweep['plan_replays']} plan "
+          f"replays, {sweep['deduped']} deduped)")
+    print(f"  per-scenario run() {sweep['baseline_s'] * 1e3:9.2f} ms -> "
+          f"sweep engine {sweep['optimized_s'] * 1e3:9.2f} ms  "
+          f"({sweep['speedup']:.1f}x)")
+    print(f"  max exact-replay makespan diff = "
+          f"{sweep['max_makespan_diff_s']:.2e} s")
+
     ok = (dedup["speedup"] >= 5.0 and sim["speedup"] >= 5.0
           and sim["max_abs_diff_s"] < 1e-9 and dedup["bulk_rows_identical"]
           and warm["speedup"] >= 5.0 and warm["bitwise_equal"]
           and trace["speedup"] >= 2.0
           and trace["max_abs_diff_s"] <= 1e-9
-          and trace["makespan_abs_diff_s"] <= 1e-9)
+          and trace["makespan_abs_diff_s"] <= 1e-9
+          and sweep["n_scenarios"] >= 32
+          and sweep["speedup"] >= 3.0
+          and sweep["max_makespan_diff_s"] <= 1e-9)
     res["pass"] = ok
     print("gates (>=5x dedup, >=5x sim, <1e-9 equivalence, >=5x warm "
-          "start + bitwise, >=2x trace + <=1e-9 makespan): "
+          "start + bitwise, >=2x trace + <=1e-9 makespan, >=3x sweep over "
+          ">=32 scenarios + <=1e-9 exact-replay makespans): "
           f"{'PASS' if ok else 'FAIL'}")
     with open(out_path, "w") as f:
         json.dump(res, f, indent=2)

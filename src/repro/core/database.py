@@ -92,6 +92,10 @@ class LatencyDB:
         self.measurement_generation = 0
         # bumped on every fits-table write/delete, same contract
         self.fit_generation = 0
+        # shared LatencyModel instances, one per (hardware, use_saved_fits);
+        # populated by LatencyModel.shared so a scenario sweep loads each
+        # persisted fit once per database connection
+        self._lm_cache: Dict[Tuple[str, bool], object] = {}
 
     def _check_schema_version(self):
         row = self.conn.execute(
@@ -117,6 +121,7 @@ class LatencyDB:
             self.conn.close()
             self.conn = None
         self._meas_cache.clear()
+        self._lm_cache.clear()
 
     def __enter__(self) -> "LatencyDB":
         return self

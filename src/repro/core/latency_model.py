@@ -94,6 +94,23 @@ class _BatchFit:
 
 
 class LatencyModel:
+    @classmethod
+    def shared(cls, db: LatencyDB, hardware: str, *,
+               use_saved_fits: bool = True) -> "LatencyModel":
+        """One LatencyModel per (db connection, hardware), cached in the
+        DB's ``_lm_cache`` (cleared on close).  A scenario sweep constructs
+        one DoolySim per (model, hardware, backend, tp) group; routing them
+        through a shared model means each persisted fit is loaded/decoded
+        exactly once per sweep rather than once per simulator.  Generation
+        counters keep the shared instance coherent across DB writes, same
+        as a long-lived private one."""
+        key = (hardware, use_saved_fits)
+        lm = db._lm_cache.get(key)
+        if lm is None:
+            lm = db._lm_cache[key] = cls(db, hardware,
+                                         use_saved_fits=use_saved_fits)
+        return lm
+
     def __init__(self, db: LatencyDB, hardware: str, *,
                  use_saved_fits: bool = True):
         self.db = db

@@ -104,39 +104,119 @@ def generate_inputs(op: TraceOp, *, toks: Optional[int] = None,
 # runnable-set entries
 # ---------------------------------------------------------------------------
 
+_PRIM_REGISTRY: dict = {}       # primitive name -> Primitive singleton
+_PRIM_HOMES: dict = {}          # primitive name -> defining module name
+
+
+def _scan_primitives():
+    import sys
+    for mod in list(sys.modules.values()):
+        mod_name = getattr(mod, "__name__", "")
+        if not mod_name.startswith("jax"):
+            continue
+        for attr in dir(mod):
+            if attr.endswith("_p"):
+                v = getattr(mod, attr, None)
+                if isinstance(v, jcore.Primitive):
+                    _PRIM_REGISTRY.setdefault(v.name, v)
+                    _PRIM_HOMES.setdefault(v.name, mod_name)
+
+
+def primitive_home(prim: jcore.Primitive) -> Optional[str]:
+    """Name of a loaded jax module exposing a ``<name>_p`` attribute for
+    this primitive, or None.  Recorded at detach time so a worker process
+    that never traced the model can import the defining module before
+    resolving.  Backed by the same one-shot scan as ``resolve_primitive``."""
+    if prim.name not in _PRIM_HOMES:
+        _scan_primitives()
+    return _PRIM_HOMES.get(prim.name)
+
+
+def resolve_primitive(name: str, home: Optional[str] = None
+                      ) -> jcore.Primitive:
+    """Look a primitive singleton up by name in the loaded jax modules
+    (they are all registered as ``<name>_p`` attributes).  Lets a detached
+    OpEntry — shipped to a sweep worker without its live jaxpr equation —
+    re-bind the exact computation for measurement.  Misses first import
+    ``home`` (the defining module recorded at detach time, covering
+    primitives from lazily-imported jax modules) and rescan
+    ``sys.modules``."""
+    prim = _PRIM_REGISTRY.get(name)
+    if prim is None:
+        if home is not None:
+            import importlib
+            try:
+                importlib.import_module(home)
+            except ImportError:
+                pass
+        _scan_primitives()
+        prim = _PRIM_REGISTRY.get(name)
+    if prim is None:
+        raise KeyError(f"primitive {name!r} not found in loaded jax modules")
+    return prim
+
+
 @dataclass
 class OpEntry:
-    """Operator-level entry (standalone-runnable primitive)."""
+    """Operator-level entry (standalone-runnable primitive).
+
+    Normally bound through the live ``op.eqn``; a *detached* entry (see
+    ``detach_op_entry``) instead carries the full bind params in ``bind``
+    and resolves its primitive by name — the picklable form a parallel
+    profiling sweep ships to worker processes so they measure without
+    re-tracing the model."""
     kind: str                       # primitive name
     op: TraceOp
     count: int                      # occurrences across collapsed layers
     module: str                     # canonical module path
     sweepable: bool = True
+    # detached form: (prim name, full eqn params, defining module or None)
+    bind: Optional[Tuple[str, dict, Optional[str]]] = None
+
+    def _bind_spec(self):
+        eqn = self.op.eqn
+        if eqn is not None:
+            return eqn.primitive, dict(eqn.params)
+        if self.bind is None:
+            raise ValueError(f"OpEntry {self.kind!r} has neither a live "
+                             "eqn nor detached bind params")
+        name, params, home = self.bind
+        return resolve_primitive(name, home), dict(params)
+
+    def _bind_params(self, *, toks, reqs):
+        prim, params = self._bind_spec()
+        key = _SHAPE_PARAM_PRIMS.get(self.kind)
+        if key is not None and (toks is not None or reqs is not None):
+            params[key] = resize_shape(self.op.out_shapes[0],
+                                       self.op.out_taints[0],
+                                       toks=toks, reqs=reqs)
+        return prim, params
 
     def run(self, *, toks=None, reqs=None):
         args = generate_inputs(self.op, toks=toks, reqs=reqs)
-        eqn = self.op.eqn
-        params = dict(eqn.params)
-        key = _SHAPE_PARAM_PRIMS.get(self.kind)
-        if key is not None and (toks is not None or reqs is not None):
-            params[key] = resize_shape(self.op.out_shapes[0],
-                                       self.op.out_taints[0],
-                                       toks=toks, reqs=reqs)
-        return eqn.primitive.bind(*args, **params)
+        prim, params = self._bind_params(toks=toks, reqs=reqs)
+        return prim.bind(*args, **params)
 
     def jit_callable(self, *, toks=None, reqs=None):
         args = generate_inputs(self.op, toks=toks, reqs=reqs)
-        eqn = self.op.eqn
-        params = dict(eqn.params)
-        key = _SHAPE_PARAM_PRIMS.get(self.kind)
-        if key is not None and (toks is not None or reqs is not None):
-            params[key] = resize_shape(self.op.out_shapes[0],
-                                       self.op.out_taints[0],
-                                       toks=toks, reqs=reqs)
+        prim, params = self._bind_params(toks=toks, reqs=reqs)
 
         def fn(*a):
-            return eqn.primitive.bind(*a, **params)
+            return prim.bind(*a, **params)
         return fn, args
+
+
+def detach_op_entry(entry: OpEntry) -> OpEntry:
+    """Picklable copy of an OpEntry: the live jaxpr equation (which holds
+    unpicklable tracer state) is dropped and replaced by its (primitive
+    name, full params) so a spawn-started worker can rebuild the identical
+    bind.  ``run``/``jit_callable`` on the detached copy produce the same
+    lowered computation as the original."""
+    import dataclasses
+    prim, params = entry._bind_spec()
+    return dataclasses.replace(
+        entry, op=dataclasses.replace(entry.op, eqn=None),
+        bind=(prim.name, params, primitive_home(prim)))
 
 
 @dataclass

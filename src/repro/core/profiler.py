@@ -18,14 +18,19 @@ the bulk APIs); replay for deduplicated signatures uses the DB's cached
 point lookup, falling back to the nearest point by total token count with
 the same scaling semantics as LatencyModel.
 
-``profile_model(..., workers=N)`` parallelizes the sweep across processes:
-each worker re-traces the model, measures only the disjoint signature
-shard it owns (stable hash partition, minus signatures the parent DB
-already knows), and ships its measurement rows back; the parent then runs
-the normal profiling pass with those pre-measured latencies substituted
-for oracle calls, so reports, dedup accounting, and the one-transaction
-flush are identical to a serial run (bit-identical rows under a
-deterministic oracle).
+``profile_model(..., workers=N)`` parallelizes the sweep across processes
+without re-tracing the model per worker: the parent traces once, resolves
+the runnable set once, computes every signature once, and serializes a
+picklable *measurement task* per signature shard (stateful modules ship as
+(kind, window) — workers rebuild the execution context through the cached
+serving builders; operator entries ship *detached*, their live jaxpr
+equation replaced by (primitive name, full bind params)).  Workers measure
+only the disjoint shard they own (stable hash partition, minus signatures
+the parent DB already knows) and ship raw latency rows back; the parent
+then runs the normal profiling pass with those pre-measured latencies
+substituted for oracle calls, so reports, dedup accounting, and the
+one-transaction flush are identical to a serial run (bit-identical rows
+under a deterministic oracle).
 
 ``profile_comm`` sweeps the communication sub-schema (ring-model ICI
 latencies per (topology, tp, op, bytes)) and lands all rows through
@@ -38,17 +43,19 @@ import re
 import time
 from concurrent.futures import ProcessPoolExecutor
 from dataclasses import dataclass, field
-from typing import Dict, FrozenSet, List, Optional, Tuple
+from typing import Dict, List, Optional, Tuple
 
 from repro.configs.base import ModelConfig
 from repro.core import backends as oracles
 from repro.core.database import LatencyDB
 from repro.core.latency_model import nearest_point_scale
-from repro.core.opset import ModuleEntry, OpEntry, find_runnable_set
+from repro.core.opset import (ModuleEntry, OpEntry, detach_op_entry,
+                              find_runnable_set)
 from repro.core.runner import ModelTrace, trace_model
 from repro.core.signature import (Signature, module_entry_signature,
                                   op_entry_signature)
-from repro.serving.context import ModuleContext, build_context, phases_for
+from repro.serving.context import (ModuleContext, cached_build_context,
+                                   phases_for)
 
 
 def _module_of(entry) -> str:
@@ -74,18 +81,37 @@ COMM_OPS = ("all-reduce", "all-gather", "reduce-scatter")
 COMM_SIZES = tuple(1 << s for s in range(17, 28, 2))   # 128 KiB .. 128 MiB
 
 
-def _sweep_shard(payload) -> List[Tuple]:
-    """ProcessPoolExecutor worker: re-trace the model and measure only the
-    signature shard this process owns, returning raw measurement rows.
+def _measure_task_shard(payload) -> List[Tuple]:
+    """ProcessPoolExecutor worker: measure a shard of pre-traced tasks —
+    no model trace, no runnable-set resolution, no signature computation.
+    Each task is either ("module", kind, window, sig_hash) — the execution
+    context is rebuilt through the serving builders — or ("op", sig_hash,
+    entry) with a detached OpEntry.  Returns
+    (sig_hash, phase, toks, reqs, ctx, latency_us) rows.
     Module-level so it pickles under the spawn start method."""
-    (cfg, backend, tp, oracle, hardware, sweep, known, shard,
-     n_shards) = payload
+    (cfg, backend, oracle, hardware, sweep, tasks) = payload
     with LatencyDB() as db:
         prof = DoolyProf(db, oracle=oracle, hardware=hardware, sweep=sweep)
-        prof._shard = (shard, n_shards)
-        prof._shard_skip = known
-        prof.profile_model(cfg, backend=backend, tp=tp)
-        return db.conn.execute("SELECT * FROM measurements").fetchall()
+        rows: List[Tuple] = []
+        for task in tasks:
+            if task[0] == "module":
+                _, kind, window, sig_hash = task
+                for phase in phases_for(kind, cfg):
+                    mc = cached_build_context(cfg, kind, phase=phase,
+                                              backend=backend, window=window)
+                    for toks, reqs, ctx in prof._phase_points(phase):
+                        lat_us = prof._measure_module(mc, toks, reqs,
+                                                      ctx) * 1e6
+                        rows.append((sig_hash, phase, toks, reqs, ctx,
+                                     lat_us))
+            else:
+                _, sig_hash, entry = task
+                points = (sweep.op_points if entry.sweepable else ((0, 0),))
+                for toks, reqs in points:
+                    lat_us = prof._measure_op(entry, toks or None,
+                                              reqs or None) * 1e6
+                    rows.append((sig_hash, "prefill", toks, reqs, 0, lat_us))
+        return rows
 
 
 @dataclass
@@ -149,31 +175,40 @@ class DoolyProf:
         self._pending_rows: List[Tuple] = []
         self._pending_sigs: Dict[str, Signature] = {}   # deduped by hash
         self._pending_index: Dict[str, Dict[Tuple, float]] = {}
-        # parallel-sweep state: shard ownership (worker side) and the
-        # pre-measured latency map substituted for oracle calls (parent side)
-        self._shard: Optional[Tuple[int, int]] = None
-        self._shard_skip: FrozenSet[str] = frozenset()
+        # parallel-sweep state (parent side): the pre-measured latency map
+        # substituted for oracle calls, and per-entry signatures computed
+        # during task building so the main pass doesn't re-lower them
         self._premeasured: Optional[Dict[Tuple[str, Tuple], float]] = None
+        self._entry_sigs: Dict[int, Signature] = {}
 
     # ------------------------------------------------------------------
 
     def profile_model(self, cfg: ModelConfig, backend: str = "xla",
                       tp: int = 1, trace: Optional[ModelTrace] = None,
-                      workers: int = 1) -> ProfileReport:
+                      workers: int = 1,
+                      entries: Optional[List] = None) -> ProfileReport:
         if workers > 1:
-            pre = self._parallel_premeasure(cfg, backend, tp, workers)
-            prev = self._premeasured
-            self._premeasured = pre
+            # trace + resolve ONCE in the parent; workers get serialized
+            # measurement tasks instead of re-tracing the model
+            mt = trace or trace_model(cfg)
+            if entries is None:
+                entries = find_runnable_set(mt.trace)
+            pre, sigs = self._parallel_premeasure(cfg, backend, workers,
+                                                  entries)
+            prev, prev_sigs = self._premeasured, self._entry_sigs
+            self._premeasured, self._entry_sigs = pre, sigs
             try:
-                return self.profile_model(cfg, backend, tp, trace)
+                return self.profile_model(cfg, backend, tp, mt,
+                                          entries=entries)
             finally:
-                self._premeasured = prev
+                self._premeasured, self._entry_sigs = prev, prev_sigs
         t0 = time.time()
         # discard any staging left by a previous profile_model that raised —
         # stale pending rows would corrupt this model's dedup accounting
         self._clear_pending()
-        mt = trace or trace_model(cfg)
-        entries = find_runnable_set(mt.trace)
+        if entries is None:
+            mt = trace or trace_model(cfg)
+            entries = find_runnable_set(mt.trace)
         report = ProfileReport(model=cfg.name, backend=backend)
         report.trace_s = time.time() - t0
         config_id = self.db.config_id(cfg.name, backend, self.hardware, tp)
@@ -210,32 +245,65 @@ class DoolyProf:
 
     # -- parallel sweeps ------------------------------------------------
 
-    def _parallel_premeasure(self, cfg: ModelConfig, backend: str, tp: int,
-                             workers: int) -> Dict[Tuple[str, Tuple], float]:
-        """Fan the sweep out to ``workers`` processes over disjoint
-        signature shards; merge their rows into a {(sig_hash, key):
+    def _entry_tasks(self, cfg: ModelConfig, backend: str, entries: List
+                     ) -> Tuple[List[Tuple], Dict[int, Signature]]:
+        """Serialize the runnable set once: one picklable measurement task
+        per distinct signature, plus the per-entry signatures (memoized so
+        the parent's main pass reuses them instead of re-lowering)."""
+        tasks: List[Tuple] = []
+        sigs: Dict[int, Signature] = {}
+        seen: set = set()
+        for entry in entries:
+            is_module = (isinstance(entry, ModuleEntry)
+                         and entry.context_kind)
+            if is_module:
+                window = window_for_path(cfg, entry.node.path)
+                ctx_pre = cached_build_context(
+                    cfg, entry.context_kind, phase="prefill",
+                    backend=backend, window=window)
+                sig = module_entry_signature(entry, ctx_pre)
+            elif isinstance(entry, OpEntry):
+                sig = op_entry_signature(entry)
+            else:
+                continue
+            sigs[id(entry)] = sig
+            if sig.hash in seen:
+                continue        # duplicate signature: no task, no detach
+            seen.add(sig.hash)
+            tasks.append(
+                ("module", entry.context_kind, window, sig.hash)
+                if is_module else ("op", sig.hash, detach_op_entry(entry)))
+        return tasks, sigs
+
+    def _parallel_premeasure(self, cfg: ModelConfig, backend: str,
+                             workers: int, entries: List
+                             ) -> Tuple[Dict[Tuple[str, Tuple], float],
+                                        Dict[int, Signature]]:
+        """Fan the pre-traced measurement tasks out to ``workers``
+        processes over disjoint signature shards (minus signatures the
+        parent DB already knows); merge their rows into a {(sig_hash, key):
         latency_us} map the parent pass reads instead of measuring."""
         import multiprocessing as mp
         known = frozenset(self.db.measured_hashes(self.hardware))
-        payloads = [(cfg, backend, tp, self.oracle, self.hardware,
-                     self.sweep, known, i, workers) for i in range(workers)]
+        tasks, sigs = self._entry_tasks(cfg, backend, entries)
+        shards: List[List[Tuple]] = [[] for _ in range(workers)]
+        for task in tasks:
+            sig_hash = task[3] if task[0] == "module" else task[1]
+            if sig_hash in known:
+                continue
+            shards[int(sig_hash, 16) % workers].append(task)
+        payloads = [(cfg, backend, self.oracle, self.hardware, self.sweep,
+                     shard) for shard in shards if shard]
         pre: Dict[Tuple[str, Tuple], float] = {}
-        # spawn, not fork: the parent holds a live jax runtime
-        with ProcessPoolExecutor(
-                max_workers=workers,
-                mp_context=mp.get_context("spawn")) as ex:
-            for rows in ex.map(_sweep_shard, payloads):
-                for sig, _hw, phase, toks, reqs, ctx, _orc, lat_us in rows:
-                    pre[(sig, (phase, toks, reqs, ctx))] = lat_us
-        return pre
-
-    def _owns(self, sig_hash: str) -> bool:
-        """Worker-side shard filter; parents own every signature."""
-        if self._shard is None:
-            return True
-        idx, n = self._shard
-        return (sig_hash not in self._shard_skip
-                and int(sig_hash, 16) % n == idx)
+        if payloads:
+            # spawn, not fork: the parent holds a live jax runtime
+            with ProcessPoolExecutor(
+                    max_workers=workers,
+                    mp_context=mp.get_context("spawn")) as ex:
+                for rows in ex.map(_measure_task_shard, payloads):
+                    for sig, phase, toks, reqs, ctx, lat_us in rows:
+                        pre[(sig, (phase, toks, reqs, ctx))] = lat_us
+        return pre, sigs
 
     def _premeasured_us(self, sig_hash: str, key: Tuple) -> Optional[float]:
         if self._premeasured is None:
@@ -277,9 +345,7 @@ class DoolyProf:
 
     def _profile_op(self, entry: OpEntry, cfg, backend, config_id
                     ) -> Optional[EntryReport]:
-        sig = op_entry_signature(entry)
-        if not self._owns(sig.hash):
-            return None
+        sig = self._entry_sigs.get(id(entry)) or op_entry_signature(entry)
         self._record_sig(sig)
         group = "linear" if entry.kind == "dot_general" else "other"
         reused = self._known(sig.hash)
@@ -306,17 +372,17 @@ class DoolyProf:
     def _profile_stateful(self, entry: ModuleEntry, cfg, backend, config_id
                           ) -> Optional[EntryReport]:
         window = window_for_path(cfg, entry.node.path)
-        ctx_pre = build_context(cfg, entry.context_kind, phase="prefill",
-                                backend=backend, window=window)
-        sig = module_entry_signature(entry, ctx_pre)
-        if not self._owns(sig.hash):
-            return None
+        ctx_pre = cached_build_context(cfg, entry.context_kind,
+                                       phase="prefill", backend=backend,
+                                       window=window)
+        sig = (self._entry_sigs.get(id(entry))
+               or module_entry_signature(entry, ctx_pre))
         self._record_sig(sig)
         reused = self._known(sig.hash)
         variant = self._variant(ctx_pre)
         cost = 0.0
         for phase in phases_for(entry.context_kind, cfg):
-            mc = ctx_pre if phase == "prefill" else build_context(
+            mc = ctx_pre if phase == "prefill" else cached_build_context(
                 cfg, entry.context_kind, phase="decode", backend=backend,
                 window=window)
             for toks, reqs, ctx in self._phase_points(phase):

@@ -14,6 +14,7 @@ any sweep point (ShapeDtypeStructs for the analytical oracle; call
 """
 from __future__ import annotations
 
+from collections import OrderedDict
 from dataclasses import dataclass
 from typing import Any, Callable, Dict, Optional, Tuple
 
@@ -214,6 +215,36 @@ def build_context(cfg: ModelConfig, kind: str, *, phase: str = "prefill",
         return ModuleContext(kind, phase, backend, fn, params, inputs, attrs)
 
     raise KeyError(f"no execution-context builder for module kind {kind!r}")
+
+
+_CONTEXT_CACHE: "OrderedDict[Tuple, Tuple[ModelConfig, ModuleContext]]" = \
+    OrderedDict()
+CONTEXT_CACHE_SIZE = 256
+
+
+def cached_build_context(cfg: ModelConfig, kind: str, *,
+                         phase: str = "prefill", backend: str = "xla",
+                         window: int = 0) -> ModuleContext:
+    """Bounded LRU memo over ``build_context``.
+
+    A ModuleContext is pure (abstract params + jit-able closures), so
+    replay passes that revisit the same (cfg, kind, phase, backend, window)
+    — dedup_savings corpus sweeps, parallel sweep workers — can reuse both
+    the context and, because ``fn`` identity is stable, jax's own jit cache
+    for it.  Keyed by cfg *object* identity (configs are module-level
+    singletons); the cfg is held in the value so an id() can't be reused by
+    a different live config."""
+    key = (id(cfg), kind, phase, backend, window)
+    hit = _CONTEXT_CACHE.get(key)
+    if hit is not None and hit[0] is cfg:
+        _CONTEXT_CACHE.move_to_end(key)
+        return hit[1]
+    mc = build_context(cfg, kind, phase=phase, backend=backend,
+                       window=window)
+    _CONTEXT_CACHE[key] = (cfg, mc)
+    while len(_CONTEXT_CACHE) > CONTEXT_CACHE_SIZE:
+        _CONTEXT_CACHE.popitem(last=False)
+    return mc
 
 
 def phases_for(kind: str, cfg: ModelConfig) -> Tuple[str, ...]:

@@ -31,11 +31,22 @@ loop per call.  ``predict_iteration`` is a thin slice over it (a
 single-plan trace).  Plans may be live ``IterationPlan`` objects or the
 ``(chunk_lengths, n_decodes)`` tuples that ``run(record_plans=True)``
 returns, so a recorded trace can be re-predicted without re-scheduling.
+
+Since the sweep refactor, ``run`` itself is two decoupled layers: for a
+latency-independent workload (equal arrivals) it delegates scheduler
+replay to the pure ``sim.replay.replay_schedule`` and predicts the whole
+recorded trace in one ``predict_trace`` call; staggered-arrival workloads
+keep the interleaved scalar loop (admission depends on the predicted
+clock).  ``predict_traces`` extends the batching across *scenarios* — many
+traces sharing this sim's fitted model evaluate their union of workload
+points in one pass — and the module-level ``predict_scenarios`` groups
+(sim, trace) pairs by fitted model so an N-scenario sweep runs one batched
+prediction per (cfg, hardware, backend) group.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Any, Dict, List, Tuple
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -44,6 +55,7 @@ from repro.core.database import LatencyDB
 from repro.core.latency_model import LatencyModel
 from repro.serving.scheduler import (IterationPlan, Request, Scheduler,
                                      SchedulerConfig)
+from repro.sim.replay import is_latency_independent, replay_schedule
 
 _STATEFUL = ("self_attn", "cross_attn", "mla_attn", "mamba", "moe")
 
@@ -73,12 +85,14 @@ class DoolySim:
     def __init__(self, cfg: ModelConfig, db: LatencyDB, *, hardware: str,
                  backend: str, sched_config: SchedulerConfig, max_seq: int,
                  overhead_s: float = 0.0, chunk_overhead_s: float = 0.0,
-                 tp: int = 1):
+                 tp: int = 1, lm: Optional[LatencyModel] = None):
         self.cfg = cfg
         self.db = db
         self.chunk_overhead_s = chunk_overhead_s
         self.decode_scale = 1.0
-        self.lm = LatencyModel(db, hardware)
+        # a sweep passes LatencyModel.shared(db, hardware) so N scenarios
+        # on one hardware load each persisted fit exactly once
+        self.lm = lm if lm is not None else LatencyModel(db, hardware)
         self.sched_config = sched_config
         self.max_seq = max_seq
         self.overhead_s = overhead_s
@@ -249,6 +263,22 @@ class DoolySim:
     def predict_iteration(self, plan: IterationPlan) -> float:
         return float(self.predict_trace((plan,))[0])
 
+    def predict_traces(self, traces: Sequence[Sequence]) -> List[np.ndarray]:
+        """Cross-scenario batching: per-iteration latencies for *many* plan
+        traces that share this sim's fitted model.  The traces are
+        flattened into one ``predict_trace`` pass, so the union of their
+        distinct workload points is evaluated with one feature matrix and
+        one matmul per (row group, phase) — N scenarios cost one batched
+        prediction instead of N."""
+        flat = [p for trace in traces for p in trace]
+        lat = self.predict_trace(flat)
+        out: List[np.ndarray] = []
+        off = 0
+        for trace in traces:
+            out.append(lat[off:off + len(trace)])
+            off += len(trace)
+        return out
+
     def predict_record(self, rec) -> float:
         """Model-time prediction for an engine IterationRecord (no
         overhead terms) — used for calibration."""
@@ -299,8 +329,39 @@ class DoolySim:
 
     # ------------------------------------------------------------------
 
-    def run(self, requests: List[Request], *,
-            record_plans: bool = False) -> Dict[str, Any]:
+    def run(self, requests: List[Request], *, record_plans: bool = False,
+            via_replay: Optional[bool] = None) -> Dict[str, Any]:
+        """Simulate serving ``requests``.
+
+        Latency-independent workloads (equal arrivals) route through the
+        decoupled path by default: one pure ``replay_schedule`` pass, one
+        batched ``predict_trace``, times written back onto ``requests``.
+        ``via_replay`` forces the choice — ``False`` keeps the interleaved
+        scalar loop (the reference path for equivalence tests and the perf
+        benchmark's per-scenario baseline); ``True`` raises on a
+        latency-dependent workload."""
+        if via_replay is None:
+            via_replay = bool(requests) and is_latency_independent(requests)
+        if via_replay:
+            return self._run_replayed(requests, record_plans)
+        return self._run_interleaved(requests, record_plans)
+
+    def _run_replayed(self, requests: List[Request],
+                      record_plans: bool) -> Dict[str, Any]:
+        trace = replay_schedule(requests, self.sched_config)
+        lat = self.predict_trace(trace.plans)
+        clocks = trace.times(lat)
+        trace.apply(requests, lat, times=clocks)
+        iterations = [(float(clocks[i]), int(trace.n_tokens[i]),
+                       float(lat[i])) for i in range(trace.n_iterations)]
+        out = {"requests": requests, "iterations": iterations,
+               "makespan": trace.makespan(lat, times=clocks)}
+        if record_plans:
+            out["plans"] = list(trace.plans)
+        return out
+
+    def _run_interleaved(self, requests: List[Request],
+                         record_plans: bool) -> Dict[str, Any]:
         sched = Scheduler(self.sched_config)
         pending = sorted(requests, key=lambda r: r.arrival)
         i = 0
@@ -329,3 +390,24 @@ class DoolySim:
         if record_plans:
             out["plans"] = plans
         return out
+
+
+def predict_scenarios(items: Sequence[Tuple["DoolySim", Sequence]]
+                      ) -> List[np.ndarray]:
+    """Batched prediction across scenarios: ``items`` is a sequence of
+    ``(sim, plans)`` pairs.  Scenarios are grouped by sim — i.e. by fitted
+    (cfg, hardware, backend, tp) model — and each group's traces evaluate
+    together through ``DoolySim.predict_traces``, so every distinct
+    workload point in the group costs one row of one matmul regardless of
+    how many scenarios share it.  Returns per-scenario latency arrays in
+    input order."""
+    groups: Dict[int, Tuple["DoolySim", List[int], List[Sequence]]] = {}
+    for i, (sim, plans) in enumerate(items):
+        sim_, idxs, traces = groups.setdefault(id(sim), (sim, [], []))
+        idxs.append(i)
+        traces.append(plans)
+    out: List[Optional[np.ndarray]] = [None] * len(items)
+    for sim, idxs, traces in groups.values():
+        for i, lat in zip(idxs, sim.predict_traces(traces)):
+            out[i] = lat
+    return out

@@ -3,6 +3,13 @@
 ShareGPT-like: lognormal prompt/output lengths (matching the shape of the
 paper's trace: median < mean), Poisson arrivals at a target request rate.
 Scales down for the CPU smoke engine via the ``scale`` factor.
+
+``rate=math.inf`` produces a *burst* workload — every request arrives at
+t=0.  Burst workloads are latency-independent (scheduler replay never
+waits on the predicted clock), which is what lets the scenario sweep
+engine (``repro.sweep``) evaluate them by pure plan replay shared across
+models/backends.  Both generators draw lengths/content and arrivals from
+one seeded rng, so a (kind, params, seed) triple is fully reproducible.
 """
 from __future__ import annotations
 

@@ -1,0 +1,11 @@
+"""Scenario sweep engine: batch simulation across many
+(model x backend x scheduler x workload) configurations against one
+profile store — the paper's one-profile-serves-many-configurations thesis
+applied to the simulator itself (cf. AIConfigurator / Vidur config search).
+
+    PYTHONPATH=src python -m repro.sweep --help
+"""
+from repro.sweep.grid import (SchedSpec, Scenario,  # noqa: F401
+                              WorkloadSpec, expand_grid)
+from repro.sweep.runner import (ScenarioResult, Sweep,  # noqa: F401
+                                SweepResult)

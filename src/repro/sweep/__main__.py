@@ -1,0 +1,116 @@
+"""Sweep CLI: evaluate a scenario grid end-to-end against one profile
+store, profiling missing (model, backend) pairs on the fly.
+
+    PYTHONPATH=src python -m repro.sweep                       # 32-scenario default grid
+    PYTHONPATH=src python -m repro.sweep --models llama3-8b \
+        --seqs 4,8 --tokens 64,128 --rates burst,20 --json sweep.json
+
+The default grid is 2 models x 2 scheduler seq limits x 2 token budgets x
+2 workload kinds x 2 arrival rates = 32 scenarios; burst-arrival scenarios
+evaluate by exact scheduler replay (shared across models), finite-rate
+ones by the interleaved loop.  Prints per-scenario TTFT/TPOT/makespan and
+the cost/latency frontier.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import sys
+from typing import List
+
+from repro.configs import get_smoke_config
+from repro.core.database import LatencyDB
+from repro.core.profiler import DoolyProf, SweepConfig
+from repro.sweep.grid import (SchedSpec, WorkloadSpec, expand_grid,
+                              grid_summary)
+from repro.sweep.runner import Sweep
+
+PROFILE_SWEEP = SweepConfig(toks=(8, 64), reqs=(1, 2), ctx=(64, 128),
+                            op_points=((8, 1), (16, 1), (64, 1), (32, 4)))
+
+
+def _ints(s: str) -> List[int]:
+    return [int(x) for x in s.split(",") if x]
+
+
+def _rates(s: str) -> List[float]:
+    return [math.inf if x in ("burst", "inf") else float(x)
+            for x in s.split(",") if x]
+
+
+def build_parser() -> argparse.ArgumentParser:
+    p = argparse.ArgumentParser(
+        prog="python -m repro.sweep",
+        description="Batch simulation across a scenario grid")
+    p.add_argument("--models", default="llama3-8b,command-r7b",
+                   help="comma-separated config registry names")
+    p.add_argument("--backends", default="xla")
+    p.add_argument("--hardware", default="tpu-v5e")
+    p.add_argument("--oracle", default="tpu_analytical")
+    p.add_argument("--tp", type=int, default=1)
+    p.add_argument("--seqs", default="4,8", help="scheduler max_num_seqs axis")
+    p.add_argument("--tokens", default="64,128",
+                   help="scheduler max_batch_tokens axis")
+    p.add_argument("--chunks", default="32", help="prefill chunk_size axis")
+    p.add_argument("--workloads", default="sharegpt,synthetic")
+    p.add_argument("--n", type=int, default=24, help="requests per workload")
+    p.add_argument("--rates", default="burst,20",
+                   help="arrival rates; 'burst' = all at t=0 (exact replay)")
+    p.add_argument("--seeds", default="0")
+    p.add_argument("--max-seq", type=int, default=128)
+    p.add_argument("--metric", default="tpot_mean",
+                   help="frontier latency metric (a ScenarioResult field)")
+    p.add_argument("--db", default=":memory:",
+                   help="latency DB path (profiles persist across runs)")
+    p.add_argument("--json", default=None, help="write results to this path")
+    return p
+
+
+def main(argv=None) -> int:
+    args = build_parser().parse_args(argv)
+    models = [m for m in args.models.split(",") if m]
+    backends = [b for b in args.backends.split(",") if b]
+    scheds = [SchedSpec(max_num_seqs=s, max_batch_tokens=t, chunk_size=c)
+              for s in _ints(args.seqs) for t in _ints(args.tokens)
+              for c in _ints(args.chunks)]
+    workloads = [WorkloadSpec(kind=k, n=args.n, rate=r, seed=seed)
+                 for k in args.workloads.split(",") if k
+                 for r in _rates(args.rates)
+                 for seed in _ints(args.seeds)]
+    scenarios = expand_grid(models, scheds, workloads, backends=backends,
+                            hardware=args.hardware, tp=args.tp,
+                            max_seq=args.max_seq)
+    print(f"grid: {grid_summary(scenarios)}")
+
+    with LatencyDB(args.db) as db:
+        prof = DoolyProf(db, oracle=args.oracle, hardware=args.hardware,
+                         sweep=PROFILE_SWEEP)
+        for m in models:
+            cfg = get_smoke_config(m)
+            for b in backends:
+                cid = db.config_id(cfg.name, b, args.hardware, args.tp)
+                if db.model_operations(cid):
+                    continue        # already profiled into this store
+                rep = prof.profile_model(cfg, backend=b, tp=args.tp)
+                print(f"profiled {m}/{b}: {rep.n_new} new signatures, "
+                      f"{rep.n_reused} reused")
+        sweep = Sweep(db)
+        out = sweep.run(scenarios)
+
+    print(out.table(args.metric))
+    print(f"\nsummary: {out.summary}")
+    front = out.frontier(args.metric)
+    print(f"cost/latency frontier ({args.metric}):")
+    for r in front:
+        print(f"  cost {r.cost:8.3f}  {args.metric} "
+              f"{getattr(r, args.metric):.5f}  {r.scenario.label()}")
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(out.to_json(), f, indent=2)
+        print(f"wrote {args.json}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

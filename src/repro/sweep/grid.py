@@ -1,0 +1,130 @@
+"""Declarative scenario grids.
+
+A :class:`Scenario` is one fully-specified simulation: a model config (by
+registry name), an attention backend, target hardware, a scheduler config,
+a workload spec, and the sim's sequence budget.  ``expand_grid`` takes the
+axes and yields the cross product.  Everything is a frozen dataclass so
+scenarios and their projections are directly usable as memo keys:
+
+* ``plan_key``  — (workload, sched): scenarios sharing it share one pure
+  scheduler replay (the runner additionally collapses different workload
+  specs whose generated *request structure* is identical);
+* ``fit_key``   — (model, hardware, backend, tp): scenarios sharing it
+  share one fitted latency model and one batched prediction pass;
+* ``sim_key``   — everything prediction depends on: one DoolySim per key.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Dict, Iterable, List, Sequence, Tuple
+
+from repro.serving.scheduler import Request, SchedulerConfig
+from repro.sim.workload import sharegpt_like, synthetic
+
+#: burst arrival rate: every request arrives at t=0, which makes scheduler
+#: replay latency-independent (the exact-replay scenario class)
+BURST = math.inf
+
+
+@dataclass(frozen=True)
+class WorkloadSpec:
+    """Reproducible workload: generator kind + parameters + seed.
+
+    ``rate=BURST`` (infinity) produces equal arrivals — the
+    latency-independent class that sweeps evaluate by pure replay; finite
+    rates produce Poisson arrivals and fall back to the interleaved loop.
+    """
+    kind: str = "sharegpt"          # "sharegpt" | "synthetic"
+    n: int = 32
+    rate: float = BURST
+    seed: int = 0
+    scale: float = 0.05             # sharegpt length scale
+    prompt_len: int = 64            # synthetic only
+    out_len: int = 16               # synthetic only
+    vocab: int = 1000
+
+    def build(self) -> List[Request]:
+        if self.kind == "sharegpt":
+            return sharegpt_like(self.n, rate=self.rate, seed=self.seed,
+                                 scale=self.scale, vocab=self.vocab)
+        if self.kind == "synthetic":
+            return synthetic(self.n, rate=self.rate, seed=self.seed,
+                             prompt_len=self.prompt_len,
+                             out_len=self.out_len, vocab=self.vocab)
+        raise KeyError(f"unknown workload kind {self.kind!r}; "
+                       "known: sharegpt, synthetic")
+
+    def label(self) -> str:
+        rate = "burst" if math.isinf(self.rate) else f"r{self.rate:g}"
+        if self.kind == "synthetic":
+            return (f"syn[{self.prompt_len}->{self.out_len}]x{self.n}"
+                    f"@{rate}/s{self.seed}")
+        return f"sgpt[x{self.scale:g}]x{self.n}@{rate}/s{self.seed}"
+
+
+@dataclass(frozen=True)
+class SchedSpec:
+    """Hashable mirror of ``SchedulerConfig`` (which is mutable)."""
+    max_num_seqs: int = 4
+    max_batch_tokens: int = 64
+    chunk_size: int = 32
+
+    def to_config(self) -> SchedulerConfig:
+        return SchedulerConfig(max_num_seqs=self.max_num_seqs,
+                               max_batch_tokens=self.max_batch_tokens,
+                               chunk_size=self.chunk_size)
+
+    def label(self) -> str:
+        return (f"s{self.max_num_seqs}/b{self.max_batch_tokens}"
+                f"/c{self.chunk_size}")
+
+
+@dataclass(frozen=True)
+class Scenario:
+    model: str
+    sched: SchedSpec
+    workload: WorkloadSpec
+    backend: str = "xla"
+    hardware: str = "tpu-v5e"
+    tp: int = 1
+    max_seq: int = 128
+
+    @property
+    def fit_key(self) -> Tuple:
+        return (self.model, self.hardware, self.backend, self.tp)
+
+    @property
+    def plan_key(self) -> Tuple:
+        return (self.workload, self.sched)
+
+    @property
+    def sim_key(self) -> Tuple:
+        return self.fit_key + (self.sched, self.max_seq)
+
+    def label(self) -> str:
+        return (f"{self.model}/{self.backend}/{self.sched.label()}"
+                f"/{self.workload.label()}")
+
+
+def expand_grid(models: Sequence[str],
+                scheds: Sequence[SchedSpec],
+                workloads: Sequence[WorkloadSpec],
+                backends: Sequence[str] = ("xla",),
+                hardware: str = "tpu-v5e",
+                tp: int = 1,
+                max_seq: int = 128) -> List[Scenario]:
+    """Cross product of the axes, in a deterministic order (models
+    outermost so fit groups are contiguous)."""
+    return [Scenario(model=m, sched=s, workload=w, backend=b,
+                     hardware=hardware, tp=tp, max_seq=max_seq)
+            for m in models for b in backends
+            for s in scheds for w in workloads]
+
+
+def grid_summary(scenarios: Iterable[Scenario]) -> Dict[str, int]:
+    scenarios = list(scenarios)
+    return {"scenarios": len(scenarios),
+            "fit_groups": len({s.fit_key for s in scenarios}),
+            "plan_groups": len({s.plan_key for s in scenarios}),
+            "sims": len({s.sim_key for s in scenarios})}

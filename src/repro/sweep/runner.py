@@ -1,0 +1,277 @@
+"""Sweep driver: evaluate many scenarios against one profile store.
+
+The driver composes the two decoupled simulation layers:
+
+1. *Plan generation* — one pure ``replay_schedule`` per distinct
+   (request structure, scheduler config), where structure is the
+   (prompt_len, arrival, max_new_tokens) tuple sequence the scheduler
+   actually sees; scenarios differing in model / hardware / backend — or
+   in workload content that doesn't change structure — share the
+   replayed :class:`PlanTrace`.
+2. *Cross-scenario prediction* — one batched ``predict_scenarios`` pass;
+   scenarios sharing a fitted (model, hardware, backend, tp) group
+   evaluate the union of their workload points in one matmul per
+   (row group, phase), against latency models shared per hardware
+   (``LatencyModel.shared``) so persisted fits load once per sweep.
+
+Scenario classification (the latency-(in)dependence split): equal-arrival
+workloads are *exact-replay* — the replayed plans are provably the plans
+``DoolySim.run`` would schedule, so metrics come straight from
+``PlanTrace.metrics``.  Staggered-arrival workloads are *full-loop* —
+batch composition depends on the predicted clock, so each runs the
+interleaved ``DoolySim.run`` (whose per-iteration predictions still hit
+the sim's memoized call cache, shared across the group's scenarios).
+
+On top, scenarios that resolve to an identical (plan-trace content,
+sim) pair — e.g. synthetic workloads differing only in the token-content
+seed — are deduplicated: evaluated once, results shared.  That is the
+paper's redundancy-awareness applied to simulation instead of profiling.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro.core.database import LatencyDB
+from repro.core.latency_model import LatencyModel
+from repro.serving.scheduler import Request
+from repro.sim.metrics import request_metrics
+from repro.sim.replay import (PlanTrace, clone_sorted,
+                              is_latency_independent, replay_schedule)
+from repro.sim.simulator import DoolySim, predict_scenarios
+from repro.sweep.grid import Scenario, WorkloadSpec
+
+#: relative accelerator price per second, per hardware name (tp multiplies)
+DEFAULT_HW_COST = {"tpu-v5e": 1.0, "cpu": 0.1}
+
+
+@dataclass
+class ScenarioResult:
+    scenario: Scenario
+    mode: str                       # "replay" | "replay-dedup" | "loop"
+    makespan: float
+    n_iterations: int
+    ttft_mean: float
+    ttft_p50: float
+    ttft_p90: float
+    tpot_mean: float
+    tpot_p50: float
+    tpot_p90: float
+    tokens_per_s: float             # generated tokens / makespan
+    cost: float                     # accelerator-seconds x price x tp
+
+    def to_json(self) -> Dict:
+        out = {k: getattr(self, k) for k in
+               ("mode", "makespan", "n_iterations", "ttft_mean", "ttft_p50",
+                "ttft_p90", "tpot_mean", "tpot_p50", "tpot_p90",
+                "tokens_per_s", "cost")}
+        out["scenario"] = self.scenario.label()
+        return out
+
+
+@dataclass
+class SweepResult:
+    results: List[ScenarioResult]
+    summary: Dict[str, float] = field(default_factory=dict)
+
+    def frontier(self, metric: str = "tpot_mean") -> List[ScenarioResult]:
+        """Pareto frontier minimizing (cost, metric): the scenarios for
+        which no cheaper scenario is also faster."""
+        pts = sorted(self.results, key=lambda r: (r.cost,
+                                                  getattr(r, metric)))
+        out: List[ScenarioResult] = []
+        best = float("inf")
+        for r in pts:
+            v = getattr(r, metric)
+            if v < best:
+                out.append(r)
+                best = v
+        return out
+
+    def table(self, metric: str = "tpot_mean") -> str:
+        front = {id(r) for r in self.frontier(metric)}
+        head = (f"{'scenario':58s} {'mode':12s} {'makespan':>9s} "
+                f"{'ttft.p50':>9s} {'tpot.p50':>9s} {'tok/s':>8s} "
+                f"{'cost':>8s}  frontier")
+        lines = [head, "-" * len(head)]
+        for r in self.results:
+            lines.append(
+                f"{r.scenario.label():58s} {r.mode:12s} {r.makespan:9.4f} "
+                f"{r.ttft_p50:9.4f} {r.tpot_p50:9.4f} {r.tokens_per_s:8.1f} "
+                f"{r.cost:8.3f}  {'*' if id(r) in front else ''}")
+        return "\n".join(lines)
+
+    def to_json(self) -> Dict:
+        return {"summary": self.summary,
+                "results": [r.to_json() for r in self.results],
+                "frontier": [r.scenario.label() for r in self.frontier()]}
+
+
+class Sweep:
+    """Batch-evaluates scenario grids against one latency database.
+
+    ``config_fn`` resolves a scenario's model name to a ModelConfig
+    (defaults to the smoke registry — the profile store must have been
+    built with the same configs)."""
+
+    def __init__(self, db: LatencyDB, *,
+                 config_fn: Callable = get_smoke_config,
+                 hw_cost: Optional[Dict[str, float]] = None,
+                 use_saved_fits: bool = True):
+        self.db = db
+        self.config_fn = config_fn
+        self.hw_cost = dict(DEFAULT_HW_COST if hw_cost is None else hw_cost)
+        self.use_saved_fits = use_saved_fits
+        self._requests: Dict[WorkloadSpec, List[Request]] = {}
+        self._struct_keys: Dict[WorkloadSpec, Tuple] = {}
+        self._traces: Dict[Tuple, PlanTrace] = {}
+        self._trace_keys: Dict[int, Tuple] = {}     # id(trace) -> content key
+        self._sims: Dict[Tuple, DoolySim] = {}
+
+    # -- memoized layers ------------------------------------------------
+
+    def requests(self, spec: WorkloadSpec) -> List[Request]:
+        """Pristine request list per workload spec (consumers must clone
+        before mutating — ``replay_schedule`` and the loop path both do)."""
+        reqs = self._requests.get(spec)
+        if reqs is None:
+            reqs = self._requests[spec] = spec.build()
+        return reqs
+
+    def _structure_key(self, spec: WorkloadSpec) -> Tuple:
+        """Scheduling only sees request *structure* — lengths, arrivals,
+        output budgets — never token content, so workload specs generating
+        structurally identical requests (e.g. synthetic loads differing
+        only in the content seed) can share one replay."""
+        key = self._struct_keys.get(spec)
+        if key is None:
+            key = tuple((r.prompt_len, r.arrival, r.max_new_tokens)
+                        for r in self.requests(spec))
+            self._struct_keys[spec] = key
+        return key
+
+    def plan_trace(self, scn: Scenario) -> PlanTrace:
+        """One scheduler replay per (request structure, sched config);
+        shared by every scenario whose workload schedules identically."""
+        tkey = (self._structure_key(scn.workload), scn.sched)
+        trace = self._traces.get(tkey)
+        if trace is None:
+            trace = replay_schedule(self.requests(scn.workload),
+                                    scn.sched.to_config())
+            self._traces[tkey] = trace
+        return trace
+
+    def _trace_content_key(self, trace: PlanTrace) -> Tuple:
+        key = self._trace_keys.get(id(trace))
+        if key is None:
+            key = self._trace_keys[id(trace)] = trace.content_key()
+        return key
+
+    def sim(self, scn: Scenario) -> DoolySim:
+        """One DoolySim per sim_key, all sims on one hardware sharing one
+        LatencyModel so each persisted fit loads exactly once."""
+        sim = self._sims.get(scn.sim_key)
+        if sim is None:
+            cfg = self.config_fn(scn.model)
+            sim = DoolySim(
+                cfg, self.db, hardware=scn.hardware, backend=scn.backend,
+                sched_config=scn.sched.to_config(), max_seq=scn.max_seq,
+                tp=scn.tp,
+                lm=LatencyModel.shared(self.db, scn.hardware,
+                                       use_saved_fits=self.use_saved_fits))
+            if not sim.rows:
+                raise RuntimeError(
+                    f"no call-graph rows for ({scn.model}, {scn.backend}, "
+                    f"{scn.hardware}, tp={scn.tp}) — profile the model "
+                    "into this database first")
+            self._sims[scn.sim_key] = sim
+        return sim
+
+    # -- evaluation -----------------------------------------------------
+
+    def _cost(self, scn: Scenario, makespan: float) -> float:
+        return self.hw_cost.get(scn.hardware, 1.0) * scn.tp * makespan
+
+    def _result(self, scn: Scenario, mode: str, makespan: float,
+                n_iterations: int, met: Dict[str, np.ndarray]
+                ) -> ScenarioResult:
+        ttft, tpot = met["ttft"], met["tpot"]
+        n_generated = int(met["_n_generated"])
+        return ScenarioResult(
+            scenario=scn, mode=mode, makespan=makespan,
+            n_iterations=n_iterations,
+            ttft_mean=float(ttft.mean()) if len(ttft) else 0.0,
+            ttft_p50=float(np.percentile(ttft, 50)) if len(ttft) else 0.0,
+            ttft_p90=float(np.percentile(ttft, 90)) if len(ttft) else 0.0,
+            tpot_mean=float(tpot.mean()) if len(tpot) else 0.0,
+            tpot_p50=float(np.percentile(tpot, 50)) if len(tpot) else 0.0,
+            tpot_p90=float(np.percentile(tpot, 90)) if len(tpot) else 0.0,
+            tokens_per_s=n_generated / makespan if makespan > 0 else 0.0,
+            cost=self._cost(scn, makespan))
+
+    def run(self, scenarios: Sequence[Scenario]) -> SweepResult:
+        scenarios = list(scenarios)
+        t0 = time.perf_counter()
+        results: List[Optional[ScenarioResult]] = [None] * len(scenarios)
+
+        # classify: exact-replay (latency-independent) vs full-loop.
+        # used_* track THIS run's distinct traces/sims — the memos persist
+        # across run() calls, so their sizes would overcount on reuse.
+        exact_groups: Dict[Tuple, List[int]] = {}
+        loop_idx: List[int] = []
+        used_traces: set = set()
+        for i, scn in enumerate(scenarios):
+            if is_latency_independent(self.requests(scn.workload)):
+                trace = self.plan_trace(scn)
+                used_traces.add(id(trace))
+                key = (self._trace_content_key(trace), scn.sim_key)
+                exact_groups.setdefault(key, []).append(i)
+            else:
+                loop_idx.append(i)
+
+        # one batched prediction pass over the deduplicated exact jobs,
+        # grouped by fitted model inside predict_scenarios
+        jobs = [(self.sim(scenarios[idxs[0]]),
+                 self.plan_trace(scenarios[idxs[0]]))
+                for idxs in exact_groups.values()]
+        lats = predict_scenarios([(sim, trace.plans)
+                                  for sim, trace in jobs])
+        for (key, idxs), (sim, trace), lat in zip(exact_groups.items(),
+                                                  jobs, lats):
+            clocks = trace.times(lat)
+            met = trace.metrics(lat, times=clocks)
+            met["_n_generated"] = int(trace.generated.sum())
+            makespan = trace.makespan(lat, times=clocks)
+            for j, i in enumerate(idxs):
+                results[i] = self._result(
+                    scenarios[i], "replay" if j == 0 else "replay-dedup",
+                    makespan, trace.n_iterations, met)
+
+        # full-loop scenarios: per-scenario interleaved run (predictions
+        # still batched per iteration and memoized per fit group)
+        for i in loop_idx:
+            scn = scenarios[i]
+            sim = self.sim(scn)
+            res = sim.run(clone_sorted(self.requests(scn.workload)),
+                          via_replay=False)
+            met = request_metrics(res["requests"])
+            met["_n_generated"] = sum(r.generated for r in res["requests"])
+            results[i] = self._result(scn, "loop", res["makespan"],
+                                      len(res["iterations"]), met)
+
+        n_dedup = sum(len(idxs) - 1 for idxs in exact_groups.values())
+        summary = {
+            "scenarios": len(scenarios),
+            "exact_replay": sum(len(v) for v in exact_groups.values()),
+            "full_loop": len(loop_idx),
+            "deduped": n_dedup,
+            "plan_replays": len(used_traces),
+            "sims": len({s.sim_key for s in scenarios}),
+            "fit_groups": len({s.fit_key for s in scenarios}),
+            "elapsed_s": time.perf_counter() - t0,
+        }
+        return SweepResult(results=list(results), summary=summary)

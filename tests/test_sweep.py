@@ -1,0 +1,237 @@
+"""Scenario sweep engine gates.
+
+The load-bearing guarantee: for *exact-replay* scenario groups
+(latency-independent workloads), the sweep's replayed makespan must equal
+the scalar per-scenario ``DoolySim.run`` path within 1e-9 — the plan
+generation / latency prediction decoupling must not change the answer.
+Plus: classification (exact-replay vs full-loop), cross-spec dedup,
+cross-scenario prediction batching, replay purity, the bounded
+build_context memo, detached op entries, and the CLI.
+"""
+import math
+import pickle
+
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.core import backends as oracles
+from repro.core.database import LatencyDB
+from repro.core.latency_model import LatencyModel
+from repro.core.profiler import QUICK_SWEEP, DoolyProf
+from repro.serving.scheduler import SchedulerConfig
+from repro.sim.replay import is_latency_independent, replay_schedule
+from repro.sim.simulator import DoolySim, predict_scenarios
+from repro.sim.workload import sharegpt_like
+from repro.sweep import SchedSpec, Scenario, Sweep, WorkloadSpec, expand_grid
+
+HW = "tpu-v5e"
+MODELS = ("llama3-8b", "command-r7b")
+
+
+@pytest.fixture(scope="module")
+def profiled_db():
+    db = LatencyDB()
+    prof = DoolyProf(db, oracle="tpu_analytical", hardware=HW,
+                     sweep=QUICK_SWEEP)
+    for m in MODELS:
+        prof.profile_model(get_smoke_config(m), backend="xla")
+    return db
+
+
+def _grid(n=16):
+    """Mixed grid: half burst (exact replay), half Poisson (full loop)."""
+    scheds = [SchedSpec(max_num_seqs=4, max_batch_tokens=64, chunk_size=32),
+              SchedSpec(max_num_seqs=8, max_batch_tokens=64, chunk_size=32)]
+    workloads = [WorkloadSpec(kind="sharegpt", n=12, rate=math.inf, seed=0),
+                 WorkloadSpec(kind="sharegpt", n=12, rate=20.0, seed=0)]
+    return expand_grid(MODELS, scheds, workloads, hardware=HW)[:n]
+
+
+def test_exact_replay_matches_scalar_run(profiled_db):
+    """Tentpole gate: exact-replay makespans == per-scenario scalar-loop
+    DoolySim.run within 1e-9, TTFT/TPOT as well."""
+    scenarios = _grid()
+    out = Sweep(profiled_db).run(scenarios)
+    from repro.sim.metrics import request_metrics
+    for scn, res in zip(scenarios, out.results):
+        sim = DoolySim(get_smoke_config(scn.model), profiled_db,
+                       hardware=scn.hardware, backend=scn.backend,
+                       sched_config=scn.sched.to_config(),
+                       max_seq=scn.max_seq)
+        ref = sim.run(scn.workload.build(), via_replay=False)
+        assert abs(res.makespan - ref["makespan"]) <= 1e-9, scn.label()
+        met = request_metrics(ref["requests"])
+        assert abs(res.ttft_p50 - np.percentile(met["ttft"], 50)) <= 1e-9
+        assert abs(res.tpot_p50 - np.percentile(met["tpot"], 50)) <= 1e-9
+        assert res.n_iterations == len(ref["iterations"])
+
+
+def test_classification_and_sharing(profiled_db):
+    scenarios = _grid()
+    sweep = Sweep(profiled_db)
+    out = sweep.run(scenarios)
+    # summary counters are per-run, not cumulative memo sizes
+    again = sweep.run(scenarios)
+    assert {k: v for k, v in again.summary.items() if k != "elapsed_s"} \
+        == {k: v for k, v in out.summary.items() if k != "elapsed_s"}
+    modes = [r.mode for r in out.results]
+    assert len(modes) == 8          # 2 models x 2 scheds x 2 workloads
+    assert modes.count("loop") == 4                 # finite-rate workloads
+    assert sum(m.startswith("replay") for m in modes) == 4
+    # 2 models x (2 scheds x 1 burst workload) share 2 plan replays
+    assert out.summary["plan_replays"] == 2
+    assert out.summary["fit_groups"] == 2
+    assert out.summary["exact_replay"] == 4
+    assert out.summary["full_loop"] == 4
+
+
+def test_dedup_identical_plan_traces(profiled_db):
+    """Synthetic workloads differing only in content seed schedule
+    identically -> evaluated once, shared results."""
+    sched = SchedSpec()
+    w0 = WorkloadSpec(kind="synthetic", n=8, rate=math.inf, seed=0,
+                      prompt_len=48, out_len=8)
+    w9 = WorkloadSpec(kind="synthetic", n=8, rate=math.inf, seed=9,
+                      prompt_len=48, out_len=8)
+    scenarios = [Scenario(model=MODELS[0], sched=sched, workload=w,
+                          hardware=HW) for w in (w0, w9)]
+    out = Sweep(profiled_db).run(scenarios)
+    assert out.summary["deduped"] == 1
+    assert [r.mode for r in out.results] == ["replay", "replay-dedup"]
+    assert out.results[0].makespan == out.results[1].makespan
+    assert out.results[0].ttft_mean == out.results[1].ttft_mean
+
+
+def test_predict_scenarios_matches_per_trace(profiled_db):
+    sched = SchedulerConfig(max_num_seqs=4, max_batch_tokens=64,
+                            chunk_size=32)
+    sims = [DoolySim(get_smoke_config(m), profiled_db, hardware=HW,
+                     backend="xla", sched_config=sched, max_seq=128)
+            for m in MODELS]
+    traces = [replay_schedule(
+        sharegpt_like(10, rate=math.inf, seed=s, scale=0.05), sched)
+        for s in (0, 1)]
+    items = [(sim, tr.plans) for sim in sims for tr in traces]
+    batched = predict_scenarios(items)
+    for (sim, plans), lat in zip(items, batched):
+        ref = DoolySim(sim.cfg, profiled_db, hardware=HW, backend="xla",
+                       sched_config=sched, max_seq=128).predict_trace(plans)
+        assert np.abs(lat - ref).max() <= 1e-9
+
+
+def test_replay_schedule_is_pure():
+    reqs = sharegpt_like(10, rate=math.inf, seed=3, scale=0.05)
+    before = [(r.prefilled, r.generated, r.first_token_t, r.finish_t,
+               list(r.token_times)) for r in reqs]
+    t1 = replay_schedule(reqs, SchedulerConfig(4, 64, 32))
+    t2 = replay_schedule(reqs, SchedulerConfig(4, 64, 32))
+    after = [(r.prefilled, r.generated, r.first_token_t, r.finish_t,
+              list(r.token_times)) for r in reqs]
+    assert before == after                          # no mutation
+    assert t1.content_key() == t2.content_key()
+    assert t1.plans and t1.n_iterations == len(t1.plans)
+
+
+def test_replay_schedule_rejects_latency_dependent():
+    reqs = sharegpt_like(10, rate=5.0, seed=3)
+    assert not is_latency_independent(reqs)
+    with pytest.raises(ValueError):
+        replay_schedule(reqs, SchedulerConfig(4, 64, 32))
+
+
+def test_run_replay_path_equivalent_to_interleaved(profiled_db):
+    cfg = get_smoke_config(MODELS[0])
+    sched = SchedulerConfig(max_num_seqs=4, max_batch_tokens=64,
+                            chunk_size=32)
+    sim = DoolySim(cfg, profiled_db, hardware=HW, backend="xla",
+                   sched_config=sched, max_seq=128)
+    gen = lambda: sharegpt_like(15, rate=math.inf, seed=6, scale=0.05)
+    a = sim.run(gen(), record_plans=True)                 # auto: replay
+    b = sim.run(gen(), via_replay=False, record_plans=True)
+    assert a["plans"] == b["plans"]
+    assert abs(a["makespan"] - b["makespan"]) <= 1e-9
+    ra = sorted(a["requests"], key=lambda r: r.rid)
+    rb = sorted(b["requests"], key=lambda r: r.rid)
+    for x, y in zip(ra, rb):
+        assert x.generated == y.generated
+        assert abs(x.first_token_t - y.first_token_t) <= 1e-9
+        assert abs(x.finish_t - y.finish_t) <= 1e-9
+        assert np.abs(np.array(x.token_times)
+                      - np.array(y.token_times)).max() <= 1e-9
+
+
+def test_run_replay_handles_duplicate_rids(profiled_db):
+    """Concatenated workloads carry duplicate rids; replay must key token
+    events by request identity, matching the interleaved loop."""
+    cfg = get_smoke_config(MODELS[0])
+    sched = SchedulerConfig(max_num_seqs=4, max_batch_tokens=64,
+                            chunk_size=32)
+    sim = DoolySim(cfg, profiled_db, hardware=HW, backend="xla",
+                   sched_config=sched, max_seq=128)
+    gen = lambda: (sharegpt_like(6, rate=math.inf, seed=0, scale=0.05)
+                   + sharegpt_like(6, rate=math.inf, seed=1, scale=0.05))
+    a = sim.run(gen())                                    # auto: replay
+    b = sim.run(gen(), via_replay=False)
+    assert abs(a["makespan"] - b["makespan"]) <= 1e-9
+    for x, y in zip(a["requests"], b["requests"]):
+        assert x.generated == y.generated == x.max_new_tokens
+        assert abs(x.first_token_t - y.first_token_t) <= 1e-9
+        assert abs(x.finish_t - y.finish_t) <= 1e-9
+
+
+def test_shared_latency_model_is_cached():
+    db = LatencyDB()
+    a = LatencyModel.shared(db, HW)
+    b = LatencyModel.shared(db, HW)
+    c = LatencyModel.shared(db, "other-hw")
+    assert a is b and a is not c
+
+
+def test_build_context_cache_bounded_and_keyed():
+    from repro.serving import context as C
+    cfg = get_smoke_config(MODELS[0])
+    C._CONTEXT_CACHE.clear()
+    a = C.cached_build_context(cfg, "self_attn", phase="prefill")
+    b = C.cached_build_context(cfg, "self_attn", phase="prefill")
+    c = C.cached_build_context(cfg, "self_attn", phase="decode")
+    assert a is b and a is not c
+    old = C.CONTEXT_CACHE_SIZE
+    try:
+        C.CONTEXT_CACHE_SIZE = 2
+        C.cached_build_context(cfg, "self_attn", phase="prefill", window=64)
+        assert len(C._CONTEXT_CACHE) <= 2
+    finally:
+        C.CONTEXT_CACHE_SIZE = old
+
+
+def test_detached_op_entry_pickles_and_measures_identically():
+    from repro.core.opset import OpEntry, detach_op_entry, find_runnable_set
+    from repro.core.runner import trace_model
+    cfg = get_smoke_config(MODELS[0])
+    entries = [e for e in find_runnable_set(trace_model(cfg).trace)
+               if isinstance(e, OpEntry)]
+    assert entries
+    for entry in entries[:3]:
+        detached = pickle.loads(pickle.dumps(detach_op_entry(entry)))
+        assert detached.op.eqn is None
+        fn0, args0 = entry.jit_callable(toks=8, reqs=2)
+        fn1, args1 = detached.jit_callable(toks=8, reqs=2)
+        assert (oracles.measure("tpu_analytical", fn0, args0)
+                == oracles.measure("tpu_analytical", fn1, args1))
+
+
+def test_sweep_cli_smoke(tmp_path, capsys):
+    from repro.sweep.__main__ import main
+    json_path = tmp_path / "sweep.json"
+    rc = main(["--models", MODELS[0], "--seqs", "4", "--tokens", "64",
+               "--n", "6", "--rates", "burst,20", "--seeds", "0",
+               "--db", str(tmp_path / "lat.sqlite"),
+               "--json", str(json_path)])
+    assert rc == 0
+    out = capsys.readouterr().out
+    assert "frontier" in out and json_path.exists()
+    import json
+    data = json.loads(json_path.read_text())
+    assert data["summary"]["scenarios"] == 4
+    assert len(data["results"]) == 4
