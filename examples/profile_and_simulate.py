@@ -1,25 +1,32 @@
-"""End-to-end Dooly workflow: profile two models (watch the dedup), then
-serve a trace on the real engine and predict it with DoolySim, and finally
-demonstrate the warm-start path — the fitted latency model persisted in
-the DB's ``fits`` table, so a fresh process skips refitting entirely.
+"""End-to-end Dooly workflow through the public API (`repro.api`):
+open a ProfileStore, profile two models (watch the dedup), serve a trace
+on the real engine and predict it with DoolySim, compare the pluggable
+latency backends (regression fits vs raw-measurement oracle vs analytic
+roofline), and finally demonstrate the warm-start path — the fitted
+latency model persisted in the DB's ``fits`` table, so a fresh session
+skips refitting entirely.
 
     PYTHONPATH=src python examples/profile_and_simulate.py
 """
+import math
 import os
 import tempfile
 import time
 
 import numpy as np
 
+from repro.api import ProfileStore
 from repro.configs import get_smoke_config
-from repro.core.database import LatencyDB
-from repro.core.latency_model import LatencyModel
-from repro.core.profiler import DoolyProf, SweepConfig
+from repro.core.profiler import SweepConfig
 from repro.serving.engine import Engine
 from repro.serving.scheduler import SchedulerConfig
 from repro.sim import metrics as M
-from repro.sim.simulator import DoolySim
 from repro.sim.workload import sharegpt_like, synthetic
+
+SWEEP = SweepConfig(toks=(8, 16, 32, 64, 128), reqs=(1, 2, 8),
+                    ctx=(64, 256),
+                    op_points=((8, 1), (16, 1), (64, 1), (128, 1)))
+SCHED = SchedulerConfig(max_num_seqs=8, max_batch_tokens=128, chunk_size=64)
 
 
 def main():
@@ -27,63 +34,29 @@ def main():
     cfg2 = get_smoke_config("command-r7b")
     with tempfile.TemporaryDirectory() as scratch:
         path = os.path.join(scratch, "latency.sqlite")
-        with LatencyDB(path) as db:
-            _main(cfg, cfg2, db)
+        with ProfileStore(path, hardware="cpu", oracle="cpu_wallclock",
+                          sweep=SWEEP) as store:
+            _main(cfg, cfg2, store)
         _warm_start_demo(cfg, path)
 
 
-def _warm_start_demo(cfg, path):
-    """Warm-start workflow: the profile run above left fitted coefficients
-    in the DB (LatencyModel writes them back on first compile), so a fresh
-    process loads them instead of re-solving the ridge systems — and a
-    recorded trace can be re-predicted in one batched call."""
-    with LatencyDB(path) as db:
-        t0 = time.perf_counter()
-        cold = LatencyModel(db, "cpu", use_saved_fits=False)
-        cold.precompile()                      # refit + persist to `fits`
-        cold_s = time.perf_counter() - t0
-    with LatencyDB(path) as db:                # simulate a fresh process
-        t0 = time.perf_counter()
-        LatencyModel(db, "cpu").precompile()   # loads stored coefficients
-        warm_s = time.perf_counter() - t0
-        print(f"model load: refit {cold_s * 1e3:.1f} ms -> warm "
-              f"{warm_s * 1e3:.1f} ms ({db.stats()['fits']} stored fits)")
-        sched = SchedulerConfig(max_num_seqs=8, max_batch_tokens=128,
-                                chunk_size=64)
-        sim = DoolySim(cfg, db, hardware="cpu", backend="xla",
-                       sched_config=sched, max_seq=256)
-        res = sim.run(sharegpt_like(20, rate=2.0, seed=4, scale=0.08,
-                                    vocab=cfg.vocab_size),
-                      record_plans=True)
-        dts = sim.predict_trace(res["plans"])  # one batched re-prediction
-        print(f"trace re-predicted in one call: {len(dts)} iterations, "
-              f"makespan {dts.sum():.4f}s (sim said "
-              f"{res['makespan']:.4f}s)")
-
-
-def _main(cfg, cfg2, db):
-    sweep = SweepConfig(toks=(8, 16, 32, 64, 128), reqs=(1, 2, 8),
-                        ctx=(64, 256),
-                        op_points=((8, 1), (16, 1), (64, 1), (128, 1)))
-    prof = DoolyProf(db, oracle="cpu_wallclock", hardware="cpu", sweep=sweep)
-    r1 = prof.profile_model(cfg, backend="xla")
-    r2 = prof.profile_model(cfg2, backend="xla")
+def _main(cfg, cfg2, store):
+    r1 = store.ensure_profiled(cfg)
+    r2 = store.ensure_profiled(cfg2)
     print(f"{cfg.name}: {r1.n_new} new signatures ({r1.spent_s:.2f}s)")
     print(f"{cfg2.name}: {r2.n_new} new, {r2.n_reused} REUSED "
           f"({r2.saved_s:.2f}s saved — the GQA dedup)")
+    assert store.ensure_profiled(cfg) is None      # second call: no-op
 
-    sched = SchedulerConfig(max_num_seqs=8, max_batch_tokens=128,
-                            chunk_size=64)
-    eng = Engine(cfg, sched_config=sched, max_seq=256, impl="xla")
+    eng = Engine(cfg, sched_config=SCHED, max_seq=256, impl="xla")
     eng.run(synthetic(4, rate=0.1, prompt_len=64, out_len=20, seed=9,
                       vocab=cfg.vocab_size))
-    sim = DoolySim(cfg, db, hardware="cpu", backend="xla",
-                   sched_config=sched, max_seq=256)
+    sim = store.simulator(cfg, sched_config=SCHED, max_seq=256)
     print("calibration:", sim.calibrate(eng.records))
 
     trace = lambda: sharegpt_like(20, rate=2.0, seed=4, scale=0.08,
                                   vocab=cfg.vocab_size)
-    eng2 = Engine(cfg, sched_config=sched, max_seq=256, impl="xla")
+    eng2 = Engine(cfg, sched_config=SCHED, max_seq=256, impl="xla")
     real = M.request_metrics(eng2.run(trace())["requests"])
     simm = M.request_metrics(sim.run(trace())["requests"])
     print("real ttft p50/p90:",
@@ -91,6 +64,45 @@ def _main(cfg, cfg2, db):
     print("sim  ttft p50/p90:",
           [round(float(np.percentile(simm['ttft'], p)), 4) for p in (50, 90)])
     print("MAPE:", {k: round(v, 1) for k, v in M.compare(simm, real).items()})
+
+    # the latency source is a constructor argument: one recorded trace,
+    # three pluggable backends (regression fits / raw-measurement replay /
+    # analytic roofline) through the same LatencyBackend seam
+    plans = sim.run(sharegpt_like(20, rate=math.inf, seed=4, scale=0.08,
+                                  vocab=cfg.vocab_size),
+                    record_plans=True)["plans"]
+    for name in ("dooly", "oracle", "roofline"):
+        be = store.backend(name, cfg, sched_config=SCHED, max_seq=256)
+        lat = be.predict_trace(plans)
+        print(f"  backend {name:9s}: makespan {lat.sum():.4f}s over "
+              f"{len(lat)} iterations")
+
+
+def _warm_start_demo(cfg, path):
+    """Warm-start workflow: the profile run above left fitted coefficients
+    in the DB (LatencyModel writes them back on first compile), so a fresh
+    session loads them instead of re-solving the ridge systems — and a
+    recorded trace can be re-predicted in one batched call."""
+    with ProfileStore(path, hardware="cpu") as store:
+        t0 = time.perf_counter()
+        cold = store.model(use_saved_fits=False)
+        cold.precompile()                      # refit + persist to `fits`
+        cold_s = time.perf_counter() - t0
+    with ProfileStore(path, hardware="cpu") as store:  # fresh session
+        t0 = time.perf_counter()
+        store.model().precompile()             # loads stored coefficients
+        warm_s = time.perf_counter() - t0
+        print(f"model load: refit {cold_s * 1e3:.1f} ms -> warm "
+              f"{warm_s * 1e3:.1f} ms ({store.stats()['fits']} stored "
+              f"fits)")
+        sim = store.simulator(cfg, sched_config=SCHED, max_seq=256)
+        res = sim.run(sharegpt_like(20, rate=2.0, seed=4, scale=0.08,
+                                    vocab=cfg.vocab_size),
+                      record_plans=True)
+        dts = sim.predict_trace(res["plans"])  # one batched re-prediction
+        print(f"trace re-predicted in one call: {len(dts)} iterations, "
+              f"makespan {dts.sum():.4f}s (sim said "
+              f"{res['makespan']:.4f}s)")
 
 
 if __name__ == "__main__":

@@ -1,20 +1,21 @@
-"""Scenario sweep demo: one profile store, many configurations.
+"""Scenario sweep demo through the public API: one profile store, many
+configurations.
 
-Profiles two models once, then evaluates a 24-scenario grid
-(model x scheduler x workload) in one sweep — burst workloads by shared
-pure scheduler replay, Poisson workloads by the interleaved loop — and
-prints the cost/latency frontier.  Also demonstrates the exact-replay
+Profiles two models once (``ProfileStore.ensure_profiled``), then
+evaluates a 24-scenario grid (model x scheduler x workload) in one sweep —
+burst workloads by shared pure scheduler replay, Poisson workloads by the
+interleaved loop — and prints the cost/latency frontier.  Also
+demonstrates the streaming form (``Sweep.iter_results``: results arrive
+per fit group, no materialized SweepResult) and the exact-replay
 guarantee: a sweep makespan equals the scalar per-scenario simulation.
 
     PYTHONPATH=src python examples/sweep_demo.py
 """
 import math
 
+from repro.api import ProfileStore, SchedSpec, WorkloadSpec, expand_grid
 from repro.configs import get_smoke_config
-from repro.core.database import LatencyDB
-from repro.core.profiler import DoolyProf, SweepConfig
-from repro.sim.simulator import DoolySim
-from repro.sweep import SchedSpec, Sweep, WorkloadSpec, expand_grid
+from repro.core.profiler import SweepConfig
 
 MODELS = ("llama3-8b", "command-r7b")
 PROFILE_SWEEP = SweepConfig(toks=(8, 64), reqs=(1, 2), ctx=(64, 128),
@@ -22,11 +23,10 @@ PROFILE_SWEEP = SweepConfig(toks=(8, 64), reqs=(1, 2), ctx=(64, 128),
 
 
 def main():
-    db = LatencyDB()
-    prof = DoolyProf(db, oracle="tpu_analytical", hardware="tpu-v5e",
-                     sweep=PROFILE_SWEEP)
+    store = ProfileStore(hardware="tpu-v5e", oracle="tpu_analytical",
+                         sweep=PROFILE_SWEEP)
     for m in MODELS:
-        rep = prof.profile_model(get_smoke_config(m), backend="xla")
+        rep = store.ensure_profiled(get_smoke_config(m))
         print(f"profiled {m}: {rep.n_new} new signatures, "
               f"{rep.n_reused} reused (dedup)")
 
@@ -40,7 +40,7 @@ def main():
     ]
     scenarios = expand_grid(MODELS, scheds, workloads)
 
-    sweep = Sweep(db)
+    sweep = store.sweep()
     out = sweep.run(scenarios)
     print()
     print(out.table())
@@ -50,16 +50,26 @@ def main():
         print(f"  cost {r.cost:8.3f}  tpot {r.tpot_mean:.6f}  "
               f"{r.scenario.label()}")
 
+    # streaming form: results arrive as each fit group's batched
+    # prediction completes (python -m repro.sweep --stream does this)
+    print("\nstreaming (first 4 results as they complete):")
+    for i, r in enumerate(sweep.iter_results(scenarios)):
+        if i >= 4:
+            break
+        print(f"  [{r.index:2d}] {r.scenario.label():50s} {r.mode}")
+
     # the exact-replay guarantee, spelled out for one scenario
     scn = scenarios[0]
-    sim = DoolySim(get_smoke_config(scn.model), db, hardware=scn.hardware,
-                   backend=scn.backend, sched_config=scn.sched.to_config(),
-                   max_seq=scn.max_seq)
+    sim = store.simulator(get_smoke_config(scn.model),
+                          sched_config=scn.sched.to_config(),
+                          max_seq=scn.max_seq, backend=scn.backend,
+                          hardware=scn.hardware)
     ref = sim.run(scn.workload.build(), via_replay=False)
     print(f"\nexact-replay check ({scn.label()}):")
     print(f"  sweep makespan  {out.results[0].makespan:.9f}")
     print(f"  scalar makespan {ref['makespan']:.9f}  "
           f"(diff {abs(out.results[0].makespan - ref['makespan']):.2e})")
+    store.close()
 
 
 if __name__ == "__main__":

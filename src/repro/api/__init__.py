@@ -1,0 +1,65 @@
+"""`repro.api` — the repo's stable public surface.
+
+One import gives the whole profile -> predict -> simulate/sweep pipeline:
+
+    from repro.api import ProfileStore
+
+    with ProfileStore("latency.sqlite", hardware="tpu-v5e") as store:
+        store.ensure_profiled(cfg)                      # paper §6 profiler
+        sim = store.simulator(cfg, sched_config=sched, max_seq=128)
+        print(sim.run(requests)["makespan"])
+        table = store.sweep().run(scenarios).table()    # config search
+
+The latency source is a constructor argument: any registered
+:class:`LatencyBackend` (``"dooly"`` regression fits, ``"roofline"``
+analytic, ``"oracle"`` raw-measurement replay) drops into `DoolySim` and
+`Sweep` unchanged.
+
+``__all__`` below is a *contract*: `tests/test_api_surface.py` snapshots
+it together with the public signatures, so any change to this surface is a
+deliberate, reviewed diff.  `DoolySim` and the sweep types are re-exported
+lazily (PEP 562) — they live downstream of the backend seam and importing
+them eagerly would cycle.
+"""
+from repro.api.backends import (DoolyBackend, LatencyBackend,  # noqa: F401
+                                OracleBackend, PlanBackend,
+                                RooflineBackend, available_backends,
+                                make_backend, register_backend)
+from repro.api.store import ProfileStore  # noqa: F401
+
+__all__ = [
+    # session + profiling
+    "ProfileStore",
+    # the latency seam
+    "LatencyBackend", "PlanBackend",
+    "DoolyBackend", "RooflineBackend", "OracleBackend",
+    "register_backend", "make_backend", "available_backends",
+    # consumer layers (lazy re-exports)
+    "DoolySim", "predict_scenarios",
+    "Sweep", "SweepResult", "Scenario", "SchedSpec", "WorkloadSpec",
+    "expand_grid",
+]
+
+_LAZY = {
+    "DoolySim": ("repro.sim.simulator", "DoolySim"),
+    "predict_scenarios": ("repro.sim.simulator", "predict_scenarios"),
+    "Sweep": ("repro.sweep.runner", "Sweep"),
+    "SweepResult": ("repro.sweep.runner", "SweepResult"),
+    "Scenario": ("repro.sweep.grid", "Scenario"),
+    "SchedSpec": ("repro.sweep.grid", "SchedSpec"),
+    "WorkloadSpec": ("repro.sweep.grid", "WorkloadSpec"),
+    "expand_grid": ("repro.sweep.grid", "expand_grid"),
+}
+
+
+def __getattr__(name: str):
+    target = _LAZY.get(name)
+    if target is None:
+        raise AttributeError(f"module {__name__!r} has no attribute "
+                             f"{name!r}")
+    import importlib
+    return getattr(importlib.import_module(target[0]), target[1])
+
+
+def __dir__():
+    return sorted(set(globals()) | set(__all__))

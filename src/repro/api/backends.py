@@ -1,0 +1,628 @@
+"""`LatencyBackend`: the pluggable latency-source seam of the public API.
+
+The paper's headline deliverable is that Dooly's latency database becomes a
+*drop-in backend* for existing simulators (cf. Vidur's execution-time
+predictor seam, LLMServingSim's hardware-simulator plug).  This module
+defines that seam for the reproduction: everything downstream of "how long
+does one iteration take" — `DoolySim.run`, `repro.sweep`, the benchmarks —
+consumes latency exclusively through the three-method
+:class:`LatencyBackend` protocol, so swapping the latency source is a
+constructor argument, not a code change.
+
+Protocol (all latencies in seconds):
+
+* ``predict_points(points)`` — model-call latency for ``(phase, toks,
+  reqs, ctx)`` workload points, the evaluation primitive;
+* ``predict_plan(plan)`` — one iteration plan (a live
+  ``IterationPlan`` or the recorded ``(chunk_lengths, n_decodes)`` form);
+* ``predict_trace(plans)`` — per-iteration latency for a whole trace;
+
+plus the batch/calibration surface consumers rely on
+(``predict_traces``, ``predict_record``, and the ``overhead_s`` /
+``chunk_overhead_s`` / ``decode_scale`` attributes).  Implementors
+subclass :class:`PlanBackend`, which derives all of it from a single
+``predict_points`` override.
+
+Three registered implementations:
+
+* :class:`DoolyBackend` — the paper's path: per-signature ridge
+  regressions over the latency DB.  This class *is* the prediction engine
+  that used to live inside ``DoolySim`` (row groups, memoized call cache,
+  batched `predict_batch_points` evaluation), moved verbatim so
+  predictions are bitwise-identical to the pre-refactor simulator.
+* :class:`RooflineBackend` — the analytic model from
+  ``parallel/roofline.py`` lifted to workload points: max(compute, memory,
+  collective) per model call, no profiling required.  Useful as a
+  zero-measurement baseline and for hardware what-ifs.
+* :class:`OracleBackend` — replays *raw measurements* (no fitting): on
+  profiled sweep points it returns exactly what the oracle measured, which
+  makes it the accuracy-audit reference for the regression fits.
+
+``register_backend``/``make_backend`` form the registry; every factory
+takes the uniform ``(cfg, db, hardware=..., backend=..., sched_config=...,
+max_seq=..., tp=..., lm=...)`` signature (analytic backends ignore the DB
+arguments).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import (Callable, Dict, List, Optional, Protocol, Sequence,
+                    Tuple, runtime_checkable)
+
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.database import LatencyDB
+from repro.core.latency_model import LatencyModel, nearest_point_scale
+from repro.serving.scheduler import IterationPlan, SchedulerConfig
+
+_STATEFUL = ("self_attn", "cross_attn", "mla_attn", "mamba", "moe")
+
+#: (phase, toks, reqs, ctx) — one model call's workload
+PointKey = Tuple[str, int, int, int]
+
+
+def _bucket_chunks_vec(lengths: np.ndarray, chunk_size: int) -> np.ndarray:
+    """Vectorized ``engine.bucket_chunk``: smallest power-of-two bucket
+    >= length (min 8), clamped to chunk_size; lengths beyond chunk_size
+    pass through.  Exact for integer lengths (log2 of a power of two is
+    exact in float64)."""
+    c = np.maximum(lengths.astype(np.float64), 1.0)
+    b = 8.0 * np.exp2(np.ceil(np.maximum(np.log2(c / 8.0), 0.0)))
+    return np.where(lengths <= chunk_size,
+                    np.minimum(b, chunk_size),
+                    lengths).astype(np.int64)
+
+
+@dataclass
+class _OpRow:
+    sig: str
+    module: str
+    count: int
+    kind: str            # op_name from signatures table
+    stateful: bool
+
+
+@runtime_checkable
+class LatencyBackend(Protocol):
+    """The simulator-facing latency seam.  Implementations are pure with
+    respect to their inputs (same points -> same floats) so simulation
+    stays deterministic and sweep dedup stays sound.
+
+    This is the FULL surface `DoolySim`/`predict_scenarios` consume: the
+    three prediction methods plus the cross-scenario batch form, record
+    pricing, and the calibratable overhead attributes.  Don't implement
+    it from scratch — subclass :class:`PlanBackend`, which provides
+    everything here from a single ``predict_points`` override."""
+
+    #: calibration surface (written by ``DoolySim.calibrate``)
+    overhead_s: float
+    chunk_overhead_s: float
+    decode_scale: float
+
+    def predict_points(self, points: Sequence[PointKey]) -> np.ndarray:
+        """Seconds per (phase, toks, reqs, ctx) model-call point."""
+        ...
+
+    def predict_plan(self, plan) -> float:
+        """Seconds for one iteration plan."""
+        ...
+
+    def predict_trace(self, plans) -> np.ndarray:
+        """Per-iteration seconds for a whole trace of plans."""
+        ...
+
+    def predict_traces(self, traces: Sequence[Sequence]) -> List[np.ndarray]:
+        """Per-trace slices of one batched pass over many traces."""
+        ...
+
+    def predict_record(self, rec) -> float:
+        """Model-time seconds for an engine IterationRecord."""
+        ...
+
+
+class PlanBackend:
+    """Shared plan/trace scaffolding over an abstract ``predict_points``.
+
+    Owns the serving-shape parameters every backend needs to turn an
+    iteration plan into model-call points (chunk bucketing, the static
+    decode batch shape) plus the calibratable overhead terms
+    (``overhead_s`` + ``chunk_overhead_s`` per chunk, ``decode_scale`` on
+    the decode program) that ``DoolySim.calibrate`` fits.
+    """
+
+    name = "?"
+
+    def __init__(self, cfg: ModelConfig, *, sched_config: SchedulerConfig,
+                 max_seq: int, overhead_s: float = 0.0,
+                 chunk_overhead_s: float = 0.0):
+        self.cfg = cfg
+        self.sched_config = sched_config
+        self.max_seq = max_seq
+        self.overhead_s = overhead_s
+        self.chunk_overhead_s = chunk_overhead_s
+        self.decode_scale = 1.0
+        self._point_cache: Dict[PointKey, float] = {}
+
+    # -- abstract ------------------------------------------------------
+
+    def predict_points(self, points: Sequence[PointKey]) -> np.ndarray:
+        raise NotImplementedError
+
+    def _sync_cache(self):
+        """Hook: drop memoized points when the underlying latency source
+        changed.  The base class is pure (nothing to go stale); DB-backed
+        subclasses override with a generation check."""
+
+    # -- shared plan handling ------------------------------------------
+
+    def _decode_key(self) -> PointKey:
+        return ("decode", 1, self.sched_config.max_num_seqs, self.max_seq)
+
+    def _normalize_plan(self, plan) -> Tuple[Tuple[int, ...], bool]:
+        """(bucketed chunk token counts, has_decodes) for an IterationPlan
+        or a recorded (chunk_lengths, n_decodes) tuple."""
+        from repro.serving.engine import bucket_chunk
+        if isinstance(plan, IterationPlan):
+            lengths: Tuple[int, ...] = tuple(c.length for c in plan.prefills)
+            n_dec = len(plan.decodes)
+        else:
+            lengths, n_dec = plan
+        if self.cfg.ssm_state <= 0:
+            lengths = tuple(bucket_chunk(length,
+                                         self.sched_config.chunk_size)
+                            for length in lengths)
+        return lengths, bool(n_dec)
+
+    def _cached_points(self, keys: List[PointKey]) -> None:
+        missing = [k for k in keys if k not in self._point_cache]
+        if missing:
+            vals = self.predict_points(missing)
+            for k, v in zip(missing, vals):
+                self._point_cache[k] = float(v)
+
+    def predict_plan(self, plan) -> float:
+        return float(self.predict_trace((plan,))[0])
+
+    def predict_trace(self, plans) -> np.ndarray:
+        self._sync_cache()
+        norm = [self._normalize_plan(p) for p in plans]
+        dec_key = self._decode_key()
+        keys = sorted({("prefill", c, 1, self.max_seq)
+                       for chunks, _ in norm for c in chunks})
+        has_dec = any(d for _, d in norm)
+        self._cached_points(keys + ([dec_key] if has_dec else []))
+        cache = self._point_cache
+        out = np.empty(len(norm))
+        for i, (chunks, dec) in enumerate(norm):
+            total = self.overhead_s + self.chunk_overhead_s * len(chunks)
+            for c in chunks:
+                total += cache[("prefill", c, 1, self.max_seq)]
+            if dec:
+                total += self.decode_scale * cache[dec_key]
+            out[i] = total
+        return out
+
+    def predict_traces(self, traces: Sequence[Sequence]) -> List[np.ndarray]:
+        """Per-trace slices of one flattened ``predict_trace`` pass."""
+        flat = [p for trace in traces for p in trace]
+        lat = self.predict_trace(flat)
+        out: List[np.ndarray] = []
+        off = 0
+        for trace in traces:
+            out.append(lat[off:off + len(trace)])
+            off += len(trace)
+        return out
+
+    def predict_record(self, rec) -> float:
+        """Model-time prediction for an engine IterationRecord (no
+        overhead terms) — used for calibration."""
+        from repro.serving.engine import bucket_chunk
+        self._sync_cache()
+        total = 0.0
+        for length, start in rec.chunks:
+            c = length if self.cfg.ssm_state > 0 else bucket_chunk(
+                length, self.sched_config.chunk_size)
+            self._cached_points([("prefill", c, 1, self.max_seq)])
+            total += self._point_cache[("prefill", c, 1, self.max_seq)]
+        if rec.n_decodes:
+            dec_key = self._decode_key()
+            self._cached_points([dec_key])
+            total += self.decode_scale * self._point_cache[dec_key]
+        return total
+
+
+class _CallGraphBackend(PlanBackend):
+    """Plan backend over the profiled call graph: loads the collapsed
+    canonical (signature, module, count) rows for one (model, backend,
+    hardware, tp) configuration from the latency DB."""
+
+    def __init__(self, cfg: ModelConfig, db: LatencyDB, *, hardware: str,
+                 backend: str, sched_config: SchedulerConfig, max_seq: int,
+                 tp: int = 1, overhead_s: float = 0.0,
+                 chunk_overhead_s: float = 0.0):
+        super().__init__(cfg, sched_config=sched_config, max_seq=max_seq,
+                         overhead_s=overhead_s,
+                         chunk_overhead_s=chunk_overhead_s)
+        self.db = db
+        self.hardware = hardware
+        self.backend = backend
+        self.tp = tp
+        self._meas_gen = db.measurement_generation
+        cid = db.config_id(cfg.name, backend, hardware, tp)
+        self.rows: List[_OpRow] = []
+        for sig, module, count in db.model_operations(cid):
+            meta = db.signature(sig)
+            kind = meta[0] if meta else "?"
+            self.rows.append(_OpRow(sig, module, count, kind,
+                                    kind in _STATEFUL))
+
+    def _sync_cache(self):
+        """Measurement writes make memoized points stale — drop them (the
+        DB's own read-through caches already invalidate themselves)."""
+        gen = self.db.measurement_generation
+        if gen != self._meas_gen:
+            self._point_cache.clear()
+            self._meas_gen = gen
+
+    @staticmethod
+    def _map_point(follows_phase: bool, lm_head: bool, phase: str,
+                   toks: int, reqs: int, ctx: int
+                   ) -> Tuple[str, int, int, int]:
+        """THE workload mapping, single copy for every call-graph
+        consumer: stateful non-MoE rows (``follows_phase``) follow the
+        call's phase/ctx; MoE and stateless rows always evaluate as
+        prefill with ctx=0; ``lm_head`` rows clamp to the chunk's last
+        position on prefill."""
+        t = 1 if lm_head and phase == "prefill" else toks
+        if follows_phase:
+            return (phase, t, reqs, ctx)
+        return ("prefill", t, reqs, 0)
+
+    @classmethod
+    def _map_row(cls, row: _OpRow, phase: str, toks: int, reqs: int,
+                 ctx: int) -> Tuple[str, int, int, int]:
+        return cls._map_point(row.stateful and row.kind != "moe",
+                              "lm_head" in row.module,
+                              phase, toks, reqs, ctx)
+
+
+class DoolyBackend(_CallGraphBackend):
+    """Regression-fit latency from the profile store — the paper's path.
+
+    Construction splits the call-graph rows into groups that share a
+    workload mapping; each group evaluates through
+    ``LatencyModel.predict_batch``/``predict_batch_points`` as one matmul,
+    and call totals are memoized on (phase, toks, reqs, ctx).  Decode
+    batches and power-of-two-bucketed prefill chunks draw from a tiny
+    discrete set, so a long trace collapses to a handful of distinct
+    evaluations.  The scalar reference path is kept as
+    ``predict_call_scalar`` (equivalence tests and the perf benchmark's
+    baseline).
+
+    The call cache invalidates itself when the underlying LatencyModel
+    drops its fits (``lm.epoch``), so a store that re-profiles mid-session
+    never serves predictions from superseded measurements.
+    """
+
+    name = "dooly"
+
+    def __init__(self, cfg: ModelConfig, db: LatencyDB, *, hardware: str,
+                 backend: str, sched_config: SchedulerConfig, max_seq: int,
+                 tp: int = 1, lm: Optional[LatencyModel] = None,
+                 overhead_s: float = 0.0, chunk_overhead_s: float = 0.0):
+        super().__init__(cfg, db, hardware=hardware, backend=backend,
+                         sched_config=sched_config, max_seq=max_seq, tp=tp,
+                         overhead_s=overhead_s,
+                         chunk_overhead_s=chunk_overhead_s)
+        # a ProfileStore passes its shared per-hardware model so N
+        # scenarios load each persisted fit exactly once
+        self.lm = lm if lm is not None else LatencyModel(db, hardware)
+        # group rows by workload mapping, built once: (follows_call_phase,
+        # lm_head) -> (sig tuple, counts vector).  follows_call_phase is
+        # stateful non-MoE; everything else evaluates as prefill/ctx=0.
+        self._groups: Dict[Tuple[bool, bool],
+                           Tuple[Tuple[str, ...], np.ndarray]] = {}
+        buckets: Dict[Tuple[bool, bool], List[_OpRow]] = {}
+        for row in self.rows:
+            k = (row.stateful and row.kind != "moe", "lm_head" in row.module)
+            buckets.setdefault(k, []).append(row)
+        for k, rows in buckets.items():
+            self._groups[k] = (tuple(r.sig for r in rows),
+                               np.array([float(r.count) for r in rows]))
+        self._call_cache: Dict[PointKey, float] = {}
+        self._lm_epoch = self.lm.epoch
+
+    def _sync_cache(self):
+        """Drop memoized call totals when the fit cache was invalidated
+        (a measurement/fit write landed since they were computed).  The
+        inherited ``_point_cache`` (fed by the base ``predict_record``)
+        holds the same values, so it dies with them."""
+        self.lm.refresh()
+        if self.lm.epoch != self._lm_epoch:
+            self._call_cache.clear()
+            self._point_cache.clear()
+            self._lm_epoch = self.lm.epoch
+
+    # ------------------------------------------------------------------
+
+    def predict_call(self, *, phase: str, toks: int, reqs: int,
+                     ctx: int) -> float:
+        """One model call: sum per-signature predictions over the call
+        graph.  Vectorized (one predict_batch matmul per row group) and
+        memoized on the workload key."""
+        self._sync_cache()
+        key = (phase, toks, reqs, ctx)
+        cached = self._call_cache.get(key)
+        if cached is not None:
+            return cached
+        total = 0.0
+        for (follows_phase, lm_head), (sigs, counts) in self._groups.items():
+            ph, t, r, c = self._map_point(follows_phase, lm_head,
+                                          phase, toks, reqs, ctx)
+            preds = self.lm.predict_batch(sigs, ph, toks=t, reqs=r, ctx=c)
+            total += float(counts @ preds)
+        self._call_cache[key] = total
+        return total
+
+    def predict_call_scalar(self, *, phase: str, toks: int, reqs: int,
+                            ctx: int) -> float:
+        """Reference scalar path: per-row LatencyModel.predict, no caching.
+        predict_call must match this within 1e-9."""
+        total = 0.0
+        for row in self.rows:
+            ph, t, r, c = self._map_row(row, phase, toks, reqs, ctx)
+            total += row.count * self.lm.predict(row.sig, ph, toks=t,
+                                                 reqs=r, ctx=c)
+        return total
+
+    def _eval_calls(self, keys: List[PointKey]):
+        """Evaluate predict_call for many (phase, toks, reqs, ctx) keys at
+        once — per row group and mapped phase, one feature matrix and one
+        predict_batch_points matmul — and memoize the totals."""
+        totals = np.zeros(len(keys))
+        for (follows_phase, lm_head), (sigs, counts) in self._groups.items():
+            by_phase: Dict[str, Tuple[List[int], List[Tuple[int, int, int]]]]
+            by_phase = {}
+            for j, (phase, toks, reqs, ctx) in enumerate(keys):
+                ph, t, r, c = self._map_point(follows_phase, lm_head,
+                                              phase, toks, reqs, ctx)
+                idx, pts = by_phase.setdefault(ph, ([], []))
+                idx.append(j)
+                pts.append((t, r, c))
+            for ph, (idx, pts) in by_phase.items():
+                preds = self.lm.predict_batch_points(sigs, ph, pts)
+                totals[idx] += preds @ counts
+        for j, key in enumerate(keys):
+            self._call_cache[key] = float(totals[j])
+
+    def predict_points(self, points: Sequence[PointKey]) -> np.ndarray:
+        self._sync_cache()
+        keys = [tuple(p) for p in points]
+        missing = sorted({k for k in keys if k not in self._call_cache})
+        if missing:
+            self._eval_calls(missing)
+        return np.fromiter((self._call_cache[k] for k in keys),
+                           dtype=np.float64, count=len(keys))
+
+    def predict_trace(self, plans) -> np.ndarray:
+        """Per-iteration predicted latency (seconds) for a whole trace of
+        plans, batched: chunk bucketing is vectorized across the flattened
+        trace, every distinct workload point is evaluated once (through the
+        memoized call cache), and per-plan sums assemble with bincount.
+        predict_plan(p) == predict_trace([p])[0]."""
+        self._sync_cache()
+        n = len(plans)
+        cache = self._call_cache
+        dec_key = self._decode_key()
+        if n < 16:
+            # small traces (predict_plan's single plan): plain Python
+            # keeps run()'s per-iteration cost at dict-lookup level
+            norm = [self._normalize_plan(p) for p in plans]
+            missing = sorted(
+                {("prefill", c, 1, self.max_seq)
+                 for chunks, _ in norm for c in chunks}
+                | ({dec_key} if any(d for _, d in norm) else set()))
+            missing = [k for k in missing if k not in cache]
+            if missing:
+                self._eval_calls(missing)
+            out = np.empty(n)
+            for i, (chunks, has_dec) in enumerate(norm):
+                total = self.overhead_s + self.chunk_overhead_s * len(chunks)
+                for c in chunks:
+                    total += cache[("prefill", c, 1, self.max_seq)]
+                if has_dec:
+                    total += self.decode_scale * cache[dec_key]
+                out[i] = total
+            return out
+        # flatten the whole trace, bucket once, assemble vectorized
+        counts = np.empty(n, dtype=np.intp)
+        dec = np.empty(n, dtype=np.float64)
+        raw: List[int] = []
+        for i, plan in enumerate(plans):
+            if isinstance(plan, IterationPlan):
+                lengths = [c.length for c in plan.prefills]
+                n_dec = len(plan.decodes)
+            else:
+                lengths, n_dec = plan
+            counts[i] = len(lengths)
+            dec[i] = 1.0 if n_dec else 0.0
+            raw.extend(lengths)
+        flat = np.asarray(raw, dtype=np.int64)
+        if self.cfg.ssm_state <= 0:
+            flat = _bucket_chunks_vec(flat, self.sched_config.chunk_size)
+        uniq, inv = np.unique(flat, return_inverse=True)
+        keys = [("prefill", int(c), 1, self.max_seq) for c in uniq]
+        if dec.any():
+            keys.append(dec_key)
+        missing = [k for k in keys if k not in cache]
+        if missing:
+            self._eval_calls(missing)
+        lat_uniq = np.fromiter((cache[k] for k in keys[:len(uniq)]),
+                               dtype=np.float64, count=len(uniq))
+        plan_idx = np.repeat(np.arange(n, dtype=np.intp), counts)
+        chunk_sum = np.bincount(plan_idx, weights=lat_uniq[inv], minlength=n)
+        dec_lat = cache[dec_key] if dec.any() else 0.0
+        return (self.overhead_s + self.chunk_overhead_s * counts
+                + chunk_sum + dec * (self.decode_scale * dec_lat))
+
+    # predict_record: inherited from PlanBackend — it routes through
+    # predict_points, which reads this backend's memoized call cache
+
+
+class OracleBackend(_CallGraphBackend):
+    """Raw-measurement replay — the accuracy-audit reference.
+
+    No fitting: each call-graph row looks its mapped workload point up in
+    the measurements table directly, so on profiled sweep points the
+    prediction is exactly (sum of count x measured latency).  Off-grid
+    points fall back to nearest-point-by-total-tokens scaling with the
+    same semantics LatencyModel's under-measured fallback uses.  Auditing
+    the regression fits = comparing DoolyBackend against this on the
+    profiled grid.
+    """
+
+    name = "oracle"
+
+    def _row_point_us(self, row: _OpRow, key: PointKey) -> float:
+        phase, toks, reqs, ctx = key
+        meas = self.db.measurement_map(row.sig, self.hardware)
+        lat = meas.get((phase, toks, reqs, ctx))
+        if lat is not None:
+            return lat
+        # off-grid: nearest measured point of this phase (any phase if
+        # none), scaled by total token count — LatencyModel's fallback
+        pts = [(t, r, v) for (p, t, r, _c), v in meas.items() if p == phase]
+        if not pts:
+            pts = [(t, r, v) for (_p, t, r, _c), v in meas.items()]
+        return nearest_point_scale(pts, toks, reqs) * 1e6
+
+    def predict_points(self, points: Sequence[PointKey]) -> np.ndarray:
+        out = np.zeros(len(points))
+        for j, point in enumerate(points):
+            phase, toks, reqs, ctx = point
+            total = 0.0
+            for row in self.rows:
+                key = self._map_row(row, phase, toks, reqs, ctx)
+                total += row.count * self._row_point_us(row, key)
+            out[j] = total / 1e6
+        return out
+
+
+class RooflineBackend(PlanBackend):
+    """Analytic latency from the roofline model — no profiling at all.
+
+    Adapts ``parallel/roofline.py``'s hardware model (peak FLOP/s, HBM
+    bandwidth, ICI link bandwidth) to per-call workload points: a model
+    call costs max(compute, memory, collective) seconds where
+
+    * compute  = 2 * N_active * tokens / (peak / tp)
+      (+ the attention score/value term, quadratic in context),
+    * memory   = (weight bytes / tp + KV-cache traffic) / HBM bw,
+    * collective (tp > 1) = per-layer all-reduce bytes on the ring model.
+
+    Deliberately coarse — it exists as the zero-measurement baseline a
+    drop-in backend seam makes possible, and for hardware what-ifs (pass
+    custom peaks).
+    """
+
+    name = "roofline"
+
+    def __init__(self, cfg: ModelConfig, *, sched_config: SchedulerConfig,
+                 max_seq: int, tp: int = 1, dtype_bytes: int = 2,
+                 peak_flops: Optional[float] = None,
+                 hbm_bw: Optional[float] = None,
+                 overhead_s: float = 0.0, chunk_overhead_s: float = 0.0):
+        super().__init__(cfg, sched_config=sched_config, max_seq=max_seq,
+                         overhead_s=overhead_s,
+                         chunk_overhead_s=chunk_overhead_s)
+        from repro.parallel import roofline as R
+        self.tp = tp
+        self.dtype_bytes = dtype_bytes
+        self.peak_flops = R.PEAK_FLOPS if peak_flops is None else peak_flops
+        self.hbm_bw = R.HBM_BW if hbm_bw is None else hbm_bw
+        self.ici_bw = R.ICI_LINKS * R.ICI_BW
+        self.n_active = float(cfg.active_param_count())
+
+    def _point_seconds(self, phase: str, toks: int, reqs: int,
+                       ctx: int) -> float:
+        cfg, b = self.cfg, float(self.dtype_bytes)
+        new_toks = float(max(toks, 1)) * max(reqs, 1)
+        kv_heads = 0 if cfg.is_attention_free else max(cfg.n_kv_heads, 1)
+        head = cfg.resolved_head_dim
+        layers = max(cfg.n_layers, 1)
+        span = float(max(ctx, 1))
+        # compute: 2 FLOPs per active param per token, plus attention
+        # scores/values (2 matmuls over the attended span per layer/head)
+        flops = 2.0 * self.n_active * new_toks
+        if kv_heads:
+            flops += (4.0 * layers * cfg.n_heads * head * new_toks * span)
+        # memory: every active weight read once per call (per chip), plus
+        # the KV cache read over the attended span and written for new toks
+        hbm = self.n_active * b / self.tp
+        if kv_heads:
+            kv_row = 2.0 * layers * kv_heads * head * b
+            hbm += kv_row * (span * max(reqs, 1) + new_toks)
+        # collective: one ring all-reduce of the activations per layer
+        coll = 0.0
+        if self.tp > 1:
+            wire = 2.0 * (self.tp - 1) / self.tp
+            coll = (layers * new_toks * cfg.d_model * b * wire) / self.ici_bw
+        return max(flops / (self.peak_flops * self.tp / 1.0),
+                   hbm / self.hbm_bw, coll)
+
+    def predict_points(self, points: Sequence[PointKey]) -> np.ndarray:
+        return np.array([self._point_seconds(*p) for p in points])
+
+
+# -- registry ----------------------------------------------------------
+
+BackendFactory = Callable[..., LatencyBackend]
+
+_REGISTRY: Dict[str, BackendFactory] = {}
+
+
+def register_backend(name: str, factory: BackendFactory):
+    """Register a latency-backend factory under ``name``.  Factories take
+    ``(cfg, db, *, hardware, backend, sched_config, max_seq, tp, lm)``
+    and may ignore arguments they don't need."""
+    _REGISTRY[name] = factory
+
+
+def available_backends() -> Tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))
+
+
+def make_backend(name: str, cfg: ModelConfig,
+                 db: Optional[LatencyDB] = None, *, hardware: str,
+                 backend: str = "xla", sched_config: SchedulerConfig,
+                 max_seq: int, tp: int = 1,
+                 lm: Optional[LatencyModel] = None,
+                 **kw) -> LatencyBackend:
+    """Construct a registered backend by name (the sweep/CLI entry)."""
+    factory = _REGISTRY.get(name)
+    if factory is None:
+        raise KeyError(f"unknown latency backend {name!r}; "
+                       f"registered: {', '.join(available_backends())}")
+    return factory(cfg, db, hardware=hardware, backend=backend,
+                   sched_config=sched_config, max_seq=max_seq, tp=tp,
+                   lm=lm, **kw)
+
+
+register_backend(
+    "dooly",
+    lambda cfg, db, *, hardware, backend, sched_config, max_seq, tp=1,
+    lm=None, **kw: DoolyBackend(
+        cfg, db, hardware=hardware, backend=backend,
+        sched_config=sched_config, max_seq=max_seq, tp=tp, lm=lm, **kw))
+register_backend(
+    "oracle",
+    lambda cfg, db, *, hardware, backend, sched_config, max_seq, tp=1,
+    lm=None, **kw: OracleBackend(
+        cfg, db, hardware=hardware, backend=backend,
+        sched_config=sched_config, max_seq=max_seq, tp=tp, **kw))
+register_backend(
+    "roofline",
+    lambda cfg, db=None, *, hardware=None, backend=None, sched_config,
+    max_seq, tp=1, lm=None, **kw: RooflineBackend(
+        cfg, sched_config=sched_config, max_seq=max_seq, tp=tp, **kw))

@@ -1,0 +1,203 @@
+"""`ProfileStore`: one session object that owns the profiling state.
+
+Before this facade existed, a caller had to wire `LatencyDB`,
+`DoolyProf`, `LatencyModel.shared`, `DoolySim`, and `repro.sweep` by hand
+in the right order; the per-(db, hardware) fit cache hid inside
+`LatencyModel.shared` with no owner and no lifecycle.  `ProfileStore`
+collects all of it behind one handle:
+
+* **lifecycle** — ``open()``/``close()`` (idempotent) or a context
+  manager; closing tears down the DB connection *and* the fit cache, so a
+  reopened store can never serve fits bound to a dead connection;
+* **profiling** — ``ensure_profiled(cfg, ...)`` wraps
+  ``DoolyProf.profile_model`` (skipping models already in the store) and
+  ``profile_comm`` fills the communication sub-schema;
+* **fit cache** — ``model(hardware)`` returns the shared per-hardware
+  `LatencyModel`, owned here; generation-checked invalidation
+  (``LatencyModel.refresh``) keeps it coherent with measurement writes;
+* **backends** — ``backend(name, cfg, ...)`` constructs any registered
+  :class:`~repro.api.backends.LatencyBackend` against this store, and
+  ``simulator(...)``/``sweep(...)`` build the consumer layers on top.
+
+Typical session::
+
+    with ProfileStore("latency.sqlite", hardware="tpu-v5e") as store:
+        store.ensure_profiled(cfg)
+        be = store.backend("dooly", cfg, sched_config=sched, max_seq=128)
+        sim = store.simulator(cfg, sched_config=sched, max_seq=128)
+        result = sim.run(requests)
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+from repro.configs.base import ModelConfig
+from repro.core.database import LatencyDB
+from repro.core.latency_model import LatencyModel
+from repro.core.profiler import DoolyProf, ProfileReport, SweepConfig
+
+
+class ProfileStore:
+    """Session facade over one latency database.
+
+    ``hardware`` and ``oracle`` are session defaults — every method that
+    takes them accepts an override.  A store constructed with ``db=`` wraps
+    an existing (caller-owned) connection and will not close it.
+    """
+
+    def __init__(self, path: str = ":memory:", *,
+                 hardware: str = "tpu-v5e",
+                 oracle: str = "tpu_analytical",
+                 sweep: Optional[SweepConfig] = None,
+                 wal: bool = True,
+                 db: Optional[LatencyDB] = None):
+        self.path = path
+        self.hardware = hardware
+        self.oracle = oracle
+        self.profile_sweep = sweep
+        self.wal = wal
+        self._db: Optional[LatencyDB] = db
+        self._owns_db = db is None
+        self._models: Dict[Tuple[str, bool], LatencyModel] = {}
+        if self._owns_db:
+            self.open()
+
+    @classmethod
+    def wrap(cls, db: LatencyDB, *, hardware: str = "tpu-v5e",
+             oracle: str = "tpu_analytical",
+             sweep: Optional[SweepConfig] = None) -> "ProfileStore":
+        """Adopt an existing LatencyDB without taking ownership (the
+        store's ``close`` leaves it open)."""
+        return cls(hardware=hardware, oracle=oracle, sweep=sweep, db=db)
+
+    # -- lifecycle -----------------------------------------------------
+
+    @property
+    def closed(self) -> bool:
+        return self._db is None or self._db.conn is None
+
+    @property
+    def db(self) -> LatencyDB:
+        if self.closed:
+            raise RuntimeError("ProfileStore is closed (use open() or a "
+                               "fresh context manager)")
+        return self._db
+
+    def open(self) -> "ProfileStore":
+        """Open (or reopen) the underlying database.  Idempotent."""
+        if self.closed:
+            if not self._owns_db:
+                raise RuntimeError("cannot reopen a wrapped LatencyDB; "
+                                   "the owner must reopen it")
+            self._db = LatencyDB(self.path, wal=self.wal)
+        return self
+
+    def close(self):
+        """Close the DB (if owned) and drop the fit cache.  The cache
+        eviction is load-bearing: cached LatencyModels hold the dead
+        connection, and the old ``LatencyModel.shared`` pattern had no
+        owner to do this."""
+        self._models.clear()
+        if self._db is not None and self._owns_db:
+            self._db.close()
+            self._db = None
+
+    def __enter__(self) -> "ProfileStore":
+        return self.open()
+
+    def __exit__(self, exc_type, exc, tb):
+        self.close()
+        return False
+
+    # -- profiling -----------------------------------------------------
+
+    def profiler(self, *, hardware: Optional[str] = None,
+                 oracle: Optional[str] = None,
+                 sweep: Optional[SweepConfig] = None) -> DoolyProf:
+        return DoolyProf(self.db, oracle=oracle or self.oracle,
+                         hardware=hardware or self.hardware,
+                         sweep=sweep or self.profile_sweep)
+
+    def is_profiled(self, cfg: ModelConfig, *, backend: str = "xla",
+                    tp: int = 1, hardware: Optional[str] = None) -> bool:
+        cid = self.db.config_id(cfg.name, backend,
+                                hardware or self.hardware, tp)
+        return bool(self.db.model_operations(cid))
+
+    def ensure_profiled(self, cfg: ModelConfig, *, backend: str = "xla",
+                        tp: int = 1, hardware: Optional[str] = None,
+                        oracle: Optional[str] = None,
+                        sweep: Optional[SweepConfig] = None,
+                        workers: int = 1,
+                        force: bool = False) -> Optional[ProfileReport]:
+        """Profile ``cfg`` into the store unless its call graph is already
+        present (dedup against prior sessions comes free from the DB);
+        returns the report, or None when nothing needed doing."""
+        if not force and self.is_profiled(cfg, backend=backend, tp=tp,
+                                          hardware=hardware):
+            return None
+        prof = self.profiler(hardware=hardware, oracle=oracle, sweep=sweep)
+        return prof.profile_model(cfg, backend=backend, tp=tp,
+                                  workers=workers)
+
+    def profile_comm(self, **kw) -> int:
+        """Fill the communication sub-schema (see
+        ``DoolyProf.profile_comm``); returns the row count."""
+        return self.profiler().profile_comm(**kw)
+
+    # -- fit cache -----------------------------------------------------
+
+    def model(self, hardware: Optional[str] = None, *,
+              use_saved_fits: bool = True) -> LatencyModel:
+        """The shared per-(store, hardware) LatencyModel — each persisted
+        fit is loaded/decoded once per store session no matter how many
+        simulators or sweep scenarios consume it.  Replaces
+        ``LatencyModel.shared`` (deprecated), whose cache had no owner."""
+        hw = hardware or self.hardware
+        key = (hw, use_saved_fits)
+        lm = self._models.get(key)
+        if lm is None:
+            lm = self._models[key] = LatencyModel(
+                self.db, hw, use_saved_fits=use_saved_fits)
+        return lm
+
+    # -- consumers -----------------------------------------------------
+
+    def backend(self, name: str, cfg: ModelConfig, *, sched_config,
+                max_seq: int, backend: str = "xla", tp: int = 1,
+                hardware: Optional[str] = None,
+                use_saved_fits: bool = True, **kw):
+        """Construct a registered :class:`LatencyBackend` against this
+        store (fit-backed backends share ``self.model(hardware)``)."""
+        from repro.api.backends import make_backend
+        hw = hardware or self.hardware
+        return make_backend(name, cfg, self.db, hardware=hw,
+                            backend=backend, sched_config=sched_config,
+                            max_seq=max_seq, tp=tp,
+                            lm=self.model(hw, use_saved_fits=use_saved_fits),
+                            **kw)
+
+    def simulator(self, cfg: ModelConfig, *, sched_config, max_seq: int,
+                  backend: str = "xla", tp: int = 1,
+                  hardware: Optional[str] = None,
+                  latency: str = "dooly", **kw):
+        """A DoolySim whose latency source is the named backend."""
+        from repro.sim.simulator import DoolySim
+        return DoolySim(
+            cfg, sched_config=sched_config, max_seq=max_seq,
+            latency=self.backend(latency, cfg, sched_config=sched_config,
+                                 max_seq=max_seq, backend=backend, tp=tp,
+                                 hardware=hardware, **kw))
+
+    def sweep(self, **kw):
+        """A :class:`repro.sweep.Sweep` bound to this store."""
+        from repro.sweep.runner import Sweep
+        return Sweep(self, **kw)
+
+    def stats(self) -> Dict[str, int]:
+        return self.db.stats()
+
+    def __repr__(self) -> str:
+        state = "closed" if self.closed else "open"
+        return (f"ProfileStore({self.path!r}, hardware={self.hardware!r}, "
+                f"oracle={self.oracle!r}, {state})")

@@ -93,8 +93,8 @@ class LatencyDB:
         # bumped on every fits-table write/delete, same contract
         self.fit_generation = 0
         # shared LatencyModel instances, one per (hardware, use_saved_fits);
-        # populated by LatencyModel.shared so a scenario sweep loads each
-        # persisted fit once per database connection
+        # populated by the deprecated LatencyModel.shared shim — new code
+        # gets the owned equivalent from repro.api.ProfileStore.model
         self._lm_cache: Dict[Tuple[str, bool], object] = {}
 
     def _check_schema_version(self):

@@ -24,11 +24,19 @@ stored coefficient blobs instead of re-solving the ridge systems —
 predictions are bitwise-identical because the float64 coefficients
 round-trip exactly.  Measurement writes invalidate the stored fits (the DB
 deletes them), so a stale warm start silently degrades to refitting.
+
+In-memory fit caches follow the same contract: every prediction entry point
+checks the DB's generation counters (``refresh``) and drops cached
+fits/batches when a foreign write landed, bumping ``epoch`` so downstream
+prediction memos (DoolyBackend's call cache) invalidate too.  Long-lived
+shared instances are owned by :class:`repro.api.ProfileStore`;
+``LatencyModel.shared`` is the deprecated per-connection shim.
 """
 from __future__ import annotations
 
 import math
 import sqlite3
+import warnings
 from dataclasses import dataclass
 from typing import Dict, List, Optional, Sequence, Tuple
 
@@ -97,13 +105,14 @@ class LatencyModel:
     @classmethod
     def shared(cls, db: LatencyDB, hardware: str, *,
                use_saved_fits: bool = True) -> "LatencyModel":
-        """One LatencyModel per (db connection, hardware), cached in the
-        DB's ``_lm_cache`` (cleared on close).  A scenario sweep constructs
-        one DoolySim per (model, hardware, backend, tp) group; routing them
-        through a shared model means each persisted fit is loaded/decoded
-        exactly once per sweep rather than once per simulator.  Generation
-        counters keep the shared instance coherent across DB writes, same
-        as a long-lived private one."""
+        """Deprecated: use :meth:`repro.api.ProfileStore.model`, which owns
+        the per-(db, hardware) fit cache with an explicit lifecycle.  This
+        shim keeps the old per-connection cache (``db._lm_cache``, cleared
+        on close) working for existing callers."""
+        warnings.warn(
+            "LatencyModel.shared is deprecated; use "
+            "repro.api.ProfileStore.model(hardware) instead",
+            DeprecationWarning, stacklevel=2)
         key = (hardware, use_saved_fits)
         lm = db._lm_cache.get(key)
         if lm is None:
@@ -131,8 +140,31 @@ class LatencyModel:
         # set when a write-back fails (read-only DB): stop retrying, the
         # fits live in memory for this session only
         self._persist_failed = False
+        # (measurement_generation, fit_generation) the fit caches were
+        # built against; any foreign write drops them (stale-fit fix)
+        self._cache_gen = (db.measurement_generation, db.fit_generation)
+        #: bumped whenever cached fits are dropped; consumers memoizing
+        #: *predictions* (DoolyBackend's call cache) key their own
+        #: invalidation off it
+        self.epoch = 0
 
     # -- fitting -------------------------------------------------------------
+
+    def refresh(self):
+        """Drop every cached fit if the DB changed since they were built.
+        Called on the prediction entry points, so a shared instance never
+        serves fits computed from measurements that a re-profile has since
+        replaced (previously ``_fits`` was never evicted — the
+        stale-fit-after-reprofile bug)."""
+        gen = (self.db.measurement_generation, self.db.fit_generation)
+        if gen == self._cache_gen:
+            return
+        self._cache_gen = gen
+        if self._fits or self._batches or self._dirty:
+            self._fits.clear()
+            self._batches.clear()
+            self._dirty.clear()
+            self.epoch += 1
 
     def _load_points(self) -> Dict[Tuple[str, str],
                                    List[Tuple[int, int, int, float]]]:
@@ -163,6 +195,7 @@ class LatencyModel:
         return self._saved
 
     def _fit(self, sig_hash: str, phase: str) -> _Fit:
+        self.refresh()
         key = (sig_hash, phase)
         fit = self._fits.get(key)
         if fit is not None:
@@ -204,11 +237,18 @@ class LatencyModel:
         except sqlite3.OperationalError:
             self._persist_failed = True
             self._dirty.clear()
+            # the failed transaction's rollback bumped the generations;
+            # don't let refresh() treat our own no-op as a foreign write
+            self._cache_gen = (self.db.measurement_generation,
+                               self.db.fit_generation)
             return 0
         if self._saved is not None:
             for key in self._dirty:
                 self._saved[key] = self._fits[key]
             self._saved_gen = self.db.fit_generation
+        # our own write-back is not an invalidation
+        self._cache_gen = (self.db.measurement_generation,
+                           self.db.fit_generation)
         n = len(self._dirty)
         self._dirty.clear()
         return n
@@ -230,6 +270,7 @@ class LatencyModel:
             self.persist_fits()
 
     def _compile_batch(self, sigs: Tuple[str, ...], phase: str) -> _BatchFit:
+        self.refresh()
         key = (sigs, phase)
         batch = self._batches.get(key)
         if batch is None:

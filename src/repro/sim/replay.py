@@ -114,6 +114,18 @@ class PlanTrace:
                 "finish": finish,
                 "n_done": np.array([self.n_requests])}
 
+    def evaluate(self, backend) -> Dict[str, np.ndarray]:
+        """Price this trace through any
+        :class:`repro.api.backends.LatencyBackend` and return the metric
+        dict of :meth:`metrics` plus ``latencies`` (per iteration) and
+        ``makespan`` — the one-call form of the replay/predict split."""
+        lat = np.asarray(backend.predict_trace(self.plans))
+        t = self.times(lat)
+        met = self.metrics(lat, times=t)
+        met["latencies"] = lat
+        met["makespan"] = np.array([self.makespan(lat, times=t)])
+        return met
+
     def apply(self, requests: Sequence[Request], latencies: np.ndarray, *,
               times: Optional[np.ndarray] = None):
         """Write wall-clock token times back onto the caller's Request

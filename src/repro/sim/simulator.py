@@ -2,54 +2,39 @@
 
 Drives the *same* Scheduler class the real engine runs (bit-identical batch
 composition), advances virtual time by predicted iteration latency, and
-predicts each iteration by walking the model's call graph — per-signature
-regression models over the latency database, counts from the
-model_operations table (the collapsed canonical modules x multiplicity).
+consumes those predictions exclusively through the
+:class:`repro.api.backends.LatencyBackend` protocol — the simulator
+schedules, the backend prices.
 
-Mirrors the engine's execution structure: each prefill chunk is one model
-call at (toks=c, reqs=1, ctx=start); the decode batch is one call at
-(reqs=max_num_seqs, ctx=max_seq) — static TPU-style shapes.  ``lm_head``
-ops run on the chunk's last position only, matching Model.prefill_chunk.
+The default backend is :class:`repro.api.backends.DoolyBackend` (the
+paper's path: per-signature regression models over the latency database,
+counts from the model_operations table), constructed from the legacy
+``(cfg, db, hardware, backend, ...)`` arguments so existing call sites
+keep working unchanged.  Pass ``latency=`` to drop in any other backend —
+``repro.api.ProfileStore.simulator(...)`` is the facade entry point.
+The prediction engine itself (row groups, memoized call cache, batched
+``predict_batch_points`` evaluation, the ``predict_call_scalar`` reference
+path) lives in the backend module; `DoolySim`'s ``predict_*`` methods are
+thin delegates kept for compatibility, bitwise-identical because they run
+the same code.
 
-Prediction is vectorized: at construction the call-graph rows are split
-into groups that share a workload mapping (stateful rows follow the call's
-phase/ctx; MoE and stateless operator rows always evaluate as prefill with
-ctx=0; ``lm_head`` rows clamp to the chunk's last position), each group is
-evaluated through ``LatencyModel.predict_batch`` as one matmul, and
-``predict_call`` is memoized on (phase, toks, reqs, ctx) — decode batches
-and power-of-two-bucketed prefill chunks draw from a tiny discrete set, so
-a long trace collapses to a handful of distinct evaluations.  The scalar
-reference path is kept as ``predict_call_scalar`` (equivalence tests and
-the perf benchmark's baseline).
-
-Whole traces batch one level higher: ``predict_trace`` flattens a list of
-iteration plans into the set of distinct workload points, evaluates every
-missing point with one feature matrix and one
-``LatencyModel.predict_batch_points`` matmul per (row group, phase), then
-assembles per-iteration latencies with ``np.bincount`` instead of a Python
-loop per call.  ``predict_iteration`` is a thin slice over it (a
-single-plan trace).  Plans may be live ``IterationPlan`` objects or the
-``(chunk_lengths, n_decodes)`` tuples that ``run(record_plans=True)``
-returns, so a recorded trace can be re-predicted without re-scheduling.
-
-Since the sweep refactor, ``run`` itself is two decoupled layers: for a
+Since the sweep refactor, ``run`` is two decoupled layers: for a
 latency-independent workload (equal arrivals) it delegates scheduler
-replay to the pure ``sim.replay.replay_schedule`` and predicts the whole
+replay to the pure ``sim.replay.replay_schedule`` and prices the whole
 recorded trace in one ``predict_trace`` call; staggered-arrival workloads
 keep the interleaved scalar loop (admission depends on the predicted
-clock).  ``predict_traces`` extends the batching across *scenarios* — many
-traces sharing this sim's fitted model evaluate their union of workload
-points in one pass — and the module-level ``predict_scenarios`` groups
-(sim, trace) pairs by fitted model so an N-scenario sweep runs one batched
-prediction per (cfg, hardware, backend) group.
+clock).  ``predict_traces`` extends the batching across *scenarios*, and
+the module-level ``predict_scenarios`` groups (sim, trace) pairs by
+latency backend so an N-scenario sweep runs one batched prediction per
+fitted (cfg, hardware, backend, tp) group.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.api.backends import DoolyBackend, LatencyBackend
 from repro.configs.base import ModelConfig
 from repro.core.database import LatencyDB
 from repro.core.latency_model import LatencyModel
@@ -57,249 +42,109 @@ from repro.serving.scheduler import (IterationPlan, Request, Scheduler,
                                      SchedulerConfig)
 from repro.sim.replay import is_latency_independent, replay_schedule
 
-_STATEFUL = ("self_attn", "cross_attn", "mla_attn", "mamba", "moe")
-
-
-def _bucket_chunks_vec(lengths: np.ndarray, chunk_size: int) -> np.ndarray:
-    """Vectorized ``engine.bucket_chunk``: smallest power-of-two bucket
-    >= length (min 8), clamped to chunk_size; lengths beyond chunk_size
-    pass through.  Exact for integer lengths (log2 of a power of two is
-    exact in float64)."""
-    c = np.maximum(lengths.astype(np.float64), 1.0)
-    b = 8.0 * np.exp2(np.ceil(np.maximum(np.log2(c / 8.0), 0.0)))
-    return np.where(lengths <= chunk_size,
-                    np.minimum(b, chunk_size),
-                    lengths).astype(np.int64)
-
-
-@dataclass
-class _OpRow:
-    sig: str
-    module: str
-    count: int
-    kind: str            # op_name from signatures table
-    stateful: bool
-
 
 class DoolySim:
-    def __init__(self, cfg: ModelConfig, db: LatencyDB, *, hardware: str,
-                 backend: str, sched_config: SchedulerConfig, max_seq: int,
+    def __init__(self, cfg: Optional[ModelConfig] = None,
+                 db: Optional[LatencyDB] = None, *,
+                 hardware: Optional[str] = None,
+                 backend: Optional[str] = None,
+                 sched_config: Optional[SchedulerConfig] = None,
+                 max_seq: Optional[int] = None,
                  overhead_s: float = 0.0, chunk_overhead_s: float = 0.0,
-                 tp: int = 1, lm: Optional[LatencyModel] = None):
-        self.cfg = cfg
-        self.db = db
-        self.chunk_overhead_s = chunk_overhead_s
-        self.decode_scale = 1.0
-        # a sweep passes LatencyModel.shared(db, hardware) so N scenarios
-        # on one hardware load each persisted fit exactly once
-        self.lm = lm if lm is not None else LatencyModel(db, hardware)
-        self.sched_config = sched_config
-        self.max_seq = max_seq
-        self.overhead_s = overhead_s
-        cid = db.config_id(cfg.name, backend, hardware, tp)
-        self.rows: List[_OpRow] = []
-        for sig, module, count in db.model_operations(cid):
-            meta = db.signature(sig)
-            kind = meta[0] if meta else "?"
-            self.rows.append(_OpRow(sig, module, count, kind,
-                                    kind in _STATEFUL))
-        # group rows by workload mapping, built once: (follows_call_phase,
-        # lm_head) -> (sig tuple, counts vector).  follows_call_phase is
-        # stateful non-MoE; everything else evaluates as prefill/ctx=0.
-        self._groups: Dict[Tuple[bool, bool],
-                           Tuple[Tuple[str, ...], np.ndarray]] = {}
-        buckets: Dict[Tuple[bool, bool], List[_OpRow]] = {}
-        for row in self.rows:
-            k = (row.stateful and row.kind != "moe", "lm_head" in row.module)
-            buckets.setdefault(k, []).append(row)
-        for k, rows in buckets.items():
-            self._groups[k] = (tuple(r.sig for r in rows),
-                               np.array([float(r.count) for r in rows]))
-        self._call_cache: Dict[Tuple[str, int, int, int], float] = {}
+                 tp: int = 1, lm: Optional[LatencyModel] = None,
+                 latency: Optional[LatencyBackend] = None):
+        if latency is None:
+            if None in (cfg, db, hardware, backend, sched_config, max_seq):
+                raise TypeError(
+                    "DoolySim needs either a latency backend (latency=...) "
+                    "or the full legacy argument set (cfg, db, hardware=, "
+                    "backend=, sched_config=, max_seq=) to build the "
+                    "default DoolyBackend")
+            latency = DoolyBackend(
+                cfg, db, hardware=hardware, backend=backend,
+                sched_config=sched_config, max_seq=max_seq, tp=tp, lm=lm,
+                overhead_s=overhead_s, chunk_overhead_s=chunk_overhead_s)
+        self.latency = latency
+        self.cfg = cfg if cfg is not None else latency.cfg
+        self.sched_config = (sched_config if sched_config is not None
+                             else latency.sched_config)
+        self.max_seq = max_seq if max_seq is not None else latency.max_seq
 
-    # ------------------------------------------------------------------
+    # -- delegated prediction surface ----------------------------------
+    # The engine lives on the backend; these stay for compatibility (and
+    # because "the simulator's prediction" is a natural way to ask).
+
+    @property
+    def db(self):
+        return self.latency.db
+
+    @property
+    def lm(self):
+        return self.latency.lm
+
+    @property
+    def rows(self):
+        return self.latency.rows
+
+    @property
+    def _call_cache(self):
+        return self.latency._call_cache
+
+    @property
+    def overhead_s(self) -> float:
+        return self.latency.overhead_s
+
+    @overhead_s.setter
+    def overhead_s(self, v: float):
+        self.latency.overhead_s = v
+
+    @property
+    def chunk_overhead_s(self) -> float:
+        return self.latency.chunk_overhead_s
+
+    @chunk_overhead_s.setter
+    def chunk_overhead_s(self, v: float):
+        self.latency.chunk_overhead_s = v
+
+    @property
+    def decode_scale(self) -> float:
+        return self.latency.decode_scale
+
+    @decode_scale.setter
+    def decode_scale(self, v: float):
+        self.latency.decode_scale = v
 
     def predict_call(self, *, phase: str, toks: int, reqs: int,
                      ctx: int) -> float:
-        """One model call: sum per-signature predictions over the call
-        graph.  Vectorized (one predict_batch matmul per row group) and
-        memoized on the workload key."""
-        key = (phase, toks, reqs, ctx)
-        cached = self._call_cache.get(key)
-        if cached is not None:
-            return cached
-        total = 0.0
-        for (follows_phase, lm_head), (sigs, counts) in self._groups.items():
-            t = 1 if lm_head and phase == "prefill" else toks
-            if follows_phase:
-                preds = self.lm.predict_batch(sigs, phase, toks=t,
-                                              reqs=reqs, ctx=ctx)
-            else:
-                preds = self.lm.predict_batch(sigs, "prefill", toks=t,
-                                              reqs=reqs, ctx=0)
-            total += float(counts @ preds)
-        self._call_cache[key] = total
-        return total
+        return self.latency.predict_call(phase=phase, toks=toks, reqs=reqs,
+                                         ctx=ctx)
 
     def predict_call_scalar(self, *, phase: str, toks: int, reqs: int,
                             ctx: int) -> float:
-        """Reference scalar path: per-row LatencyModel.predict, no caching.
-        predict_call must match this within 1e-9."""
-        total = 0.0
-        for row in self.rows:
-            t, r = toks, reqs
-            if "lm_head" in row.module and phase == "prefill":
-                t = 1
-            if row.stateful:
-                if row.kind == "moe":
-                    total += row.count * self.lm.predict(
-                        row.sig, "prefill", toks=t, reqs=r, ctx=0)
-                else:
-                    total += row.count * self.lm.predict(
-                        row.sig, phase, toks=t, reqs=r, ctx=ctx)
-            else:
-                total += row.count * self.lm.predict(
-                    row.sig, "prefill", toks=t, reqs=r, ctx=0)
-        return total
+        return self.latency.predict_call_scalar(phase=phase, toks=toks,
+                                                reqs=reqs, ctx=ctx)
 
-    def _normalize_plan(self, plan) -> Tuple[Tuple[int, ...], bool]:
-        """(bucketed chunk token counts, has_decodes) for an IterationPlan
-        or a recorded (chunk_lengths, n_decodes) tuple."""
-        from repro.serving.engine import bucket_chunk
-        if isinstance(plan, IterationPlan):
-            lengths: Tuple[int, ...] = tuple(c.length for c in plan.prefills)
-            n_dec = len(plan.decodes)
-        else:
-            lengths, n_dec = plan
-        if self.cfg.ssm_state <= 0:
-            lengths = tuple(bucket_chunk(length,
-                                         self.sched_config.chunk_size)
-                            for length in lengths)
-        return lengths, bool(n_dec)
-
-    def _eval_calls(self, keys: List[Tuple[str, int, int, int]]):
-        """Evaluate predict_call for many (phase, toks, reqs, ctx) keys at
-        once — per row group and mapped phase, one feature matrix and one
-        predict_batch_points matmul — and memoize the totals."""
-        totals = np.zeros(len(keys))
-        for (follows_phase, lm_head), (sigs, counts) in self._groups.items():
-            by_phase: Dict[str, Tuple[List[int], List[Tuple[int, int, int]]]]
-            by_phase = {}
-            for j, (phase, toks, reqs, ctx) in enumerate(keys):
-                t = 1 if lm_head and phase == "prefill" else toks
-                if follows_phase:
-                    ph, pt = phase, (t, reqs, ctx)
-                else:
-                    ph, pt = "prefill", (t, reqs, 0)
-                idx, pts = by_phase.setdefault(ph, ([], []))
-                idx.append(j)
-                pts.append(pt)
-            for ph, (idx, pts) in by_phase.items():
-                preds = self.lm.predict_batch_points(sigs, ph, pts)
-                totals[idx] += preds @ counts
-        for j, key in enumerate(keys):
-            self._call_cache[key] = float(totals[j])
+    def predict_points(self, points) -> np.ndarray:
+        return self.latency.predict_points(points)
 
     def predict_trace(self, plans) -> np.ndarray:
-        """Per-iteration predicted latency (seconds) for a whole trace of
-        plans, batched: chunk bucketing is vectorized across the flattened
-        trace, every distinct workload point is evaluated once (through the
-        memoized call cache), and per-plan sums assemble with bincount.
-        predict_iteration(p) == predict_trace([p])[0]."""
-        n = len(plans)
-        cache = self._call_cache
-        dec_key = ("decode", 1, self.sched_config.max_num_seqs, self.max_seq)
-        if n < 16:
-            # small traces (predict_iteration's single plan): plain Python
-            # keeps run()'s per-iteration cost at dict-lookup level
-            norm = [self._normalize_plan(p) for p in plans]
-            missing = sorted(
-                {("prefill", c, 1, self.max_seq)
-                 for chunks, _ in norm for c in chunks}
-                | ({dec_key} if any(d for _, d in norm) else set()))
-            missing = [k for k in missing if k not in cache]
-            if missing:
-                self._eval_calls(missing)
-            out = np.empty(n)
-            for i, (chunks, has_dec) in enumerate(norm):
-                total = self.overhead_s + self.chunk_overhead_s * len(chunks)
-                for c in chunks:
-                    total += cache[("prefill", c, 1, self.max_seq)]
-                if has_dec:
-                    total += self.decode_scale * cache[dec_key]
-                out[i] = total
-            return out
-        # flatten the whole trace, bucket once, assemble vectorized
-        counts = np.empty(n, dtype=np.intp)
-        dec = np.empty(n, dtype=np.float64)
-        raw: List[int] = []
-        for i, plan in enumerate(plans):
-            if isinstance(plan, IterationPlan):
-                lengths = [c.length for c in plan.prefills]
-                n_dec = len(plan.decodes)
-            else:
-                lengths, n_dec = plan
-            counts[i] = len(lengths)
-            dec[i] = 1.0 if n_dec else 0.0
-            raw.extend(lengths)
-        flat = np.asarray(raw, dtype=np.int64)
-        if self.cfg.ssm_state <= 0:
-            flat = _bucket_chunks_vec(flat, self.sched_config.chunk_size)
-        uniq, inv = np.unique(flat, return_inverse=True)
-        keys = [("prefill", int(c), 1, self.max_seq) for c in uniq]
-        if dec.any():
-            keys.append(dec_key)
-        missing = [k for k in keys if k not in cache]
-        if missing:
-            self._eval_calls(missing)
-        lat_uniq = np.fromiter((cache[k] for k in keys[:len(uniq)]),
-                               dtype=np.float64, count=len(uniq))
-        plan_idx = np.repeat(np.arange(n, dtype=np.intp), counts)
-        chunk_sum = np.bincount(plan_idx, weights=lat_uniq[inv], minlength=n)
-        dec_lat = cache[dec_key] if dec.any() else 0.0
-        return (self.overhead_s + self.chunk_overhead_s * counts
-                + chunk_sum + dec * (self.decode_scale * dec_lat))
+        return self.latency.predict_trace(plans)
 
     def predict_iteration(self, plan: IterationPlan) -> float:
-        return float(self.predict_trace((plan,))[0])
+        return float(self.latency.predict_plan(plan))
 
     def predict_traces(self, traces: Sequence[Sequence]) -> List[np.ndarray]:
-        """Cross-scenario batching: per-iteration latencies for *many* plan
-        traces that share this sim's fitted model.  The traces are
-        flattened into one ``predict_trace`` pass, so the union of their
-        distinct workload points is evaluated with one feature matrix and
-        one matmul per (row group, phase) — N scenarios cost one batched
-        prediction instead of N."""
-        flat = [p for trace in traces for p in trace]
-        lat = self.predict_trace(flat)
-        out: List[np.ndarray] = []
-        off = 0
-        for trace in traces:
-            out.append(lat[off:off + len(trace)])
-            off += len(trace)
-        return out
+        return self.latency.predict_traces(traces)
 
     def predict_record(self, rec) -> float:
-        """Model-time prediction for an engine IterationRecord (no
-        overhead terms) — used for calibration."""
-        from repro.serving.engine import bucket_chunk
-        total = 0.0
-        for length, start in rec.chunks:
-            c = length if self.cfg.ssm_state > 0 else bucket_chunk(
-                length, self.sched_config.chunk_size)
-            total += self.predict_call(phase="prefill", toks=c, reqs=1,
-                                       ctx=self.max_seq)
-        if rec.n_decodes:
-            total += self.decode_scale * self.predict_call(
-                phase="decode", toks=1,
-                reqs=self.sched_config.max_num_seqs, ctx=self.max_seq)
-        return total
+        return self.latency.predict_record(rec)
 
     def calibrate(self, records) -> Dict[str, float]:
         """Fit the engine's CPU overhead model (a + b * n_chunks) from a
         calibration run — the Vidur-style CPU-overhead profiling step.
         Median residuals per iteration composition (robust to queue noise,
-        avoids chunk/decode colinearity)."""
+        avoids chunk/decode colinearity).  Writes the fitted terms onto the
+        latency backend (any backend can be calibrated)."""
         # reset so recalibration is idempotent: predict_record applies
         # decode_scale, and fitting the ratio on already-scaled predictions
         # would compound corrections across calls
@@ -392,22 +237,23 @@ class DoolySim:
         return out
 
 
-def predict_scenarios(items: Sequence[Tuple["DoolySim", Sequence]]
+def predict_scenarios(items: Sequence[Tuple[Any, Sequence]]
                       ) -> List[np.ndarray]:
     """Batched prediction across scenarios: ``items`` is a sequence of
-    ``(sim, plans)`` pairs.  Scenarios are grouped by sim — i.e. by fitted
-    (cfg, hardware, backend, tp) model — and each group's traces evaluate
-    together through ``DoolySim.predict_traces``, so every distinct
-    workload point in the group costs one row of one matmul regardless of
-    how many scenarios share it.  Returns per-scenario latency arrays in
-    input order."""
-    groups: Dict[int, Tuple["DoolySim", List[int], List[Sequence]]] = {}
+    ``(sim_or_backend, plans)`` pairs.  Scenarios are grouped by latency
+    backend — i.e. by fitted (cfg, hardware, backend, tp) model — and each
+    group's traces evaluate together through ``predict_traces``, so every
+    distinct workload point in the group costs one row of one matmul
+    regardless of how many scenarios share it.  Returns per-scenario
+    latency arrays in input order."""
+    groups: Dict[int, Tuple[Any, List[int], List[Sequence]]] = {}
     for i, (sim, plans) in enumerate(items):
-        sim_, idxs, traces = groups.setdefault(id(sim), (sim, [], []))
+        be = getattr(sim, "latency", sim)
+        be_, idxs, traces = groups.setdefault(id(be), (be, [], []))
         idxs.append(i)
         traces.append(plans)
     out: List[Optional[np.ndarray]] = [None] * len(items)
-    for sim, idxs, traces in groups.values():
-        for i, lat in zip(idxs, sim.predict_traces(traces)):
+    for be, idxs, traces in groups.values():
+        for i, lat in zip(idxs, be.predict_traces(traces)):
             out[i] = lat
     return out

@@ -4,12 +4,18 @@ store, profiling missing (model, backend) pairs on the fly.
     PYTHONPATH=src python -m repro.sweep                       # 32-scenario default grid
     PYTHONPATH=src python -m repro.sweep --models llama3-8b \
         --seqs 4,8 --tokens 64,128 --rates burst,20 --json sweep.json
+    PYTHONPATH=src python -m repro.sweep --stream              # results as they complete
 
 The default grid is 2 models x 2 scheduler seq limits x 2 token budgets x
 2 workload kinds x 2 arrival rates = 32 scenarios; burst-arrival scenarios
 evaluate by exact scheduler replay (shared across models), finite-rate
 ones by the interleaved loop.  Prints per-scenario TTFT/TPOT/makespan and
-the cost/latency frontier.
+the cost/latency frontier.  ``--stream`` switches to the
+``Sweep.iter_results`` generator: each scenario's line prints the moment
+its fit group's batched prediction completes, so huge grids emit results
+incrementally instead of materializing the whole ``SweepResult`` first.
+``--latency`` picks the registered latency backend (dooly / roofline /
+oracle) every scenario is priced with.
 """
 from __future__ import annotations
 
@@ -19,12 +25,12 @@ import math
 import sys
 from typing import List
 
+from repro.api import ProfileStore, available_backends
 from repro.configs import get_smoke_config
-from repro.core.database import LatencyDB
-from repro.core.profiler import DoolyProf, SweepConfig
+from repro.core.profiler import SweepConfig
 from repro.sweep.grid import (SchedSpec, WorkloadSpec, expand_grid,
                               grid_summary)
-from repro.sweep.runner import Sweep
+from repro.sweep.runner import SweepResult
 
 PROFILE_SWEEP = SweepConfig(toks=(8, 64), reqs=(1, 2), ctx=(64, 128),
                             op_points=((8, 1), (16, 1), (64, 1), (32, 4)))
@@ -48,6 +54,9 @@ def build_parser() -> argparse.ArgumentParser:
     p.add_argument("--backends", default="xla")
     p.add_argument("--hardware", default="tpu-v5e")
     p.add_argument("--oracle", default="tpu_analytical")
+    p.add_argument("--latency", default="dooly",
+                   choices=available_backends(),
+                   help="registered latency backend to price scenarios with")
     p.add_argument("--tp", type=int, default=1)
     p.add_argument("--seqs", default="4,8", help="scheduler max_num_seqs axis")
     p.add_argument("--tokens", default="64,128",
@@ -61,6 +70,9 @@ def build_parser() -> argparse.ArgumentParser:
     p.add_argument("--max-seq", type=int, default=128)
     p.add_argument("--metric", default="tpot_mean",
                    help="frontier latency metric (a ScenarioResult field)")
+    p.add_argument("--stream", action="store_true",
+                   help="print each result as its fit group completes "
+                        "(Sweep.iter_results) instead of one final table")
     p.add_argument("--db", default=":memory:",
                    help="latency DB path (profiles persist across runs)")
     p.add_argument("--json", default=None, help="write results to this path")
@@ -83,22 +95,32 @@ def main(argv=None) -> int:
                             max_seq=args.max_seq)
     print(f"grid: {grid_summary(scenarios)}")
 
-    with LatencyDB(args.db) as db:
-        prof = DoolyProf(db, oracle=args.oracle, hardware=args.hardware,
-                         sweep=PROFILE_SWEEP)
+    with ProfileStore(args.db, hardware=args.hardware, oracle=args.oracle,
+                      sweep=PROFILE_SWEEP) as store:
         for m in models:
             cfg = get_smoke_config(m)
             for b in backends:
-                cid = db.config_id(cfg.name, b, args.hardware, args.tp)
-                if db.model_operations(cid):
-                    continue        # already profiled into this store
-                rep = prof.profile_model(cfg, backend=b, tp=args.tp)
-                print(f"profiled {m}/{b}: {rep.n_new} new signatures, "
-                      f"{rep.n_reused} reused")
-        sweep = Sweep(db)
-        out = sweep.run(scenarios)
+                rep = store.ensure_profiled(cfg, backend=b, tp=args.tp)
+                if rep is not None:
+                    print(f"profiled {m}/{b}: {rep.n_new} new signatures, "
+                          f"{rep.n_reused} reused")
+        sweep = store.sweep(latency=args.latency)
+        if args.stream:
+            results = []
+            for r in sweep.iter_results(scenarios):
+                results.append(r)
+                print(f"[{len(results):4d}/{len(scenarios)}] "
+                      f"{r.scenario.label():58s} {r.mode:12s} "
+                      f"makespan {r.makespan:9.4f}  tpot.p50 "
+                      f"{r.tpot_p50:9.4f}  cost {r.cost:8.3f}")
+            out = SweepResult(
+                results=sorted(results, key=lambda r: r.index),
+                summary=dict(sweep.last_summary))
+        else:
+            out = sweep.run(scenarios)
 
-    print(out.table(args.metric))
+    if not args.stream:
+        print(out.table(args.metric))
     print(f"\nsummary: {out.summary}")
     front = out.frontier(args.metric)
     print(f"cost/latency frontier ({args.metric}):")

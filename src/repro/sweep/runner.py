@@ -8,11 +8,14 @@ The driver composes the two decoupled simulation layers:
    actually sees; scenarios differing in model / hardware / backend — or
    in workload content that doesn't change structure — share the
    replayed :class:`PlanTrace`.
-2. *Cross-scenario prediction* — one batched ``predict_scenarios`` pass;
-   scenarios sharing a fitted (model, hardware, backend, tp) group
-   evaluate the union of their workload points in one matmul per
-   (row group, phase), against latency models shared per hardware
-   (``LatencyModel.shared``) so persisted fits load once per sweep.
+2. *Cross-scenario prediction* — one batched pass per fitted (model,
+   hardware, backend, tp) group through the
+   :class:`~repro.api.backends.LatencyBackend` protocol; scenarios
+   sharing a group evaluate the union of their workload points in one
+   matmul per (row group, phase), against latency models shared per
+   hardware (``ProfileStore.model``) so persisted fits load once per
+   sweep.  ``latency="roofline"``/``"oracle"`` drops a different
+   registered backend into the same machinery.
 
 Scenario classification (the latency-(in)dependence split): equal-arrival
 workloads are *exact-replay* — the replayed plans are provably the plans
@@ -20,29 +23,36 @@ workloads are *exact-replay* — the replayed plans are provably the plans
 ``PlanTrace.metrics``.  Staggered-arrival workloads are *full-loop* —
 batch composition depends on the predicted clock, so each runs the
 interleaved ``DoolySim.run`` (whose per-iteration predictions still hit
-the sim's memoized call cache, shared across the group's scenarios).
+the backend's memoized call cache, shared across the group's scenarios).
 
 On top, scenarios that resolve to an identical (plan-trace content,
 sim) pair — e.g. synthetic workloads differing only in the token-content
 seed — are deduplicated: evaluated once, results shared.  That is the
 paper's redundancy-awareness applied to simulation instead of profiling.
+
+``iter_results`` is the streaming form: results are yielded per scenario
+as each fit group's batched prediction completes, so a large grid never
+materializes the whole ``SweepResult`` before the first number is
+available (``python -m repro.sweep --stream``).  ``run`` consumes it and
+reassembles input order.
 """
 from __future__ import annotations
 
 import time
 from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional, Sequence, Tuple
+from typing import (Callable, Dict, Iterator, List, Optional, Sequence,
+                    Tuple)
 
 import numpy as np
 
+from repro.api.store import ProfileStore
 from repro.configs import get_smoke_config
 from repro.core.database import LatencyDB
-from repro.core.latency_model import LatencyModel
 from repro.serving.scheduler import Request
 from repro.sim.metrics import request_metrics
 from repro.sim.replay import (PlanTrace, clone_sorted,
                               is_latency_independent, replay_schedule)
-from repro.sim.simulator import DoolySim, predict_scenarios
+from repro.sim.simulator import DoolySim
 from repro.sweep.grid import Scenario, WorkloadSpec
 
 #: relative accelerator price per second, per hardware name (tp multiplies)
@@ -63,6 +73,7 @@ class ScenarioResult:
     tpot_p90: float
     tokens_per_s: float             # generated tokens / makespan
     cost: float                     # accelerator-seconds x price x tp
+    index: int = -1                 # position in the submitted grid
 
     def to_json(self) -> Dict:
         out = {k: getattr(self, k) for k in
@@ -112,25 +123,42 @@ class SweepResult:
 
 
 class Sweep:
-    """Batch-evaluates scenario grids against one latency database.
+    """Batch-evaluates scenario grids against one profile store.
 
-    ``config_fn`` resolves a scenario's model name to a ModelConfig
-    (defaults to the smoke registry — the profile store must have been
-    built with the same configs)."""
+    The first argument may be a :class:`repro.api.ProfileStore` or a bare
+    ``LatencyDB`` (wrapped on the fly).  ``config_fn`` resolves a
+    scenario's model name to a ModelConfig (defaults to the smoke registry
+    — the profile store must have been built with the same configs);
+    ``latency`` names the registered backend every scenario is priced
+    with."""
 
-    def __init__(self, db: LatencyDB, *,
+    def __init__(self, db, *,
                  config_fn: Callable = get_smoke_config,
                  hw_cost: Optional[Dict[str, float]] = None,
-                 use_saved_fits: bool = True):
-        self.db = db
+                 use_saved_fits: bool = True,
+                 latency: str = "dooly"):
+        if isinstance(db, ProfileStore):
+            self.store = db
+        elif isinstance(db, LatencyDB):
+            self.store = ProfileStore.wrap(db)
+        else:
+            raise TypeError(f"expected ProfileStore or LatencyDB, got "
+                            f"{type(db).__name__}")
         self.config_fn = config_fn
         self.hw_cost = dict(DEFAULT_HW_COST if hw_cost is None else hw_cost)
         self.use_saved_fits = use_saved_fits
+        self.latency_name = latency
+        #: summary counters of the most recent iter_results/run pass
+        self.last_summary: Optional[Dict[str, float]] = None
         self._requests: Dict[WorkloadSpec, List[Request]] = {}
         self._struct_keys: Dict[WorkloadSpec, Tuple] = {}
         self._traces: Dict[Tuple, PlanTrace] = {}
         self._trace_keys: Dict[int, Tuple] = {}     # id(trace) -> content key
         self._sims: Dict[Tuple, DoolySim] = {}
+
+    @property
+    def db(self) -> LatencyDB:
+        return self.store.db
 
     # -- memoized layers ------------------------------------------------
 
@@ -172,22 +200,24 @@ class Sweep:
         return key
 
     def sim(self, scn: Scenario) -> DoolySim:
-        """One DoolySim per sim_key, all sims on one hardware sharing one
-        LatencyModel so each persisted fit loads exactly once."""
+        """One DoolySim per sim_key, its latency source built through the
+        store so all backends on one hardware share one LatencyModel and
+        each persisted fit loads exactly once."""
         sim = self._sims.get(scn.sim_key)
         if sim is None:
             cfg = self.config_fn(scn.model)
-            sim = DoolySim(
-                cfg, self.db, hardware=scn.hardware, backend=scn.backend,
-                sched_config=scn.sched.to_config(), max_seq=scn.max_seq,
-                tp=scn.tp,
-                lm=LatencyModel.shared(self.db, scn.hardware,
-                                       use_saved_fits=self.use_saved_fits))
-            if not sim.rows:
+            be = self.store.backend(
+                self.latency_name, cfg, sched_config=scn.sched.to_config(),
+                max_seq=scn.max_seq, backend=scn.backend, tp=scn.tp,
+                hardware=scn.hardware, use_saved_fits=self.use_saved_fits)
+            rows = getattr(be, "rows", None)
+            if rows is not None and not rows:
                 raise RuntimeError(
                     f"no call-graph rows for ({scn.model}, {scn.backend}, "
                     f"{scn.hardware}, tp={scn.tp}) — profile the model "
                     "into this database first")
+            sim = DoolySim(cfg, sched_config=scn.sched.to_config(),
+                           max_seq=scn.max_seq, latency=be)
             self._sims[scn.sim_key] = sim
         return sim
 
@@ -197,8 +227,8 @@ class Sweep:
         return self.hw_cost.get(scn.hardware, 1.0) * scn.tp * makespan
 
     def _result(self, scn: Scenario, mode: str, makespan: float,
-                n_iterations: int, met: Dict[str, np.ndarray]
-                ) -> ScenarioResult:
+                n_iterations: int, met: Dict[str, np.ndarray],
+                index: int) -> ScenarioResult:
         ttft, tpot = met["ttft"], met["tpot"]
         n_generated = int(met["_n_generated"])
         return ScenarioResult(
@@ -211,16 +241,28 @@ class Sweep:
             tpot_p50=float(np.percentile(tpot, 50)) if len(tpot) else 0.0,
             tpot_p90=float(np.percentile(tpot, 90)) if len(tpot) else 0.0,
             tokens_per_s=n_generated / makespan if makespan > 0 else 0.0,
-            cost=self._cost(scn, makespan))
+            cost=self._cost(scn, makespan), index=index)
 
-    def run(self, scenarios: Sequence[Scenario]) -> SweepResult:
+    def iter_results(self, scenarios: Sequence[Scenario]
+                     ) -> Iterator[ScenarioResult]:
+        """Stream per-scenario results as fit groups complete.
+
+        Exact-replay scenarios are grouped by simulator (i.e. fitted
+        model); each group's traces evaluate in one batched
+        ``predict_traces`` pass and its scenarios yield immediately —
+        identical numerics to ``run``, but a million-scenario grid
+        produces its first results after one group instead of after the
+        whole grid.  Full-loop scenarios follow, one at a time.  Yield
+        order is completion order; ``ScenarioResult.index`` maps back to
+        the submitted grid.  ``self.last_summary`` carries the run
+        counters once the generator is exhausted."""
         scenarios = list(scenarios)
         t0 = time.perf_counter()
-        results: List[Optional[ScenarioResult]] = [None] * len(scenarios)
+        self.last_summary = None
 
         # classify: exact-replay (latency-independent) vs full-loop.
         # used_* track THIS run's distinct traces/sims — the memos persist
-        # across run() calls, so their sizes would overcount on reuse.
+        # across calls, so their sizes would overcount on reuse.
         exact_groups: Dict[Tuple, List[int]] = {}
         loop_idx: List[int] = []
         used_traces: set = set()
@@ -233,23 +275,26 @@ class Sweep:
             else:
                 loop_idx.append(i)
 
-        # one batched prediction pass over the deduplicated exact jobs,
-        # grouped by fitted model inside predict_scenarios
-        jobs = [(self.sim(scenarios[idxs[0]]),
-                 self.plan_trace(scenarios[idxs[0]]))
-                for idxs in exact_groups.values()]
-        lats = predict_scenarios([(sim, trace.plans)
-                                  for sim, trace in jobs])
-        for (key, idxs), (sim, trace), lat in zip(exact_groups.items(),
-                                                  jobs, lats):
-            clocks = trace.times(lat)
-            met = trace.metrics(lat, times=clocks)
-            met["_n_generated"] = int(trace.generated.sum())
-            makespan = trace.makespan(lat, times=clocks)
-            for j, i in enumerate(idxs):
-                results[i] = self._result(
-                    scenarios[i], "replay" if j == 0 else "replay-dedup",
-                    makespan, trace.n_iterations, met)
+        # one batched prediction pass per fit group (= per simulator);
+        # dict insertion order keeps the flattened trace order identical
+        # to the pre-streaming single predict_scenarios pass
+        by_sim: Dict[int, Tuple[DoolySim,
+                                List[Tuple[PlanTrace, List[int]]]]] = {}
+        for key, idxs in exact_groups.items():
+            sim = self.sim(scenarios[idxs[0]])
+            trace = self.plan_trace(scenarios[idxs[0]])
+            by_sim.setdefault(id(sim), (sim, []))[1].append((trace, idxs))
+        for sim, group in by_sim.values():
+            lats = sim.predict_traces([trace.plans for trace, _ in group])
+            for (trace, idxs), lat in zip(group, lats):
+                clocks = trace.times(lat)
+                met = trace.metrics(lat, times=clocks)
+                met["_n_generated"] = int(trace.generated.sum())
+                makespan = trace.makespan(lat, times=clocks)
+                for j, i in enumerate(idxs):
+                    yield self._result(
+                        scenarios[i], "replay" if j == 0 else "replay-dedup",
+                        makespan, trace.n_iterations, met, index=i)
 
         # full-loop scenarios: per-scenario interleaved run (predictions
         # still batched per iteration and memoized per fit group)
@@ -260,11 +305,11 @@ class Sweep:
                           via_replay=False)
             met = request_metrics(res["requests"])
             met["_n_generated"] = sum(r.generated for r in res["requests"])
-            results[i] = self._result(scn, "loop", res["makespan"],
-                                      len(res["iterations"]), met)
+            yield self._result(scn, "loop", res["makespan"],
+                               len(res["iterations"]), met, index=i)
 
         n_dedup = sum(len(idxs) - 1 for idxs in exact_groups.values())
-        summary = {
+        self.last_summary = {
             "scenarios": len(scenarios),
             "exact_replay": sum(len(v) for v in exact_groups.values()),
             "full_loop": len(loop_idx),
@@ -274,4 +319,11 @@ class Sweep:
             "fit_groups": len({s.fit_key for s in scenarios}),
             "elapsed_s": time.perf_counter() - t0,
         }
-        return SweepResult(results=list(results), summary=summary)
+
+    def run(self, scenarios: Sequence[Scenario]) -> SweepResult:
+        scenarios = list(scenarios)
+        results: List[Optional[ScenarioResult]] = [None] * len(scenarios)
+        for r in self.iter_results(scenarios):
+            results[r.index] = r
+        return SweepResult(results=list(results),
+                           summary=dict(self.last_summary))

@@ -1,0 +1,318 @@
+"""`repro.api` gates: backend conformance, facade golden-equivalence, and
+the stale-fit regression.
+
+The load-bearing guarantees of the API redesign:
+
+* every registered :class:`LatencyBackend` satisfies the protocol shape
+  and is deterministic (same inputs -> bitwise-same outputs);
+* ``DoolyBackend`` through the facade is *bitwise-identical* to the
+  legacy ``DoolySim(cfg, db, ...)`` construction (the prediction engine
+  moved, it did not change);
+* ``OracleBackend`` reproduces recorded measurements exactly (<=1e-9) on
+  profiled points — the accuracy-audit reference;
+* re-profiling a signature invalidates both the shared LatencyModel's
+  fits and the backend's memoized call cache (the stale-fit-after-
+  reprofile bug the ProfileStore refactor fixed).
+"""
+import math
+
+import numpy as np
+import pytest
+
+from repro.api import (DoolyBackend, LatencyBackend, OracleBackend,
+                       ProfileStore, RooflineBackend, available_backends,
+                       make_backend)
+from repro.configs import get_smoke_config
+from repro.core.database import LatencyDB
+from repro.core.latency_model import LatencyModel
+from repro.core.profiler import QUICK_SWEEP
+from repro.serving.scheduler import SchedulerConfig
+from repro.sim.replay import replay_schedule
+from repro.sim.simulator import DoolySim
+from repro.sim.workload import sharegpt_like
+
+HW = "tpu-v5e"
+MODEL = "llama3-8b"
+SCHED = SchedulerConfig(max_num_seqs=4, max_batch_tokens=64, chunk_size=32)
+BACKEND_NAMES = ("dooly", "roofline", "oracle")
+
+
+@pytest.fixture(scope="module")
+def store():
+    st = ProfileStore(hardware=HW, oracle="tpu_analytical",
+                      sweep=QUICK_SWEEP)
+    st.ensure_profiled(get_smoke_config(MODEL))
+    yield st
+    st.close()
+
+
+@pytest.fixture(scope="module")
+def plans(store):
+    cfg = get_smoke_config(MODEL)
+    sim = store.simulator(cfg, sched_config=SCHED, max_seq=128)
+    reqs = sharegpt_like(30, rate=math.inf, seed=3, scale=0.05,
+                         vocab=cfg.vocab_size)
+    return sim.run(reqs, record_plans=True)["plans"]
+
+
+def _backend(store, name):
+    return store.backend(name, get_smoke_config(MODEL), sched_config=SCHED,
+                         max_seq=128)
+
+
+# -- conformance (all registered backends) ------------------------------
+
+
+def test_registry_names():
+    assert set(BACKEND_NAMES) <= set(available_backends())
+    with pytest.raises(KeyError):
+        make_backend("no-such-backend", get_smoke_config(MODEL),
+                     hardware=HW, sched_config=SCHED, max_seq=128)
+
+
+@pytest.mark.parametrize("name", BACKEND_NAMES)
+def test_backend_protocol_shape(store, name, plans):
+    be = _backend(store, name)
+    assert isinstance(be, LatencyBackend)
+    lat = be.predict_trace(plans)
+    assert lat.shape == (len(plans),)
+    assert np.isfinite(lat).all() and (lat >= 0).all() and lat.sum() > 0
+    # predict_plan is the single-plan slice of predict_trace
+    assert be.predict_plan(plans[0]) == lat[0]
+    pts = [("prefill", 32, 1, 128), ("prefill", 8, 1, 128),
+           ("decode", 1, 4, 128)]
+    v = be.predict_points(pts)
+    assert v.shape == (3,) and np.isfinite(v).all() and (v >= 0).all()
+    # traces concatenate
+    parts = be.predict_traces([plans[:5], plans[5:]])
+    assert np.array_equal(np.concatenate(parts), be.predict_trace(plans))
+
+
+@pytest.mark.parametrize("name", BACKEND_NAMES)
+def test_backend_determinism(store, name, plans):
+    a = _backend(store, name).predict_trace(plans)
+    b = _backend(store, name).predict_trace(plans)      # fresh instance
+    assert np.array_equal(a, b)                          # bitwise
+
+
+# -- golden equivalence: facade vs legacy path --------------------------
+
+
+def test_dooly_backend_bitwise_equals_legacy(store, plans):
+    cfg = get_smoke_config(MODEL)
+    legacy = DoolySim(cfg, store.db, hardware=HW, backend="xla",
+                      sched_config=SCHED, max_seq=128)
+    facade = store.simulator(cfg, sched_config=SCHED, max_seq=128)
+    a = legacy.predict_trace(plans)
+    b = facade.predict_trace(plans)
+    c = _backend(store, "dooly").predict_trace(plans)
+    assert np.array_equal(a, b) and np.array_equal(a, c)
+    # run() through both constructions: identical makespans and timings
+    gen = lambda: sharegpt_like(12, rate=math.inf, seed=5, scale=0.05,
+                                vocab=cfg.vocab_size)
+    ra, rb = legacy.run(gen()), facade.run(gen())
+    assert ra["makespan"] == rb["makespan"]
+    for x, y in zip(ra["requests"], rb["requests"]):
+        assert x.token_times == y.token_times
+
+
+def test_plan_trace_evaluate_matches_predict(store, plans):
+    cfg = get_smoke_config(MODEL)
+    reqs = sharegpt_like(12, rate=math.inf, seed=5, scale=0.05,
+                         vocab=cfg.vocab_size)
+    trace = replay_schedule(reqs, SCHED)
+    be = _backend(store, "dooly")
+    met = trace.evaluate(be)
+    assert np.array_equal(met["latencies"], be.predict_trace(trace.plans))
+    assert met["makespan"][0] == trace.makespan(met["latencies"])
+    assert len(met["ttft"]) == len(reqs)
+
+
+def test_roofline_backend_scales_with_work(store):
+    be = _backend(store, "roofline")
+    small, large = be.predict_points([("prefill", 8, 1, 128),
+                                      ("prefill", 128, 1, 128)])
+    assert 0 < small < large
+    # hardware what-if: half the FLOP/s can only slow prefill down
+    slow = RooflineBackend(get_smoke_config(MODEL), sched_config=SCHED,
+                           max_seq=128, peak_flops=be.peak_flops / 2)
+    assert slow.predict_points([("prefill", 128, 1, 128)])[0] >= large
+
+
+# -- OracleBackend: measurement replay ----------------------------------
+
+
+def _synthetic_call_graph(db: LatencyDB, cfg, *, scale: float = 1.0):
+    """A hand-built profile whose every mapped workload point is measured,
+    so oracle replay has no fallback anywhere: one stateful attention
+    signature, one operator signature, one lm_head operator."""
+    from repro.core.signature import Signature
+    cid = db.config_id(cfg.name, "xla", HW, 1)
+    rows = [("a" * 64, "layers.self_attn", 4, "self_attn"),
+            ("b" * 64, "layers.mlp", 8, "dot_general"),
+            ("c" * 64, "lm_head", 1, "dot_general")]
+    with db.transaction():
+        for sig, module, count, kind in rows:
+            db.insert_signature(Signature(sig, kind, "", "", ""))
+            db.add_model_operation(cid, sig, module, count)
+        meas = []
+        for t in (1, 8, 32):
+            for r in (1, 4):
+                for c in (0, 128):
+                    meas.append(("a" * 64, HW, "prefill", t, r, c, "o",
+                                 scale * (10.0 + t * r + 0.1 * c)))
+                    meas.append(("b" * 64, HW, "prefill", t, r, 0, "o",
+                                 scale * (5.0 + 2.0 * t * r)))
+                    meas.append(("c" * 64, HW, "prefill", t, r, 0, "o",
+                                 scale * (1.0 + 0.5 * t * r)))
+                    meas.append(("a" * 64, HW, "decode", t, r, c, "o",
+                                 scale * (3.0 + r + 0.05 * c)))
+        db.add_measurements_bulk(sorted(set(meas)))
+
+
+def test_oracle_backend_replays_measurements_exactly():
+    cfg = get_smoke_config(MODEL)
+    db = LatencyDB()
+    _synthetic_call_graph(db, cfg)
+    be = OracleBackend(cfg, db, hardware=HW, backend="xla",
+                       sched_config=SCHED, max_seq=128)
+    # prefill point (toks=32, reqs=1, ctx=128): stateful row follows
+    # phase/ctx, operator row maps to (prefill, 32, 1, 0), lm_head clamps
+    # to toks=1
+    expected = (4 * db.lookup_measurement("a" * 64, HW, "prefill", 32, 1, 128)
+                + 8 * db.lookup_measurement("b" * 64, HW, "prefill", 32, 1, 0)
+                + 1 * db.lookup_measurement("c" * 64, HW, "prefill", 1, 1, 0)
+                ) / 1e6
+    got = float(be.predict_points([("prefill", 32, 1, 128)])[0])
+    assert abs(got - expected) <= 1e-9
+    # decode point: stateful follows decode/ctx; operators stay prefill
+    expected = (4 * db.lookup_measurement("a" * 64, HW, "decode", 1, 4, 128)
+                + 8 * db.lookup_measurement("b" * 64, HW, "prefill", 1, 4, 0)
+                + 1 * db.lookup_measurement("c" * 64, HW, "prefill", 1, 4, 0)
+                ) / 1e6
+    got = float(be.predict_points([("decode", 1, 4, 128)])[0])
+    assert abs(got - expected) <= 1e-9
+
+
+def test_oracle_off_grid_uses_nearest_point_scaling():
+    cfg = get_smoke_config(MODEL)
+    db = LatencyDB()
+    _synthetic_call_graph(db, cfg)
+    be = OracleBackend(cfg, db, hardware=HW, backend="xla",
+                       sched_config=SCHED, max_seq=128)
+    v = be.predict_points([("prefill", 48, 3, 64)])     # nothing measured
+    assert np.isfinite(v).all() and v[0] > 0
+
+
+# -- stale-fit regression (the ProfileStore cache fix) ------------------
+
+
+def test_shared_model_refits_after_reprofile():
+    """Re-profiling a signature must invalidate the shared LatencyModel's
+    cached fit: before the fix, ``_fits`` was keyed forever, so a store
+    that re-measured a model kept predicting from the superseded
+    coefficients."""
+    db = LatencyDB()
+    store = ProfileStore.wrap(db, hardware=HW)
+    sig = "e" * 64
+    pts = [(t, r) for t in (8, 16, 32, 64) for r in (1, 2)]
+    with db.transaction():
+        db.add_measurements_bulk(
+            [(sig, HW, "prefill", t, r, 0, "o", 10.0 * t * r)
+             for t, r in pts])
+    lm = store.model(HW)
+    before = lm.predict(sig, "prefill", toks=24, reqs=1)
+    assert before > 0
+    # re-profile: same sweep points, doubled latencies
+    with db.transaction():
+        db.add_measurements_bulk(
+            [(sig, HW, "prefill", t, r, 0, "o", 20.0 * t * r)
+             for t, r in pts])
+    assert store.model(HW) is lm                 # same shared instance
+    after = lm.predict(sig, "prefill", toks=24, reqs=1)
+    assert after == pytest.approx(2 * before, rel=1e-9)
+
+
+def test_oracle_point_cache_invalidated_on_reprofile():
+    """OracleBackend memoizes plan points in PlanBackend._point_cache;
+    a re-profile must drop them (generation check), or the accuracy-audit
+    reference silently audits against superseded measurements."""
+    cfg = get_smoke_config(MODEL)
+    db = LatencyDB()
+    _synthetic_call_graph(db, cfg)
+    be = OracleBackend(cfg, db, hardware=HW, backend="xla",
+                       sched_config=SCHED, max_seq=128)
+    plans = [((8,), 0), ((32,), 1)]
+    before = be.predict_trace(plans)
+    _synthetic_call_graph(db, cfg, scale=2.0)    # re-profile, 2x latencies
+    after = be.predict_trace(plans)
+    np.testing.assert_allclose(after, 2 * before, rtol=1e-12)
+
+
+def test_backend_call_cache_invalidated_on_reprofile():
+    """The epoch plumbing end-to-end: DoolyBackend memoizes call totals,
+    and those memos must die with the fits they were computed from."""
+    cfg = get_smoke_config(MODEL)
+    db = LatencyDB()
+    _synthetic_call_graph(db, cfg)
+    be = DoolyBackend(cfg, db, hardware=HW, backend="xla",
+                      sched_config=SCHED, max_seq=128)
+    point = [("prefill", 32, 1, 128)]
+    before = float(be.predict_points(point)[0])
+    _synthetic_call_graph(db, cfg, scale=2.0)    # re-profile, 2x latencies
+    after = float(be.predict_points(point)[0])
+    assert after == pytest.approx(2 * before, rel=1e-9)
+    assert after != before
+
+
+# -- ProfileStore lifecycle ---------------------------------------------
+
+
+def test_store_lifecycle(tmp_path):
+    path = str(tmp_path / "store.sqlite")
+    cfg = get_smoke_config(MODEL)
+    with ProfileStore(path, hardware=HW, oracle="tpu_analytical",
+                      sweep=QUICK_SWEEP) as store:
+        assert store.ensure_profiled(cfg) is not None
+        assert store.ensure_profiled(cfg) is None        # already there
+        lm = store.model()
+        assert store.model() is lm                       # cached
+        n_meas = store.stats()["measurements"]
+        assert n_meas > 0
+    assert store.closed
+    with pytest.raises(RuntimeError):
+        store.db
+    # reopen: fresh connection, fresh fit cache, same persisted profile
+    with store.open() as again:
+        assert again.stats()["measurements"] == n_meas
+        assert again.model() is not lm
+        assert again.ensure_profiled(cfg) is None        # dedup across runs
+    assert store.closed
+
+
+def test_wrapped_store_does_not_close_foreign_db():
+    db = LatencyDB()
+    store = ProfileStore.wrap(db, hardware=HW)
+    store.close()
+    assert db.conn is not None                           # untouched
+    assert not store.closed          # wrapping never owns the connection
+    db.close()                       # ... the owner closing it does
+    assert store.closed
+    with pytest.raises(RuntimeError):
+        store.open()                 # a wrapped DB cannot be re-owned
+
+
+# -- sweep over non-default backends ------------------------------------
+
+
+@pytest.mark.parametrize("name", ["roofline", "oracle"])
+def test_sweep_runs_on_alternate_backends(store, name):
+    from repro.sweep import SchedSpec, WorkloadSpec, expand_grid
+    scenarios = expand_grid(
+        [MODEL], [SchedSpec(4, 64, 32)],
+        [WorkloadSpec(kind="sharegpt", n=8, rate=math.inf, seed=0)],
+        hardware=HW)
+    out = store.sweep(latency=name).run(scenarios)
+    assert len(out.results) == 1
+    assert out.results[0].makespan > 0
+    assert out.results[0].mode == "replay"

@@ -1,0 +1,87 @@
+"""API-surface snapshot gate.
+
+``repro.api.__all__`` and the public signatures behind it are compared
+against the checked-in ``tests/api_surface.json``; any drift fails, so
+changing the public surface is always a deliberate, reviewed diff (the
+snapshot file changes in the same PR).
+
+To refresh after an intentional change:
+
+    REGEN_API_SNAPSHOT=1 PYTHONPATH=src python -m pytest \
+        tests/test_api_surface.py -q
+"""
+import inspect
+import json
+import os
+import re
+from pathlib import Path
+
+import repro.api as api
+from repro.api import LatencyBackend, ProfileStore
+
+SNAPSHOT = Path(__file__).parent / "api_surface.json"
+
+#: classes whose public *methods* are part of the contract, not just
+#: their constructors
+METHOD_CLASSES = {
+    "ProfileStore": ProfileStore,
+    "LatencyBackend": LatencyBackend,
+}
+
+
+def _norm(sig: str) -> str:
+    """Strip run-dependent noise (default-object memory addresses)."""
+    return re.sub(r" at 0x[0-9a-f]+", "", sig)
+
+
+def _signature_of(obj) -> str:
+    if inspect.isclass(obj):
+        try:
+            return _norm(str(inspect.signature(obj.__init__)))
+        except (ValueError, TypeError):
+            return "<no signature>"
+    if callable(obj):
+        return _norm(str(inspect.signature(obj)))
+    return "<constant>"
+
+
+def current_surface() -> dict:
+    surface = {"__all__": sorted(api.__all__), "signatures": {}}
+    for name in sorted(api.__all__):
+        surface["signatures"][name] = _signature_of(getattr(api, name))
+    for cls_name, cls in METHOD_CLASSES.items():
+        for name, member in sorted(inspect.getmembers(cls)):
+            if name.startswith("_") or not callable(member):
+                continue
+            surface["signatures"][f"{cls_name}.{name}"] = _norm(
+                str(inspect.signature(member)))
+    return surface
+
+
+def test_api_surface_matches_snapshot():
+    surface = current_surface()
+    if os.environ.get("REGEN_API_SNAPSHOT"):
+        SNAPSHOT.write_text(json.dumps(surface, indent=2) + "\n")
+    assert SNAPSHOT.exists(), (
+        "tests/api_surface.json missing — regenerate with "
+        "REGEN_API_SNAPSHOT=1 (see module docstring)")
+    committed = json.loads(SNAPSHOT.read_text())
+    assert surface["__all__"] == committed["__all__"], (
+        "repro.api.__all__ changed; if intentional, regenerate the "
+        "snapshot (REGEN_API_SNAPSHOT=1) and review the diff")
+    assert surface["signatures"] == committed["signatures"], (
+        "public signatures changed; if intentional, regenerate the "
+        "snapshot (REGEN_API_SNAPSHOT=1) and review the diff")
+
+
+def test_all_exports_resolve():
+    """Every name in __all__ (including the lazy PEP 562 re-exports)
+    resolves to a real object, and nothing else leaks via __getattr__."""
+    for name in api.__all__:
+        assert getattr(api, name) is not None
+    try:
+        api.not_a_real_export
+    except AttributeError as e:
+        assert "not_a_real_export" in str(e)
+    else:
+        raise AssertionError("unknown attribute did not raise")

@@ -235,3 +235,58 @@ def test_sweep_cli_smoke(tmp_path, capsys):
     data = json.loads(json_path.read_text())
     assert data["summary"]["scenarios"] == 4
     assert len(data["results"]) == 4
+
+
+def test_iter_results_streams_and_matches_run(profiled_db):
+    """The streaming generator must yield every scenario exactly once,
+    with numerics identical to the materializing run() (which is built on
+    it), and must not wait for the whole grid before the first yield."""
+    scenarios = _grid()
+    sweep = Sweep(profiled_db)
+    ref = sweep.run(scenarios)
+    streamed = {}
+    it = sweep.iter_results(scenarios)
+    first = next(it)
+    assert sweep.last_summary is None       # summary only after exhaustion
+    streamed[first.index] = first
+    for r in it:
+        assert r.index not in streamed
+        streamed[r.index] = r
+    assert sorted(streamed) == list(range(len(scenarios)))
+    for i, r in enumerate(ref.results):
+        s = streamed[i]
+        assert s.mode == r.mode
+        assert s.makespan == r.makespan     # bitwise, same batched pass
+        assert s.ttft_p50 == r.ttft_p50
+        assert s.tpot_mean == r.tpot_mean
+    summary = {k: v for k, v in sweep.last_summary.items()
+               if k != "elapsed_s"}
+    assert summary == {k: v for k, v in ref.summary.items()
+                       if k != "elapsed_s"}
+
+
+def test_iter_results_groups_complete_before_loops(profiled_db):
+    """Exact-replay groups stream first (batched per fit group), loop
+    scenarios trail — the order large grids want for early results."""
+    scenarios = _grid()
+    modes = [r.mode for r in Sweep(profiled_db).iter_results(scenarios)]
+    n_replay = sum(m.startswith("replay") for m in modes)
+    assert all(m.startswith("replay") for m in modes[:n_replay])
+    assert all(m == "loop" for m in modes[n_replay:])
+
+
+def test_sweep_cli_stream(tmp_path, capsys):
+    from repro.sweep.__main__ import main
+    json_path = tmp_path / "stream.json"
+    rc = main(["--models", MODELS[0], "--seqs", "4", "--tokens", "64",
+               "--n", "6", "--rates", "burst,20", "--seeds", "0",
+               "--stream", "--db", str(tmp_path / "lat.sqlite"),
+               "--json", str(json_path)])
+    assert rc == 0
+    out = capsys.readouterr().out
+    assert "[   1/4]" in out and "[   4/4]" in out
+    import json
+    data = json.loads(json_path.read_text())
+    assert data["summary"]["scenarios"] == 4
+    # streamed results are re-sorted into grid order for the report
+    assert len(data["results"]) == 4
