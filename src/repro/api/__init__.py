@@ -5,10 +5,14 @@ One import gives the whole profile -> predict -> simulate/sweep pipeline:
     from repro.api import ProfileStore
 
     with ProfileStore("latency.sqlite", hardware="tpu-v5e") as store:
-        store.ensure_profiled(cfg)                      # paper §6 profiler
+        plan = store.plan(corpus_cfgs)                  # dry run, deduped
+        print(plan.coverage().table())                  # paper Table 2
+        store.execute(plan, checkpoint="plan.journal")  # resumable
         sim = store.simulator(cfg, sched_config=sched, max_seq=128)
         print(sim.run(requests)["makespan"])
         table = store.sweep().run(scenarios).table()    # config search
+
+    ``ensure_profiled(cfg)`` remains as the one-model plan+execute shim.
 
 The latency source is a constructor argument: any registered
 :class:`LatencyBackend` (``"dooly"`` regression fits, ``"roofline"``
@@ -26,10 +30,16 @@ from repro.api.backends import (DoolyBackend, LatencyBackend,  # noqa: F401
                                 RooflineBackend, available_backends,
                                 make_backend, register_backend)
 from repro.api.store import ProfileStore  # noqa: F401
+from repro.core.plan import (CoverageReport, ExecuteReport,  # noqa: F401
+                             PlanTask, ProfilePlan, build_plan,
+                             execute_plan)
 
 __all__ = [
     # session + profiling
     "ProfileStore",
+    # the profiling-plan IR (plan-first surface)
+    "ProfilePlan", "PlanTask", "CoverageReport", "ExecuteReport",
+    "build_plan", "execute_plan",
     # the latency seam
     "LatencyBackend", "PlanBackend",
     "DoolyBackend", "RooflineBackend", "OracleBackend",

@@ -9,9 +9,13 @@ collects all of it behind one handle:
 * **lifecycle** — ``open()``/``close()`` (idempotent) or a context
   manager; closing tears down the DB connection *and* the fit cache, so a
   reopened store can never serve fits bound to a dead connection;
-* **profiling** — ``ensure_profiled(cfg, ...)`` wraps
-  ``DoolyProf.profile_model`` (skipping models already in the store) and
-  ``profile_comm`` fills the communication sub-schema;
+* **profiling** — plan-first: ``plan(cfgs, ...)`` builds a corpus-wide
+  deduplicated :class:`~repro.core.plan.ProfilePlan` (a dry run with a
+  coverage report — the paper's redundancy metric), ``execute(plan, ...)``
+  measures it resumably; ``ensure_profiled(cfg, ...)`` is the one-model
+  plan+execute shim (rows bit-identical to the old direct
+  ``profile_model`` path) and ``profile_comm`` fills the communication
+  sub-schema;
 * **fit cache** — ``model(hardware)`` returns the shared per-hardware
   `LatencyModel`, owned here; generation-checked invalidation
   (``LatencyModel.refresh``) keeps it coherent with measurement writes;
@@ -29,11 +33,13 @@ Typical session::
 """
 from __future__ import annotations
 
-from typing import Dict, Optional, Tuple
+from typing import Dict, Optional, Sequence, Tuple, Union
 
 from repro.configs.base import ModelConfig
 from repro.core.database import LatencyDB
 from repro.core.latency_model import LatencyModel
+from repro.core.plan import (ExecuteReport, ProfilePlan, build_plan,
+                             execute_plan)
 from repro.core.profiler import DoolyProf, ProfileReport, SweepConfig
 
 
@@ -124,6 +130,37 @@ class ProfileStore:
                                 hardware or self.hardware, tp)
         return bool(self.db.model_operations(cid))
 
+    def plan(self, cfgs: Union[ModelConfig, Sequence[ModelConfig]], *,
+             backends: Sequence[str] = ("xla",), tp: int = 1,
+             hardware: Optional[str] = None, oracle: Optional[str] = None,
+             sweep: Optional[SweepConfig] = None,
+             traces=None, pairs=None) -> ProfilePlan:
+        """Build a corpus-wide deduplicated :class:`ProfilePlan` for the
+        given model configs x ``backends`` (or an explicit ``pairs``
+        sequence of (cfg, backend) for ragged corpora): a dry run (zero
+        measurements) whose ``coverage()`` reports per-model op counts,
+        tasks already satisfied by this store, tasks shared between
+        models, and the estimated GPU-time saved vs naive per-model
+        profiling."""
+        if isinstance(cfgs, ModelConfig):
+            cfgs = [cfgs]
+        return build_plan(self.db, list(cfgs), backends=tuple(backends),
+                          tp=tp, hardware=hardware or self.hardware,
+                          oracle=oracle or self.oracle,
+                          sweep=sweep or self.profile_sweep, traces=traces,
+                          pairs=pairs)
+
+    def execute(self, plan: ProfilePlan, *, workers: int = 1,
+                checkpoint: Optional[str] = None,
+                progress=None) -> ExecuteReport:
+        """Measure a plan's remaining tasks into this store.  Rows are
+        bit-identical to sequential per-model ``profile_model`` calls
+        over the same corpus; with ``checkpoint`` each completed task id
+        is journaled after its rows commit, so an interrupted execute
+        resumes instead of restarting."""
+        return execute_plan(self.db, plan, workers=workers,
+                            checkpoint=checkpoint, progress=progress)
+
     def ensure_profiled(self, cfg: ModelConfig, *, backend: str = "xla",
                         tp: int = 1, hardware: Optional[str] = None,
                         oracle: Optional[str] = None,
@@ -132,13 +169,19 @@ class ProfileStore:
                         force: bool = False) -> Optional[ProfileReport]:
         """Profile ``cfg`` into the store unless its call graph is already
         present (dedup against prior sessions comes free from the DB);
-        returns the report, or None when nothing needed doing."""
+        returns the report, or None when nothing needed doing.
+
+        This is the one-model plan+execute shim: it builds a single-model
+        :class:`ProfilePlan`, executes it, and reconstructs the legacy
+        report — rows and report costs bit-identical to the old direct
+        ``profile_model`` path."""
         if not force and self.is_profiled(cfg, backend=backend, tp=tp,
                                           hardware=hardware):
             return None
-        prof = self.profiler(hardware=hardware, oracle=oracle, sweep=sweep)
-        return prof.profile_model(cfg, backend=backend, tp=tp,
-                                  workers=workers)
+        plan = self.plan(cfg, backends=(backend,), tp=tp,
+                         hardware=hardware, oracle=oracle, sweep=sweep)
+        self.execute(plan, workers=workers)
+        return plan.legacy_report(self.db)
 
     def profile_comm(self, **kw) -> int:
         """Fill the communication sub-schema (see

@@ -104,6 +104,15 @@ def generate_inputs(op: TraceOp, *, toks: Optional[int] = None,
 # runnable-set entries
 # ---------------------------------------------------------------------------
 
+def entry_task_id(sig_hash: str, hardware: str) -> str:
+    """Canonical identity of one measurement task: a signature swept on one
+    hardware.  This is the unit of corpus-wide dedup (two models needing
+    the same id share one measurement), of DB satisfaction checks, and of
+    ProfilePlan journaling/resume — one string, so a checkpoint file and a
+    plan built in another process agree byte-for-byte."""
+    return f"{hardware}:{sig_hash}"
+
+
 _PRIM_REGISTRY: dict = {}       # primitive name -> Primitive singleton
 _PRIM_HOMES: dict = {}          # primitive name -> defining module name
 

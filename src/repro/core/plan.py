@@ -1,0 +1,540 @@
+"""Declarative profiling plans: the paper's redundancy metric as an IR.
+
+The paper's headline result — 56.4% fewer profiling GPU-hours across the
+12-model corpus — comes from deciding *what not to measure* before
+running anything.  ``build_plan`` makes that decision a first-class,
+inspectable artifact: it traces every (model, backend) pair in a corpus,
+resolves runnable sets, computes signatures (all via the profiler's
+``entry_specs`` build half), and dedups measurement tasks corpus-wide —
+against the latency DB *and* against each other.  The result is a frozen
+:class:`ProfilePlan` whose :class:`CoverageReport` is Table 2 computable
+as a dry run with zero measurements: per-model op counts, tasks already
+satisfied, tasks shared between models, and exact measurement-point
+(= DB-write) accounting, plus a GPU-time savings estimate replayed from
+stored measurements where they exist.
+
+``execute_plan`` runs the remaining tasks through the profiler's
+measurement machinery (``measure_payload_rows`` — rows bit-identical to
+a sequential ``profile_model`` over the same corpus), optionally sharded
+across worker processes, committing each task's rows atomically and then
+journaling its id to a checkpoint file, so an interrupted corpus sweep
+resumes where it stopped instead of restarting.
+"""
+from __future__ import annotations
+
+import hashlib
+import os
+import time
+from concurrent.futures import ProcessPoolExecutor
+from dataclasses import dataclass
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+from repro.configs.base import ModelConfig
+from repro.core.database import LatencyDB
+from repro.core.opset import entry_task_id
+from repro.core.profiler import (DoolyProf, EntryReport, ProfileReport,
+                                 SweepConfig)
+from repro.core.runner import ModelTrace, trace_model
+from repro.core.signature import Signature
+
+#: (model name, attention backend, tp) — one profiled configuration
+ModelKey = Tuple[str, str, int]
+
+#: dry-run price of one unmeasured sweep point (seconds per repeat); only
+#: used for tasks with no stored measurements to replay
+NOMINAL_POINT_S = 1e-3
+
+
+@dataclass(frozen=True)
+class PlanTask:
+    """One measurement task: a signature swept once on one hardware.
+
+    ``cfg``/``backend`` belong to the task's *first owner* — the model
+    that would have measured it under sequential per-model profiling —
+    so execution builds the exact context that owner would have built.
+    ``est_cost_s`` is the dry-run GPU-time estimate: replayed from stored
+    measurements when ``est_measured`` (the task is satisfied), priced at
+    :data:`NOMINAL_POINT_S` per point otherwise."""
+    task_id: str
+    sig_hash: str
+    kind: str                       # "module" | "op"
+    payload: Tuple                  # profiler measurement payload
+    cfg: ModelConfig
+    backend: str
+    n_points: int
+    owners: Tuple[str, ...]         # "model/backend" labels sharing it
+    satisfied: bool                 # already in the DB at plan time
+    est_cost_s: float
+    est_measured: bool
+
+
+@dataclass(frozen=True)
+class PlanEntry:
+    """Per-model runnable-set entry metadata, enough to reconstruct the
+    legacy ``ProfileReport`` and the model_operations rows at execute
+    time.  ``reused`` carries sequential-profiling semantics: True when
+    the signature was already in the DB, claimed by an earlier model in
+    the plan, or by an earlier entry of the same model."""
+    sig_hash: str
+    name: str
+    group: str
+    variant: str
+    module: str
+    count: int
+    reused: bool
+
+
+@dataclass(frozen=True)
+class ModelCoverage:
+    model: str
+    backend: str
+    tp: int
+    n_entries: int          # runnable-set entries profiled
+    n_ops: int              # call-graph occurrences (sum of counts)
+    n_tasks: int            # distinct signatures this model needs
+    n_satisfied: int        # already measured in the DB at plan time
+    n_shared: int           # first-owned by an earlier model in the plan
+    n_to_measure: int       # tasks this model must measure itself
+    points: int             # measurement rows a naive profile would write
+    est_naive_s: float      # dry-run GPU-time of profiling it alone
+
+    def label(self) -> str:
+        return f"{self.model}/{self.backend}/tp{self.tp}"
+
+
+@dataclass(frozen=True)
+class CoverageReport:
+    """The paper's Table-2 redundancy accounting, from a dry run."""
+    hardware: str
+    models: Tuple[ModelCoverage, ...]
+    naive_tasks: int        # sum of per-model task counts (no sharing)
+    plan_tasks: int         # distinct unsatisfied tasks the plan measures
+    satisfied_tasks: int    # distinct tasks the DB already covers
+    shared_tasks: int       # distinct tasks with more than one owner
+    naive_points: int       # DB writes naive per-model profiling would do
+    plan_points: int        # DB writes executing this plan will do
+    est_naive_s: float      # dry-run GPU-time, naive
+    est_spent_s: float      # dry-run GPU-time, this plan
+    est_estimated_tasks: int  # tasks priced nominally (no stored data)
+
+    @property
+    def dedup_frac(self) -> float:
+        return (1.0 - self.plan_tasks / self.naive_tasks
+                if self.naive_tasks else 0.0)
+
+    @property
+    def point_savings_frac(self) -> float:
+        return (1.0 - self.plan_points / self.naive_points
+                if self.naive_points else 0.0)
+
+    @property
+    def est_saved_s(self) -> float:
+        return self.est_naive_s - self.est_spent_s
+
+    @property
+    def est_savings_frac(self) -> float:
+        return (self.est_saved_s / self.est_naive_s
+                if self.est_naive_s else 0.0)
+
+    def table(self) -> str:
+        head = (f"{'model':34s} {'entries':>7s} {'ops':>6s} {'tasks':>6s} "
+                f"{'in-db':>6s} {'shared':>6s} {'measure':>7s} "
+                f"{'points':>7s} {'est-s':>9s}")
+        lines = [head, "-" * len(head)]
+        for m in self.models:
+            lines.append(
+                f"{m.label():34s} {m.n_entries:7d} {m.n_ops:6d} "
+                f"{m.n_tasks:6d} {m.n_satisfied:6d} {m.n_shared:6d} "
+                f"{m.n_to_measure:7d} {m.points:7d} {m.est_naive_s:9.3f}")
+        lines.append("-" * len(head))
+        lines.append(
+            f"naive: {self.naive_tasks} tasks / {self.naive_points} points"
+            f" / {self.est_naive_s:.3f} est-s   ->   plan: "
+            f"{self.plan_tasks} tasks / {self.plan_points} points / "
+            f"{self.est_spent_s:.3f} est-s")
+        lines.append(
+            f"dedup: {100 * self.dedup_frac:.1f}% of tasks "
+            f"({self.satisfied_tasks} satisfied by the DB, "
+            f"{self.shared_tasks} shared between models); est GPU-time "
+            f"saved {self.est_saved_s:.3f}s "
+            f"({100 * self.est_savings_frac:.1f}%"
+            + (f", {self.est_estimated_tasks} tasks priced nominally)"
+               if self.est_estimated_tasks else ")"))
+        return "\n".join(lines)
+
+    def to_json(self) -> Dict:
+        return {
+            "hardware": self.hardware,
+            "models": [{
+                "model": m.model, "backend": m.backend, "tp": m.tp,
+                "n_entries": m.n_entries, "n_ops": m.n_ops,
+                "n_tasks": m.n_tasks, "n_satisfied": m.n_satisfied,
+                "n_shared": m.n_shared, "n_to_measure": m.n_to_measure,
+                "points": m.points, "est_naive_s": m.est_naive_s,
+            } for m in self.models],
+            "naive_tasks": self.naive_tasks, "plan_tasks": self.plan_tasks,
+            "satisfied_tasks": self.satisfied_tasks,
+            "shared_tasks": self.shared_tasks,
+            "naive_points": self.naive_points,
+            "plan_points": self.plan_points,
+            "dedup_frac": self.dedup_frac,
+            "point_savings_frac": self.point_savings_frac,
+            "est_naive_s": self.est_naive_s,
+            "est_spent_s": self.est_spent_s,
+            "est_saved_s": self.est_saved_s,
+            "est_savings_frac": self.est_savings_frac,
+            "est_estimated_tasks": self.est_estimated_tasks,
+        }
+
+
+@dataclass(frozen=True)
+class ProfilePlan:
+    """Frozen profiling plan: what to measure, for whom, at what cost.
+
+    Built by :func:`build_plan`; executed by :func:`execute_plan`.  Task
+    order is deterministic (corpus order, first-owner-first), so the same
+    corpus against the same DB state always produces the same
+    ``plan_id`` — the checkpoint journal binds to it."""
+    hardware: str
+    oracle: str
+    sweep: SweepConfig
+    models: Tuple[ModelKey, ...]
+    tasks: Tuple[PlanTask, ...]
+    entries: Tuple[Tuple[ModelKey, Tuple[PlanEntry, ...]], ...]
+    signatures: Tuple[Signature, ...]
+
+    @property
+    def plan_id(self) -> str:
+        """Digest of what the corpus needs measured: hardware, oracle,
+        sweep points, model keys, and the ordered task ids.  Deliberately
+        independent of DB state (``satisfied`` flags), so a plan rebuilt
+        after a partially-executed run keeps its id and the checkpoint
+        journal still matches — already-landed tasks simply come back
+        satisfied and are skipped."""
+        h = hashlib.sha256()
+        h.update(self.hardware.encode())
+        h.update(self.oracle.encode())
+        h.update(repr(self.sweep).encode())
+        for m, b, tp in self.models:
+            h.update(f"|{m}/{b}/{tp}".encode())
+        for t in self.tasks:
+            h.update(f"|{t.task_id}".encode())
+        return h.hexdigest()[:16]
+
+    @property
+    def todo(self) -> Tuple[PlanTask, ...]:
+        return tuple(t for t in self.tasks if not t.satisfied)
+
+    def task(self, sig_hash: str) -> PlanTask:
+        return self._by_hash()[sig_hash]
+
+    def _by_hash(self) -> Dict[str, PlanTask]:
+        cache = getattr(self, "_by_hash_cache", None)
+        if cache is None:
+            cache = {t.sig_hash: t for t in self.tasks}
+            object.__setattr__(self, "_by_hash_cache", cache)
+        return cache
+
+    def coverage(self) -> CoverageReport:
+        by_hash = self._by_hash()
+        models = []
+        claimed: set = set()        # sigs first-owned by an earlier model
+        for key, pentries in self.entries:
+            name, backend, tp = key
+            owner = f"{name}/{backend}"
+            sigs = []
+            seen: set = set()
+            for e in pentries:
+                if e.sig_hash not in seen:
+                    seen.add(e.sig_hash)
+                    sigs.append(e.sig_hash)
+            satisfied = [h for h in sigs if by_hash[h].satisfied]
+            shared = [h for h in sigs if not by_hash[h].satisfied
+                      and h in claimed]
+            to_measure = [h for h in sigs if not by_hash[h].satisfied
+                          and h not in claimed]
+            claimed.update(sigs)
+            models.append(ModelCoverage(
+                model=name, backend=backend, tp=tp,
+                n_entries=len(pentries),
+                n_ops=sum(e.count for e in pentries),
+                n_tasks=len(sigs), n_satisfied=len(satisfied),
+                n_shared=len(shared), n_to_measure=len(to_measure),
+                points=sum(by_hash[h].n_points for h in sigs),
+                est_naive_s=sum(by_hash[h].est_cost_s for h in sigs)))
+        todo = self.todo
+        return CoverageReport(
+            hardware=self.hardware, models=tuple(models),
+            naive_tasks=sum(m.n_tasks for m in models),
+            plan_tasks=len(todo),
+            satisfied_tasks=sum(t.satisfied for t in self.tasks),
+            shared_tasks=sum(len(t.owners) > 1 for t in self.tasks),
+            naive_points=sum(m.points for m in models),
+            plan_points=sum(t.n_points for t in todo),
+            est_naive_s=sum(m.est_naive_s for m in models),
+            est_spent_s=sum(t.est_cost_s for t in todo),
+            est_estimated_tasks=sum(not t.est_measured
+                                    for t in self.tasks))
+
+    # -- legacy bridge --------------------------------------------------
+
+    def legacy_report(self, db: LatencyDB,
+                      model: Optional[ModelKey] = None) -> ProfileReport:
+        """Reconstruct the ``ProfileReport`` a sequential
+        ``profile_model`` call would have returned for one model of an
+        *executed* plan: entry order, reuse flags, and replay-accounted
+        costs all match (costs bitwise, since replay returns the stored
+        measurements in sweep-point order)."""
+        key = model or self.models[0]
+        entries = dict(self.entries).get(key)
+        if entries is None:
+            raise KeyError(f"model {key!r} is not part of this plan")
+        prof = DoolyProf(db, oracle=self.oracle, hardware=self.hardware,
+                         sweep=self.sweep)
+        report = ProfileReport(model=key[0], backend=key[1])
+        for e in entries:
+            task = self.task(e.sig_hash)
+            # per-point multiply-then-accumulate, exactly as profile_model
+            # sums costs — keeps the reconstruction bitwise equal
+            cost = 0.0
+            for k in prof.task_point_keys(task.payload, task.cfg):
+                cost += prof._replay(e.sig_hash, k) * self.sweep.repeats
+            report.entries.append(EntryReport(
+                e.sig_hash, e.name, e.group, e.variant, e.count, e.reused,
+                cost))
+        return report
+
+
+@dataclass
+class ExecuteReport:
+    """What one ``execute_plan`` call actually did."""
+    plan_id: str
+    n_tasks: int                    # unsatisfied tasks in the plan
+    measured: int                   # tasks measured in this call
+    skipped_journal: int            # completed earlier, per the checkpoint
+    satisfied: int                  # never needed measuring
+    rows_written: int               # measurement rows landed in this call
+    models: int
+    elapsed_s: float = 0.0
+    checkpoint: Optional[str] = None
+    workers: int = 1
+
+
+# ---------------------------------------------------------------------------
+# plan build (the dry run)
+# ---------------------------------------------------------------------------
+
+def build_plan(db: LatencyDB, cfgs: Sequence[ModelConfig], *,
+               backends: Sequence[str] = ("xla",), tp: int = 1,
+               hardware: str = "tpu-v5e", oracle: str = "tpu_analytical",
+               sweep: Optional[SweepConfig] = None,
+               traces: Optional[Dict[str, ModelTrace]] = None,
+               pairs: Optional[Sequence[Tuple[ModelConfig, str]]] = None
+               ) -> ProfilePlan:
+    """Trace + resolve + sign the whole corpus, dedup corpus-wide, and
+    return the frozen plan.  Zero measurements are taken; the only DB
+    access is the dedup read (``measured_hashes``) and measurement replay
+    for the cost estimates of already-satisfied tasks.
+
+    The corpus is the ``cfgs`` x ``backends`` cross product; ``pairs``
+    (an explicit (cfg, backend) sequence) overrides it for ragged
+    corpora, so callers like a sweep grid never plan — or measure —
+    configurations they don't need.  Each model is traced once no matter
+    how many backends sweep it (the runnable set is backend-independent;
+    signatures are not)."""
+    prof = DoolyProf(db, oracle=oracle, hardware=hardware, sweep=sweep)
+    known = frozenset(db.measured_hashes(hardware))
+    traces = dict(traces or {})
+    if pairs is None:
+        pairs = [(cfg, b) for cfg in cfgs for b in backends]
+    entries_cache: Dict[str, List] = {}
+    builders: Dict[str, Dict] = {}          # sig_hash -> mutable task state
+    sig_map: Dict[str, Signature] = {}
+    plan_entries: List[Tuple[ModelKey, Tuple[PlanEntry, ...]]] = []
+    model_keys: List[ModelKey] = []
+
+    from repro.core.opset import find_runnable_set
+    for cfg, backend in pairs:
+        if cfg.name not in entries_cache:
+            mt = traces.get(cfg.name) or trace_model(cfg)
+            entries_cache[cfg.name] = find_runnable_set(mt.trace)
+        key: ModelKey = (cfg.name, backend, tp)
+        owner = f"{cfg.name}/{backend}"
+        model_keys.append(key)
+        pentries: List[PlanEntry] = []
+        seen_here: set = set()
+        for entry, spec in prof.entry_specs(
+                cfg, backend, entries=entries_cache[cfg.name]):
+            h = spec.sig.hash
+            sig_map.setdefault(h, spec.sig)
+            builder = builders.get(h)
+            reused = (h in known or builder is not None
+                      or h in seen_here)
+            if builder is None and spec.payload is not None:
+                builder = builders[h] = {
+                    "payload": spec.payload, "cfg": cfg,
+                    "backend": backend, "kind": spec.payload[0],
+                    "n_points": spec.n_points, "owners": []}
+            if builder is not None and owner not in builder["owners"]:
+                builder["owners"].append(owner)
+            seen_here.add(h)
+            pentries.append(PlanEntry(
+                sig_hash=h, name=spec.name, group=spec.group,
+                variant=spec.variant, module=spec.module,
+                count=spec.count, reused=reused))
+        plan_entries.append((key, tuple(pentries)))
+
+    tasks: List[PlanTask] = []
+    for h, b in builders.items():
+        satisfied = h in known
+        keys = prof.task_point_keys(b["payload"], b["cfg"])
+        if satisfied:
+            est = (sum(prof._replay(h, k) for k in keys)
+                   * prof.sweep.repeats)
+            est_measured = True
+        else:
+            est = len(keys) * prof.sweep.repeats * NOMINAL_POINT_S
+            est_measured = False
+        tasks.append(PlanTask(
+            task_id=entry_task_id(h, hardware), sig_hash=h,
+            kind=b["kind"], payload=b["payload"], cfg=b["cfg"],
+            backend=b["backend"], n_points=len(keys),
+            owners=tuple(b["owners"]), satisfied=satisfied,
+            est_cost_s=est, est_measured=est_measured))
+
+    return ProfilePlan(
+        hardware=hardware, oracle=oracle, sweep=prof.sweep,
+        models=tuple(model_keys), tasks=tuple(tasks),
+        entries=tuple(plan_entries), signatures=tuple(sig_map.values()))
+
+
+# ---------------------------------------------------------------------------
+# plan execution (resumable, parallel)
+# ---------------------------------------------------------------------------
+
+def _measure_plan_shard(payload) -> List[Tuple[str, List[Tuple]]]:
+    """ProcessPoolExecutor worker: measure one shard of plan tasks — each
+    carries its own (cfg, backend), so one shard can span models.  Returns
+    (sig_hash, full DB rows) per task.  Module-level so it pickles under
+    the spawn start method."""
+    (oracle, hardware, sweep, tasks) = payload
+    with LatencyDB() as db:
+        prof = DoolyProf(db, oracle=oracle, hardware=hardware, sweep=sweep)
+        return [(tpayload[3] if tpayload[0] == "module" else tpayload[1],
+                 prof.measure_payload_rows(tpayload, cfg, backend))
+                for cfg, backend, tpayload in tasks]
+
+
+def _journal_header(plan: ProfilePlan) -> str:
+    return f"# dooly-plan {plan.plan_id}"
+
+
+def read_journal(path: str, plan: ProfilePlan) -> set:
+    """Completed task ids from a checkpoint file; refuses a journal
+    written for a different plan."""
+    if not path or not os.path.exists(path):
+        return set()
+    lines = [ln.strip() for ln in open(path) if ln.strip()]
+    if not lines:
+        return set()
+    if lines[0] != _journal_header(plan):
+        raise RuntimeError(
+            f"checkpoint {path!r} belongs to a different plan "
+            f"({lines[0]!r}, expected {_journal_header(plan)!r}); delete "
+            "it or pass the matching plan")
+    return set(lines[1:])
+
+
+def execute_plan(db: LatencyDB, plan: ProfilePlan, *, workers: int = 1,
+                 checkpoint: Optional[str] = None,
+                 progress: Optional[Callable] = None) -> ExecuteReport:
+    """Measure every unsatisfied, un-journaled task and land the plan's
+    signatures + per-model call-graph rows.
+
+    Each task's measurement rows and its signature commit in one
+    transaction *before* its id is appended to the checkpoint journal, so
+    a crash can lose at most the in-flight task and a resume re-measures
+    only what never committed.  With ``workers > 1`` tasks shard across
+    spawn processes by signature hash (same partition as the parallel
+    profiler); rows are bit-identical to a serial run either way."""
+    t0 = time.perf_counter()
+    prof = DoolyProf(db, oracle=plan.oracle, hardware=plan.hardware,
+                     sweep=plan.sweep)
+    sig_by_hash = {s.hash: s for s in plan.signatures}
+    done = read_journal(checkpoint, plan) if checkpoint else set()
+    todo = [t for t in plan.todo if t.task_id not in done]
+    skipped = len(plan.todo) - len(todo)
+
+    jf = None
+    if checkpoint:
+        fresh = not os.path.exists(checkpoint) or \
+            not open(checkpoint).read().strip()
+        jf = open(checkpoint, "a")
+        if fresh:
+            jf.write(_journal_header(plan) + "\n")
+            jf.flush()
+
+    measured = 0
+    rows_written = 0
+
+    def _commit(task: PlanTask, rows: List[Tuple]):
+        nonlocal measured, rows_written
+        with db.transaction():
+            db.insert_signatures_bulk([sig_by_hash[task.sig_hash]])
+            db.add_measurements_bulk(rows)
+        if jf is not None:
+            jf.write(task.task_id + "\n")
+            jf.flush()
+        measured += 1
+        rows_written += len(rows)
+        if progress is not None:
+            progress(task, measured + skipped, len(plan.todo))
+
+    try:
+        if workers > 1 and todo:
+            import multiprocessing as mp
+            shards: List[List[PlanTask]] = [[] for _ in range(workers)]
+            for task in todo:
+                shards[int(task.sig_hash, 16) % workers].append(task)
+            shards = [s for s in shards if s]
+            payloads = [(plan.oracle, plan.hardware, plan.sweep,
+                         [(t.cfg, t.backend, t.payload) for t in shard])
+                        for shard in shards]
+            with ProcessPoolExecutor(
+                    max_workers=workers,
+                    mp_context=mp.get_context("spawn")) as ex:
+                for shard, results in zip(shards,
+                                          ex.map(_measure_plan_shard,
+                                                 payloads)):
+                    by_hash = dict(results)
+                    for task in shard:
+                        _commit(task, by_hash[task.sig_hash])
+        else:
+            for task in todo:
+                _commit(task, prof.measure_payload_rows(
+                    task.payload, task.cfg, task.backend))
+
+        # idempotent tail: every signature (satisfied ones included) and
+        # the per-model call-graph counts, one transaction
+        with db.transaction():
+            db.insert_signatures_bulk(plan.signatures)
+            for (name, backend, tp), pentries in plan.entries:
+                cid = db.config_id(name, backend, plan.hardware, tp)
+                counts: Dict[Tuple[str, str], int] = {}
+                for e in pentries:
+                    k = (e.sig_hash, e.module)
+                    counts[k] = counts.get(k, 0) + e.count
+                db.add_model_operations_bulk(
+                    [(cid, sig, module, count)
+                     for (sig, module), count in counts.items()])
+    finally:
+        if jf is not None:
+            jf.close()
+
+    return ExecuteReport(
+        plan_id=plan.plan_id, n_tasks=len(plan.todo), measured=measured,
+        skipped_journal=skipped,
+        satisfied=sum(t.satisfied for t in plan.tasks),
+        rows_written=rows_written, models=len(plan.models),
+        elapsed_s=time.perf_counter() - t0, checkpoint=checkpoint,
+        workers=workers)

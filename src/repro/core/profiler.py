@@ -43,7 +43,7 @@ import re
 import time
 from concurrent.futures import ProcessPoolExecutor
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple
+from typing import Any, Dict, List, Optional, Tuple
 
 from repro.configs.base import ModelConfig
 from repro.core import backends as oracles
@@ -92,26 +92,30 @@ def _measure_task_shard(payload) -> List[Tuple]:
     (cfg, backend, oracle, hardware, sweep, tasks) = payload
     with LatencyDB() as db:
         prof = DoolyProf(db, oracle=oracle, hardware=hardware, sweep=sweep)
-        rows: List[Tuple] = []
-        for task in tasks:
-            if task[0] == "module":
-                _, kind, window, sig_hash = task
-                for phase in phases_for(kind, cfg):
-                    mc = cached_build_context(cfg, kind, phase=phase,
-                                              backend=backend, window=window)
-                    for toks, reqs, ctx in prof._phase_points(phase):
-                        lat_us = prof._measure_module(mc, toks, reqs,
-                                                      ctx) * 1e6
-                        rows.append((sig_hash, phase, toks, reqs, ctx,
-                                     lat_us))
-            else:
-                _, sig_hash, entry = task
-                points = (sweep.op_points if entry.sweepable else ((0, 0),))
-                for toks, reqs in points:
-                    lat_us = prof._measure_op(entry, toks or None,
-                                              reqs or None) * 1e6
-                    rows.append((sig_hash, "prefill", toks, reqs, 0, lat_us))
-        return rows
+        return [(sig, phase, toks, reqs, ctx, lat_us)
+                for task in tasks
+                for (sig, _hw, phase, toks, reqs, ctx, _o, lat_us)
+                in prof.measure_payload_rows(task, cfg, backend)]
+
+
+@dataclass(frozen=True)
+class EntrySpec:
+    """Everything the plan layer needs to know about one runnable-set
+    entry without holding the live trace: its signature, report metadata
+    (group/variant as ``profile_model`` would emit them), the picklable
+    measurement payload, and the exact number of measurement rows one
+    sweep of it writes (the dry-run cost-accounting unit).
+
+    ``payload`` is None when an earlier entry in the same resolution pass
+    carries the same signature — duplicate signatures share one task."""
+    sig: Signature
+    name: str                     # primitive name or context kind
+    group: str
+    variant: str
+    module: str
+    count: int
+    n_points: int
+    payload: Optional[Tuple]
 
 
 @dataclass
@@ -245,6 +249,104 @@ class DoolyProf:
 
     # -- parallel sweeps ------------------------------------------------
 
+    def entry_specs(self, cfg: ModelConfig, backend: str,
+                    entries: Optional[List] = None,
+                    trace: Optional[ModelTrace] = None
+                    ) -> List[Tuple[Any, EntrySpec]]:
+        """The build half of the plan/execute split: resolve the runnable
+        set (tracing if needed) and describe every profilable entry —
+        signature, report metadata, picklable measurement payload, and the
+        exact measurement-row count its sweep writes — WITHOUT measuring
+        anything.  ``profile_model``'s parallel path, ``build_plan``, and
+        the dry-run coverage report all consume this one serialization.
+
+        Returns (entry, spec) pairs in runnable-set order; entries that
+        ``profile_model`` would skip (absorbed non-stateful modules) are
+        skipped here too."""
+        if entries is None:
+            mt = trace or trace_model(cfg)
+            entries = find_runnable_set(mt.trace)
+        specs: List[Tuple[Any, EntrySpec]] = []
+        seen: set = set()
+        for entry in entries:
+            is_module = (isinstance(entry, ModuleEntry)
+                         and entry.context_kind)
+            if is_module:
+                kind = entry.context_kind
+                window = window_for_path(cfg, entry.node.path)
+                ctx_pre = cached_build_context(
+                    cfg, kind, phase="prefill", backend=backend,
+                    window=window)
+                sig = module_entry_signature(entry, ctx_pre)
+                group = ("attention" if "attn" in kind
+                         or kind in ("mamba",) else kind)
+                variant = self._variant(ctx_pre)
+                n_points = sum(len(self._phase_points(ph))
+                               for ph in phases_for(kind, cfg))
+                payload = ("module", kind, window, sig.hash)
+            elif isinstance(entry, OpEntry):
+                sig = op_entry_signature(entry)
+                kind, variant = entry.kind, ""
+                group = "linear" if entry.kind == "dot_general" else "other"
+                n_points = (len(self.sweep.op_points) if entry.sweepable
+                            else 1)
+                payload = None      # detached lazily below (first sig only)
+            else:
+                continue
+            if sig.hash in seen:
+                payload = None      # duplicate signature: no task, no detach
+            else:
+                seen.add(sig.hash)
+                if not is_module:
+                    payload = ("op", sig.hash, detach_op_entry(entry))
+            specs.append((entry, EntrySpec(
+                sig=sig, name=kind, group=group, variant=variant,
+                module=_module_of(entry), count=entry.count,
+                n_points=n_points, payload=payload)))
+        return specs
+
+    def task_point_keys(self, payload: Tuple, cfg: ModelConfig
+                        ) -> List[Tuple]:
+        """The exact (phase, toks, reqs, ctx) measurement keys one task's
+        sweep visits — shared by the dry-run accounting (row counts and
+        replay-based cost estimates) and the execute path, so a plan's
+        predicted DB writes match the realized ones row-for-row."""
+        if payload[0] == "module":
+            _, kind, _window, _ = payload
+            return [(phase, toks, reqs, ctx)
+                    for phase in phases_for(kind, cfg)
+                    for toks, reqs, ctx in self._phase_points(phase)]
+        entry = payload[2]
+        points = (self.sweep.op_points if entry.sweepable else ((0, 0),))
+        return [("prefill", toks, reqs, 0) for toks, reqs in points]
+
+    def measure_payload_rows(self, payload: Tuple, cfg: ModelConfig,
+                             backend: str) -> List[Tuple]:
+        """Measure every sweep point of one task payload, returning full
+        DB measurement rows (sig_hash, hardware, phase, toks, reqs, ctx,
+        oracle, latency_us) — the execute half.  Identical unit handling
+        to the serial ``profile_model`` pass (worker µs values are stored
+        verbatim), so plan execution stays bit-identical to it."""
+        rows: List[Tuple] = []
+        if payload[0] == "module":
+            _, kind, window, sig_hash = payload
+            for phase in phases_for(kind, cfg):
+                mc = cached_build_context(cfg, kind, phase=phase,
+                                          backend=backend, window=window)
+                for toks, reqs, ctx in self._phase_points(phase):
+                    lat_us = self._measure_module(mc, toks, reqs, ctx) * 1e6
+                    rows.append((sig_hash, self.hardware, phase, toks, reqs,
+                                 ctx, self.oracle, lat_us))
+        else:
+            _, sig_hash, entry = payload
+            points = (self.sweep.op_points if entry.sweepable else ((0, 0),))
+            for toks, reqs in points:
+                lat_us = self._measure_op(entry, toks or None,
+                                          reqs or None) * 1e6
+                rows.append((sig_hash, self.hardware, "prefill", toks, reqs,
+                             0, self.oracle, lat_us))
+        return rows
+
     def _entry_tasks(self, cfg: ModelConfig, backend: str, entries: List
                      ) -> Tuple[List[Tuple], Dict[int, Signature]]:
         """Serialize the runnable set once: one picklable measurement task
@@ -252,27 +354,10 @@ class DoolyProf:
         the parent's main pass reuses them instead of re-lowering)."""
         tasks: List[Tuple] = []
         sigs: Dict[int, Signature] = {}
-        seen: set = set()
-        for entry in entries:
-            is_module = (isinstance(entry, ModuleEntry)
-                         and entry.context_kind)
-            if is_module:
-                window = window_for_path(cfg, entry.node.path)
-                ctx_pre = cached_build_context(
-                    cfg, entry.context_kind, phase="prefill",
-                    backend=backend, window=window)
-                sig = module_entry_signature(entry, ctx_pre)
-            elif isinstance(entry, OpEntry):
-                sig = op_entry_signature(entry)
-            else:
-                continue
-            sigs[id(entry)] = sig
-            if sig.hash in seen:
-                continue        # duplicate signature: no task, no detach
-            seen.add(sig.hash)
-            tasks.append(
-                ("module", entry.context_kind, window, sig.hash)
-                if is_module else ("op", sig.hash, detach_op_entry(entry)))
+        for entry, spec in self.entry_specs(cfg, backend, entries=entries):
+            sigs[id(entry)] = spec.sig
+            if spec.payload is not None:
+                tasks.append(spec.payload)
         return tasks, sigs
 
     def _parallel_premeasure(self, cfg: ModelConfig, backend: str,

@@ -42,9 +42,8 @@ def dim_template(shape, taints) -> Tuple[Any, ...]:
             out.append(int(s))
         elif t.is_mix:
             # keep only the model-derived factors; request factors -> label
-            parts = sorted((lbl[0], v) for v, lbl in t.h)
             out.append("x".join(f"{l}{v if l == 'M' else ''}"
-                                for l, v in parts))
+                                for l, v in t.canonical_factors))
         elif t.kind == MODEL_CONFIG:
             out.append(int(s))
         elif t.kind == NUM_TOKS:

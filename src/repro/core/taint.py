@@ -42,6 +42,15 @@ class Taint:
             return frozenset(l for _, l in self.h)
         return frozenset({self.kind})
 
+    @property
+    def canonical_factors(self) -> Tuple[Tuple[str, int], ...]:
+        """Deterministic (label-initial, value) ordering of a MIX
+        dimension's factor map.  Task-identity keys — the signature dim
+        templates that become latency-DB primary keys and ProfilePlan task
+        ids — are built from this, so equal taints always serialize
+        identically regardless of frozenset iteration order."""
+        return tuple(sorted((label[0], v) for v, label in self.h))
+
     def __repr__(self):
         if self.is_mix:
             inner = ",".join(f"{v}:{l[0]}" for v, l in sorted(self.h))

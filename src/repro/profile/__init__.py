@@ -1,0 +1,9 @@
+"""`repro.profile` — the plan-first profiling CLI.
+
+``python -m repro.profile plan`` prints a corpus coverage report (the
+paper's redundancy metric, as a dry run); ``python -m repro.profile run``
+executes a plan resumably.  See ``__main__.py``.
+"""
+from repro.core.plan import (CoverageReport, ExecuteReport,  # noqa: F401
+                             PlanTask, ProfilePlan, build_plan,
+                             execute_plan)

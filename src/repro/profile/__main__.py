@@ -1,0 +1,143 @@
+"""Profiling CLI: build, inspect, and resumably execute ProfilePlans.
+
+    # dry run: corpus-wide coverage report, zero measurements
+    PYTHONPATH=src python -m repro.profile plan \
+        --models llama3-8b,command-r7b,yi-9b --backends xla,chunked
+
+    # execute (measure) the same plan; journal progress; resume on rerun
+    PYTHONPATH=src python -m repro.profile run \
+        --models llama3-8b,command-r7b,yi-9b --backends xla,chunked \
+        --db corpus.sqlite --workers 4 --resume
+
+``plan`` prints the coverage table (or JSON with ``--json``): per-model
+op counts, tasks already satisfied by the DB, tasks shared between
+models, measurement-point accounting, and the estimated GPU-time saved
+vs naive per-model profiling.  ``run`` executes; with ``--resume`` (or an
+explicit ``--checkpoint``) completed task ids are journaled next to the
+DB, so an interrupted corpus sweep picks up where it stopped.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+from repro.api import ProfileStore
+from repro.configs import get_config, get_smoke_config
+from repro.core.profiler import QUICK_SWEEP, SweepConfig
+
+#: CLI-scale sweep: small enough to demo a corpus plan in seconds
+CLI_SWEEP = QUICK_SWEEP
+
+
+def _sweep(name: str) -> SweepConfig:
+    if name == "quick":
+        return CLI_SWEEP
+    if name == "default":
+        return SweepConfig()
+    raise KeyError(name)
+
+
+def build_parser() -> argparse.ArgumentParser:
+    p = argparse.ArgumentParser(
+        prog="python -m repro.profile",
+        description="Plan-first profiling: dedup a model corpus before "
+                    "measuring anything")
+    sub = p.add_subparsers(dest="cmd", required=True)
+    for name, doc in (("plan", "dry-run coverage report (no measurements)"),
+                      ("run", "execute the plan (resumable)")):
+        sp = sub.add_parser(name, help=doc)
+        sp.add_argument("--models", required=True,
+                        help="comma-separated config registry names")
+        sp.add_argument("--backends", default="xla")
+        sp.add_argument("--tp", type=int, default=1)
+        sp.add_argument("--hardware", default="tpu-v5e")
+        sp.add_argument("--oracle", default="tpu_analytical")
+        sp.add_argument("--db", default=":memory:",
+                        help="latency DB path (dedup runs against it)")
+        sp.add_argument("--full", action="store_true",
+                        help="full-size configs instead of smoke configs")
+        sp.add_argument("--sweep", default="quick",
+                        choices=("quick", "default"))
+        sp.add_argument("--json", default=None,
+                        help="write the report to this path ('-' = stdout)")
+        if name == "run":
+            sp.add_argument("--workers", type=int, default=1)
+            sp.add_argument("--checkpoint", default=None,
+                            help="journal file for completed task ids")
+            sp.add_argument("--resume", action="store_true",
+                            help="journal to <db>.plan-journal (implied "
+                                 "when --checkpoint is given)")
+    return p
+
+
+def _build(args) -> tuple:
+    models = [m for m in args.models.split(",") if m]
+    backends = [b for b in args.backends.split(",") if b]
+    get = get_config if args.full else get_smoke_config
+    cfgs = [get(m) for m in models]
+    store = ProfileStore(args.db, hardware=args.hardware,
+                         oracle=args.oracle, sweep=_sweep(args.sweep))
+    plan = store.plan(cfgs, backends=backends, tp=args.tp)
+    return store, plan
+
+
+def _emit(args, payload: dict, table: str):
+    if args.json == "-":
+        print(json.dumps(payload, indent=2))
+    else:
+        print(table)
+        if args.json:
+            with open(args.json, "w") as f:
+                json.dump(payload, f, indent=2)
+            print(f"wrote {args.json}")
+
+
+def main(argv=None) -> int:
+    args = build_parser().parse_args(argv)
+    store, plan = _build(args)
+    with store:
+        cov = plan.coverage()
+        if args.cmd == "plan":
+            _emit(args, {"plan_id": plan.plan_id, **cov.to_json()},
+                  cov.table() + f"\nplan {plan.plan_id}: "
+                  f"{cov.plan_tasks} tasks to measure")
+            return 0
+
+        checkpoint = args.checkpoint
+        if checkpoint is None and args.resume:
+            if args.db == ":memory:":
+                print("--resume needs an on-disk --db (or --checkpoint)",
+                      file=sys.stderr)
+                return 2
+            checkpoint = args.db + ".plan-journal"
+
+        def progress(task, i, n):
+            print(f"  [{i:4d}/{n}] measured {task.kind:6s} "
+                  f"{task.sig_hash[:12]}  ({task.n_points} points, "
+                  f"owners: {', '.join(task.owners)})")
+
+        # --json '-' promises bare JSON on stdout for both subcommands:
+        # keep the table and progress chatter off it
+        to_stdout = args.json == "-"
+        if not to_stdout:
+            print(cov.table())
+        rep = store.execute(plan, workers=args.workers,
+                            checkpoint=checkpoint,
+                            progress=None if to_stdout else progress)
+        summary = (f"plan {rep.plan_id}: measured {rep.measured}, "
+                   f"resumed past {rep.skipped_journal}, "
+                   f"{rep.satisfied} already satisfied; "
+                   f"{rep.rows_written} rows in {rep.elapsed_s:.2f}s")
+        _emit(args, {"plan_id": rep.plan_id, "measured": rep.measured,
+                     "skipped_journal": rep.skipped_journal,
+                     "satisfied": rep.satisfied,
+                     "rows_written": rep.rows_written,
+                     "elapsed_s": rep.elapsed_s,
+                     "checkpoint": rep.checkpoint,
+                     "coverage": cov.to_json()}, summary)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -16,6 +16,17 @@ its fit group's batched prediction completes, so huge grids emit results
 incrementally instead of materializing the whole ``SweepResult`` first.
 ``--latency`` picks the registered latency backend (dooly / roofline /
 oracle) every scenario is priced with.
+
+Profiling is plan-first: the grid's distinct (model, backend, tp) pairs
+build ONE corpus-wide ``ProfilePlan`` up front (shared signatures planned
+once across the whole grid, dedup'd against the DB), whose coverage
+summary prints before execution — instead of the old one-`ensure_profiled`
+-per-pair loop.
+
+``--compare-latency REF`` re-runs the grid under a second backend and
+prints the calibration diff: per-scenario TTFT/TPOT/makespan relative
+error of ``--latency`` against REF (e.g. ``oracle``), plus corpus-wide
+mean/max — the regression-fit quality report.
 """
 from __future__ import annotations
 
@@ -26,11 +37,10 @@ import sys
 from typing import List
 
 from repro.api import ProfileStore, available_backends
-from repro.configs import get_smoke_config
 from repro.core.profiler import SweepConfig
 from repro.sweep.grid import (SchedSpec, WorkloadSpec, expand_grid,
                               grid_summary)
-from repro.sweep.runner import SweepResult
+from repro.sweep.runner import SweepResult, compare_results, compare_table
 
 PROFILE_SWEEP = SweepConfig(toks=(8, 64), reqs=(1, 2), ctx=(64, 128),
                             op_points=((8, 1), (16, 1), (64, 1), (32, 4)))
@@ -57,6 +67,11 @@ def build_parser() -> argparse.ArgumentParser:
     p.add_argument("--latency", default="dooly",
                    choices=available_backends(),
                    help="registered latency backend to price scenarios with")
+    p.add_argument("--compare-latency", default=None, metavar="REF",
+                   choices=available_backends(),
+                   help="also run the grid under this reference backend "
+                        "and print the per-scenario fit-error diff "
+                        "(e.g. 'oracle')")
     p.add_argument("--tp", type=int, default=1)
     p.add_argument("--seqs", default="4,8", help="scheduler max_num_seqs axis")
     p.add_argument("--tokens", default="64,128",
@@ -97,14 +112,20 @@ def main(argv=None) -> int:
 
     with ProfileStore(args.db, hardware=args.hardware, oracle=args.oracle,
                       sweep=PROFILE_SWEEP) as store:
-        for m in models:
-            cfg = get_smoke_config(m)
-            for b in backends:
-                rep = store.ensure_profiled(cfg, backend=b, tp=args.tp)
-                if rep is not None:
-                    print(f"profiled {m}/{b}: {rep.n_new} new signatures, "
-                          f"{rep.n_reused} reused")
         sweep = store.sweep(latency=args.latency)
+        # one corpus plan for the whole grid, not one ensure_profiled per
+        # (model, backend): shared signatures are planned + measured once
+        plan = sweep.profile_plan(scenarios)
+        if plan is not None:
+            cov = plan.coverage()
+            print(f"profiling plan {plan.plan_id}: {cov.naive_tasks} naive "
+                  f"-> {cov.plan_tasks} tasks "
+                  f"({100 * cov.dedup_frac:.0f}% dedup, "
+                  f"{cov.satisfied_tasks} satisfied, "
+                  f"{cov.shared_tasks} shared)")
+            rep = store.execute(plan)
+            print(f"profiled {rep.models} configs: {rep.measured} tasks, "
+                  f"{rep.rows_written} rows in {rep.elapsed_s:.2f}s")
         if args.stream:
             results = []
             for r in sweep.iter_results(scenarios):
@@ -119,6 +140,12 @@ def main(argv=None) -> int:
         else:
             out = sweep.run(scenarios)
 
+        diff = None
+        if args.compare_latency:
+            ref_sweep = store.sweep(latency=args.compare_latency)
+            ref = ref_sweep.run(scenarios)
+            diff = compare_results(out, ref)
+
     if not args.stream:
         print(out.table(args.metric))
     print(f"\nsummary: {out.summary}")
@@ -127,9 +154,16 @@ def main(argv=None) -> int:
     for r in front:
         print(f"  cost {r.cost:8.3f}  {args.metric} "
               f"{getattr(r, args.metric):.5f}  {r.scenario.label()}")
+    if diff is not None:
+        print(f"\ncalibration diff: {args.latency} vs "
+              f"{args.compare_latency} (reference)")
+        print(compare_table(diff))
     if args.json:
+        payload = out.to_json()
+        if diff is not None:
+            payload["calibration_diff"] = diff
         with open(args.json, "w") as f:
-            json.dump(out.to_json(), f, indent=2)
+            json.dump(payload, f, indent=2)
         print(f"wrote {args.json}")
     return 0
 

@@ -160,6 +160,51 @@ class Sweep:
     def db(self) -> LatencyDB:
         return self.store.db
 
+    # -- profiling ------------------------------------------------------
+
+    def profile_plan(self, scenarios: Sequence[Scenario], *,
+                     sweep=None, skip_profiled: bool = True):
+        """One corpus-wide :class:`~repro.core.plan.ProfilePlan` covering
+        every distinct (model, backend, tp) a grid needs — the plan-first
+        replacement for calling ``ensure_profiled`` once per pair.  The
+        whole grid dedups as one corpus, so shared signatures are planned
+        (and measured) once no matter how many models share them.
+
+        ``skip_profiled`` drops pairs whose call graph the store already
+        has (the old per-model fast path).  Grids spanning several
+        hardware kinds need one plan per hardware: scenarios whose
+        hardware differs from the store's are rejected here.  Only the
+        exact (model, backend) pairs the grid references are planned —
+        a ragged grid never measures configurations it doesn't use.
+        Returns None when nothing needs planning."""
+        keys = []
+        for s in scenarios:
+            if s.hardware != self.store.hardware:
+                raise ValueError(
+                    f"scenario hardware {s.hardware!r} differs from the "
+                    f"store's {self.store.hardware!r}; build one plan per "
+                    "hardware")
+            k = (s.model, s.backend, s.tp)
+            if k not in keys:
+                keys.append(k)
+        if skip_profiled:
+            keys = [k for k in keys
+                    if not self.store.is_profiled(self.config_fn(k[0]),
+                                                  backend=k[1], tp=k[2])]
+        if not keys:
+            return None
+        tps = {tp for _, _, tp in keys}
+        if len(tps) > 1:
+            raise ValueError(f"mixed tp degrees {sorted(tps)} in one grid; "
+                             "build one plan per tp")
+        cfgs: Dict[str, object] = {}
+        for m, _b, _tp in keys:
+            if m not in cfgs:
+                cfgs[m] = self.config_fn(m)
+        return self.store.plan(list(cfgs.values()), tp=tps.pop(),
+                               sweep=sweep,
+                               pairs=[(cfgs[m], b) for m, b, _tp in keys])
+
     # -- memoized layers ------------------------------------------------
 
     def requests(self, spec: WorkloadSpec) -> List[Request]:
@@ -327,3 +372,71 @@ class Sweep:
             results[r.index] = r
         return SweepResult(results=list(results),
                            summary=dict(self.last_summary))
+
+
+#: metrics the calibration diff reports (ScenarioResult fields)
+COMPARE_METRICS = ("ttft_mean", "tpot_mean", "makespan")
+
+
+def compare_results(primary: SweepResult, reference: SweepResult,
+                    metrics: Sequence[str] = COMPARE_METRICS) -> Dict:
+    """Per-scenario fit-error report between two sweeps of the *same*
+    grid under different latency backends — the calibration diff
+    (``python -m repro.sweep --compare-latency oracle``).
+
+    For each scenario and metric: relative error of the primary backend
+    against the reference, ``(primary - reference) / reference`` (0 when
+    both are 0; None when the reference is 0 and the primary is not —
+    undefined, kept out of the aggregates but counted).  Aggregates are
+    mean/max of |rel err| per metric, the corpus-wide fit-quality
+    number."""
+    if len(primary.results) != len(reference.results):
+        raise ValueError("sweeps cover different grids "
+                         f"({len(primary.results)} vs "
+                         f"{len(reference.results)} scenarios)")
+    rows = []
+    for a, b in zip(primary.results, reference.results):
+        if a.scenario != b.scenario:
+            raise ValueError(f"scenario mismatch at index {a.index}: "
+                             f"{a.scenario.label()} vs "
+                             f"{b.scenario.label()}")
+        errs = {}
+        for m in metrics:
+            va, vb = getattr(a, m), getattr(b, m)
+            errs[m] = 0.0 if va == vb else \
+                (va - vb) / vb if vb else None
+        rows.append({"scenario": a.scenario.label(), "index": a.index,
+                     "mode": a.mode, **{f"err_{m}": e
+                                        for m, e in errs.items()}})
+    agg = {}
+    for m in metrics:
+        defined = np.array([abs(r[f"err_{m}"]) for r in rows
+                            if r[f"err_{m}"] is not None])
+        agg[m] = {"mean_abs_rel_err": float(defined.mean())
+                  if len(defined) else 0.0,
+                  "max_abs_rel_err": float(defined.max())
+                  if len(defined) else 0.0,
+                  "n_undefined": sum(r[f"err_{m}"] is None for r in rows)}
+    return {"metrics": list(metrics), "scenarios": rows, "aggregate": agg}
+
+
+def compare_table(diff: Dict) -> str:
+    """Render a ``compare_results`` report as the CLI table."""
+    metrics = diff["metrics"]
+    head = f"{'scenario':58s} " + " ".join(f"{'err.' + m:>14s}"
+                                           for m in metrics)
+    lines = [head, "-" * len(head)]
+    for r in diff["scenarios"]:
+        lines.append(f"{r['scenario']:58s} "
+                     + " ".join(f"{r[f'err_{m}'] * 100:+13.3f}%"
+                                if r[f"err_{m}"] is not None
+                                else f"{'undef':>14s}"
+                                for m in metrics))
+    lines.append("-" * len(head))
+    lines.append("corpus " + "  ".join(
+        f"{m}: mean {diff['aggregate'][m]['mean_abs_rel_err'] * 100:.3f}% "
+        f"max {diff['aggregate'][m]['max_abs_rel_err'] * 100:.3f}%"
+        + (f" ({diff['aggregate'][m]['n_undefined']} undef)"
+           if diff['aggregate'][m]['n_undefined'] else "")
+        for m in metrics))
+    return "\n".join(lines)

@@ -58,20 +58,57 @@ def current_surface() -> dict:
     return surface
 
 
+REGEN_CMD = ("REGEN_API_SNAPSHOT=1 PYTHONPATH=src python -m pytest "
+             "tests/test_api_surface.py -q")
+
+
+def surface_diff(committed: dict, current: dict) -> str:
+    """Human-readable name/signature diff between the committed snapshot
+    and the live surface — so a failure names exactly what changed, not
+    just a mismatch count."""
+    lines = []
+    old_names, new_names = set(committed["__all__"]), set(current["__all__"])
+    for name in sorted(new_names - old_names):
+        lines.append(f"  + __all__ gained {name!r}")
+    for name in sorted(old_names - new_names):
+        lines.append(f"  - __all__ lost {name!r}")
+    old_sig, new_sig = committed["signatures"], current["signatures"]
+    for name in sorted(set(new_sig) - set(old_sig)):
+        lines.append(f"  + {name}{new_sig[name]}")
+    for name in sorted(set(old_sig) - set(new_sig)):
+        lines.append(f"  - {name}{old_sig[name]}")
+    for name in sorted(set(old_sig) & set(new_sig)):
+        if old_sig[name] != new_sig[name]:
+            lines.append(f"  ~ {name}:\n      was {old_sig[name]}\n"
+                         f"      now {new_sig[name]}")
+    return "\n".join(lines) or "  (no textual diff — check key order)"
+
+
 def test_api_surface_matches_snapshot():
     surface = current_surface()
     if os.environ.get("REGEN_API_SNAPSHOT"):
         SNAPSHOT.write_text(json.dumps(surface, indent=2) + "\n")
     assert SNAPSHOT.exists(), (
-        "tests/api_surface.json missing — regenerate with "
-        "REGEN_API_SNAPSHOT=1 (see module docstring)")
+        f"tests/api_surface.json missing — regenerate with:\n  {REGEN_CMD}")
     committed = json.loads(SNAPSHOT.read_text())
-    assert surface["__all__"] == committed["__all__"], (
-        "repro.api.__all__ changed; if intentional, regenerate the "
-        "snapshot (REGEN_API_SNAPSHOT=1) and review the diff")
-    assert surface["signatures"] == committed["signatures"], (
-        "public signatures changed; if intentional, regenerate the "
-        "snapshot (REGEN_API_SNAPSHOT=1) and review the diff")
+    if surface != committed:
+        raise AssertionError(
+            "public API surface drifted from tests/api_surface.json:\n"
+            + surface_diff(committed, surface)
+            + "\nIf intentional, regenerate the snapshot and review the "
+            f"diff:\n  {REGEN_CMD}")
+
+
+def test_surface_diff_names_the_drift():
+    committed = {"__all__": ["A", "B"],
+                 "signatures": {"A": "(x)", "B": "(y)"}}
+    current = {"__all__": ["A", "C"],
+               "signatures": {"A": "(x, z)", "C": "(c)"}}
+    diff = surface_diff(committed, current)
+    assert "+ __all__ gained 'C'" in diff
+    assert "- __all__ lost 'B'" in diff
+    assert "~ A:" in diff and "was (x)" in diff and "now (x, z)" in diff
+    assert "+ C(c)" in diff and "- B(y)" in diff
 
 
 def test_all_exports_resolve():

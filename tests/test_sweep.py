@@ -237,6 +237,83 @@ def test_sweep_cli_smoke(tmp_path, capsys):
     assert len(data["results"]) == 4
 
 
+def test_compare_results_calibration_diff(profiled_db):
+    """dooly-vs-oracle fit-error report: self-comparison is exactly zero,
+    cross-backend errors are finite and aggregate correctly."""
+    from repro.sweep.runner import compare_results, compare_table
+    scenarios = _grid(8)
+    sweep = Sweep(profiled_db)
+    out = sweep.run(scenarios)
+    self_diff = compare_results(out, out)
+    assert all(r["err_makespan"] == 0.0 for r in self_diff["scenarios"])
+    assert self_diff["aggregate"]["makespan"]["max_abs_rel_err"] == 0.0
+
+    ref = Sweep(profiled_db, latency="oracle").run(scenarios)
+    diff = compare_results(out, ref)
+    assert len(diff["scenarios"]) == len(scenarios)
+    for m in ("ttft_mean", "tpot_mean", "makespan"):
+        agg = diff["aggregate"][m]
+        assert np.isfinite(agg["mean_abs_rel_err"])
+        assert agg["max_abs_rel_err"] >= agg["mean_abs_rel_err"] >= 0.0
+    table = compare_table(diff)
+    assert "err.makespan" in table and "corpus" in table
+    # mismatched grids are refused, not silently zipped
+    with pytest.raises(ValueError):
+        compare_results(out, Sweep(profiled_db).run(scenarios[:2]))
+    # a zero reference metric yields None (JSON null), kept out of the
+    # aggregates instead of poisoning them with inf
+    import copy
+    zeroed = copy.deepcopy(out)
+    zeroed.results[0].makespan = 0.0
+    z = compare_results(out, zeroed)
+    assert z["scenarios"][0]["err_makespan"] is None
+    assert z["aggregate"]["makespan"]["n_undefined"] == 1
+    assert np.isfinite(z["aggregate"]["makespan"]["mean_abs_rel_err"])
+    assert "undef" in compare_table(z)
+    import json as _json
+    _json.dumps(z)                              # strictly valid JSON
+
+
+def test_sweep_profile_plan_covers_grid(tmp_path):
+    """profile_plan builds ONE corpus plan for the grid's distinct
+    (model, backend) pairs, executing it profiles everything the sweep
+    needs, and a second call reports nothing left to plan."""
+    from repro.api import ProfileStore
+    with ProfileStore(hardware=HW, oracle="tpu_analytical",
+                      sweep=QUICK_SWEEP) as store:
+        scenarios = _grid(8)
+        sweep = store.sweep()
+        plan = sweep.profile_plan(scenarios)
+        assert plan is not None
+        assert len(plan.models) == len({(s.model, s.backend, s.tp)
+                                        for s in scenarios})
+        cov = plan.coverage()
+        assert cov.dedup_frac > 0                   # corpus-wide sharing
+        store.execute(plan)
+        out = sweep.run(scenarios)                  # profiled: runs clean
+        assert len(out.results) == len(scenarios)
+        assert sweep.profile_plan(scenarios) is None    # all satisfied
+        other_hw = [Scenario(model=MODELS[0], sched=SchedSpec(),
+                             workload=WorkloadSpec(), hardware="cpu")]
+        with pytest.raises(ValueError):
+            sweep.profile_plan(other_hw)
+
+    # ragged grids plan exactly the (model, backend) pairs referenced —
+    # never the full cross product
+    with ProfileStore(hardware=HW, oracle="tpu_analytical",
+                      sweep=QUICK_SWEEP) as store:
+        ragged = [Scenario(model=MODELS[0], sched=SchedSpec(),
+                           workload=WorkloadSpec(), backend="xla",
+                           hardware=HW),
+                  Scenario(model=MODELS[1], sched=SchedSpec(),
+                           workload=WorkloadSpec(), backend="chunked",
+                           hardware=HW)]
+        plan = store.sweep().profile_plan(ragged)
+        assert set(plan.models) == {
+            (get_smoke_config(MODELS[0]).name, "xla", 1),
+            (get_smoke_config(MODELS[1]).name, "chunked", 1)}
+
+
 def test_iter_results_streams_and_matches_run(profiled_db):
     """The streaming generator must yield every scenario exactly once,
     with numerics identical to the materializing run() (which is built on
