@@ -25,10 +25,11 @@ deliberate, reviewed diff.  `DoolySim` and the sweep types are re-exported
 lazily (PEP 562) — they live downstream of the backend seam and importing
 them eagerly would cycle.
 """
-from repro.api.backends import (DoolyBackend, LatencyBackend,  # noqa: F401
-                                OracleBackend, PlanBackend,
+from repro.api.backends import (DoolyBackend, FallbackBackend,  # noqa: F401
+                                LatencyBackend, OracleBackend, PlanBackend,
                                 RooflineBackend, available_backends,
-                                make_backend, register_backend)
+                                make_backend, make_fallback_backend,
+                                register_backend)
 from repro.api.store import ProfileStore  # noqa: F401
 from repro.core.plan import (CoverageReport, ExecuteReport,  # noqa: F401
                              PlanTask, ProfilePlan, build_plan,
@@ -43,11 +44,13 @@ __all__ = [
     # the latency seam
     "LatencyBackend", "PlanBackend",
     "DoolyBackend", "RooflineBackend", "OracleBackend",
-    "register_backend", "make_backend", "available_backends",
+    "FallbackBackend",
+    "register_backend", "make_backend", "make_fallback_backend",
+    "available_backends",
     # consumer layers (lazy re-exports)
     "DoolySim", "predict_scenarios",
-    "Sweep", "SweepResult", "Scenario", "SchedSpec", "WorkloadSpec",
-    "expand_grid",
+    "Sweep", "SweepResult", "ScenarioFailure", "Scenario", "SchedSpec",
+    "WorkloadSpec", "expand_grid",
 ]
 
 _LAZY = {
@@ -55,6 +58,7 @@ _LAZY = {
     "predict_scenarios": ("repro.sim.simulator", "predict_scenarios"),
     "Sweep": ("repro.sweep.runner", "Sweep"),
     "SweepResult": ("repro.sweep.runner", "SweepResult"),
+    "ScenarioFailure": ("repro.sweep.runner", "ScenarioFailure"),
     "Scenario": ("repro.sweep.grid", "Scenario"),
     "SchedSpec": ("repro.sweep.grid", "SchedSpec"),
     "WorkloadSpec": ("repro.sweep.grid", "WorkloadSpec"),

@@ -286,6 +286,14 @@ class _CallGraphBackend(PlanBackend):
                               "lm_head" in row.module,
                               phase, toks, reqs, ctx)
 
+    def unprofiled_sigs(self) -> List[str]:
+        """Call-graph signatures with no measurements on this hardware —
+        quarantined or never-profiled ops.  LatencyModel silently prices
+        such signatures at 0.0s, so health checks must ask *up front*
+        rather than wait for an exception that never comes."""
+        known = set(self.db.measured_hashes(self.hardware))
+        return sorted({r.sig for r in self.rows} - known)
+
 
 class DoolyBackend(_CallGraphBackend):
     """Regression-fit latency from the profile store — the paper's path.
@@ -575,6 +583,180 @@ class RooflineBackend(PlanBackend):
         return np.array([self._point_seconds(*p) for p in points])
 
 
+# -- graceful degradation ----------------------------------------------
+
+
+class FallbackBackend:
+    """A fallback chain over latency backends (graceful degradation).
+
+    Stage health is decided at *construction* time: a call-graph stage
+    (one with ``rows``) is healthy only if its rows exist and every
+    signature has measurements on this hardware.  That up-front check is
+    load-bearing — ``LatencyModel`` prices unmeasured signatures at 0.0s
+    without raising, so an exception-driven fallback would silently
+    simulate with zeroed operators instead of degrading.  Quarantined
+    ops (whose signatures landed without measurements) and never-
+    profiled models therefore route to the next stage — typically the
+    analytic ``roofline`` — and the sweep layer surfaces ``degraded`` /
+    ``degraded_reason`` per scenario.
+
+    Prediction calls still carry a runtime safety net: an exception in
+    the active stage advances to the next one for the remainder of the
+    session.
+    """
+
+    name = "fallback"
+
+    def __init__(self, stages: Sequence[Tuple[str, LatencyBackend]],
+                 reasons: Optional[Dict[str, str]] = None):
+        if not stages:
+            raise ValueError("FallbackBackend needs at least one stage")
+        self.stages = list(stages)
+        #: stage name -> why it was skipped at construction
+        self.reasons: Dict[str, str] = dict(reasons or {})
+        self._active_i = 0
+        self.name = "->".join(n for n, _ in self.stages)
+
+    # -- degradation status --------------------------------------------
+
+    @property
+    def active(self) -> LatencyBackend:
+        return self.stages[self._active_i][1]
+
+    @property
+    def active_name(self) -> str:
+        return self.stages[self._active_i][0]
+
+    @property
+    def degraded(self) -> bool:
+        return self._active_i > 0
+
+    @property
+    def degraded_reason(self) -> Optional[str]:
+        if not self.degraded:
+            return None
+        skipped = [f"{name}: {self.reasons.get(name, 'runtime failure')}"
+                   for name, _ in self.stages[:self._active_i]]
+        return "; ".join(skipped)
+
+    @property
+    def rows(self):
+        """The active stage's call-graph rows (None for analytic
+        stages) — so consumers that inspect ``rows`` see the stage that
+        actually answers."""
+        return getattr(self.active, "rows", None)
+
+    # -- calibration surface (proxied to the active stage) -------------
+
+    @property
+    def overhead_s(self) -> float:
+        return self.active.overhead_s
+
+    @overhead_s.setter
+    def overhead_s(self, v: float):
+        self.active.overhead_s = v
+
+    @property
+    def chunk_overhead_s(self) -> float:
+        return self.active.chunk_overhead_s
+
+    @chunk_overhead_s.setter
+    def chunk_overhead_s(self, v: float):
+        self.active.chunk_overhead_s = v
+
+    @property
+    def decode_scale(self) -> float:
+        return self.active.decode_scale
+
+    @decode_scale.setter
+    def decode_scale(self, v: float):
+        self.active.decode_scale = v
+
+    # -- prediction (runtime safety net) -------------------------------
+
+    def _call(self, method: str, *args):
+        first = self._active_i
+        err: Optional[BaseException] = None
+        for i in range(first, len(self.stages)):
+            name, be = self.stages[i]
+            try:
+                out = getattr(be, method)(*args)
+            except Exception as e:              # noqa: BLE001
+                err = e
+                self.reasons.setdefault(
+                    name, f"{type(e).__name__}: {e}")
+                continue
+            if i != self._active_i:
+                self._active_i = i              # stay degraded
+            return out
+        raise err if err is not None else RuntimeError(
+            f"no fallback stage could serve {method}")
+
+    def predict_points(self, points) -> np.ndarray:
+        return self._call("predict_points", points)
+
+    def predict_plan(self, plan) -> float:
+        return self._call("predict_plan", plan)
+
+    def predict_trace(self, plans) -> np.ndarray:
+        return self._call("predict_trace", plans)
+
+    def predict_traces(self, traces) -> List[np.ndarray]:
+        return self._call("predict_traces", traces)
+
+    def predict_record(self, rec) -> float:
+        return self._call("predict_record", rec)
+
+
+def _stage_skip_reason(be: LatencyBackend, db: Optional[LatencyDB],
+                       hardware: str) -> Optional[str]:
+    """None when the stage can serve honest predictions; otherwise why
+    not.  Analytic stages (no ``rows``) are always healthy."""
+    rows = getattr(be, "rows", None)
+    if rows is None:
+        return None
+    if not rows:
+        return "no call-graph rows (model not profiled)"
+    unprofiled = (be.unprofiled_sigs()
+                  if hasattr(be, "unprofiled_sigs") else [])
+    if unprofiled:
+        return (f"{len(unprofiled)}/{len({r.sig for r in rows})} "
+                f"signatures unmeasured on {hardware} (quarantined or "
+                f"unprofiled): {', '.join(s[:12] for s in unprofiled[:3])}"
+                + ("..." if len(unprofiled) > 3 else ""))
+    return None
+
+
+def make_fallback_backend(names: Sequence[str], cfg: ModelConfig,
+                          db: Optional[LatencyDB] = None, *,
+                          hardware: str, **kw) -> FallbackBackend:
+    """Build every stage of a chain and activate the first healthy one
+    (falling back to the last stage if none is)."""
+    stages: List[Tuple[str, LatencyBackend]] = []
+    reasons: Dict[str, str] = {}
+    for name in names:
+        try:
+            be = make_backend(name, cfg, db, hardware=hardware, **kw)
+        except Exception as e:                  # noqa: BLE001
+            reasons[name] = f"{type(e).__name__}: {e}"
+            continue
+        stages.append((name, be))
+    if not stages:
+        raise RuntimeError(
+            f"no stage of fallback chain {'->'.join(names)} could be "
+            f"built: {reasons}")
+    chain = FallbackBackend(stages, reasons)
+    for i, (name, be) in enumerate(stages):
+        skip = _stage_skip_reason(be, db, hardware)
+        if skip is None:
+            chain._active_i = i
+            break
+        chain.reasons.setdefault(name, skip)
+    else:
+        chain._active_i = len(stages) - 1       # best effort
+    return chain
+
+
 # -- registry ----------------------------------------------------------
 
 BackendFactory = Callable[..., LatencyBackend]
@@ -599,11 +781,25 @@ def make_backend(name: str, cfg: ModelConfig,
                  max_seq: int, tp: int = 1,
                  lm: Optional[LatencyModel] = None,
                  **kw) -> LatencyBackend:
-    """Construct a registered backend by name (the sweep/CLI entry)."""
+    """Construct a registered backend by name (the sweep/CLI entry).
+
+    ``"a->b"`` names build a :class:`FallbackBackend` chain: each stage
+    is a registered backend, and the first stage healthy for this
+    (model, hardware) answers predictions — graceful degradation for
+    quarantined or unprofiled models."""
+    if "->" in name:
+        parts = [p.strip() for p in name.split("->") if p.strip()]
+        if len(parts) < 2:
+            raise KeyError(f"malformed fallback chain {name!r}")
+        return make_fallback_backend(
+            parts, cfg, db, hardware=hardware, backend=backend,
+            sched_config=sched_config, max_seq=max_seq, tp=tp, lm=lm,
+            **kw)
     factory = _REGISTRY.get(name)
     if factory is None:
         raise KeyError(f"unknown latency backend {name!r}; "
-                       f"registered: {', '.join(available_backends())}")
+                       f"registered: {', '.join(available_backends())} "
+                       f"(or an 'a->b' fallback chain)")
     return factory(cfg, db, hardware=hardware, backend=backend,
                    sched_config=sched_config, max_seq=max_seq, tp=tp,
                    lm=lm, **kw)
@@ -626,3 +822,10 @@ register_backend(
     lambda cfg, db=None, *, hardware=None, backend=None, sched_config,
     max_seq, tp=1, lm=None, **kw: RooflineBackend(
         cfg, sched_config=sched_config, max_seq=max_seq, tp=tp, **kw))
+register_backend(
+    "degraded",
+    lambda cfg, db, *, hardware, backend, sched_config, max_seq, tp=1,
+    lm=None, **kw: make_fallback_backend(
+        ("dooly", "roofline"), cfg, db, hardware=hardware,
+        backend=backend, sched_config=sched_config, max_seq=max_seq,
+        tp=tp, lm=lm, **kw))

@@ -151,15 +151,22 @@ class ProfileStore:
                           pairs=pairs)
 
     def execute(self, plan: ProfilePlan, *, workers: int = 1,
-                checkpoint: Optional[str] = None,
-                progress=None) -> ExecuteReport:
+                checkpoint: Optional[str] = None, progress=None,
+                task_timeout: Optional[float] = None,
+                max_retries: int = 2,
+                fail_fast: bool = False) -> ExecuteReport:
         """Measure a plan's remaining tasks into this store.  Rows are
         bit-identical to sequential per-model ``profile_model`` calls
         over the same corpus; with ``checkpoint`` each completed task id
         is journaled after its rows commit, so an interrupted execute
-        resumes instead of restarting."""
+        resumes instead of restarting.  Execution is supervised: failed
+        or hung (``task_timeout``) measurements retry up to
+        ``max_retries`` times, then quarantine (or raise, with
+        ``fail_fast``) — see :func:`repro.api.execute_plan`."""
         return execute_plan(self.db, plan, workers=workers,
-                            checkpoint=checkpoint, progress=progress)
+                            checkpoint=checkpoint, progress=progress,
+                            task_timeout=task_timeout,
+                            max_retries=max_retries, fail_fast=fail_fast)
 
     def ensure_profiled(self, cfg: ModelConfig, *, backend: str = "xla",
                         tp: int = 1, hardware: Optional[str] = None,

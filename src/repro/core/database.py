@@ -356,3 +356,21 @@ class LatencyDB:
             out[table] = self.conn.execute(
                 f"SELECT COUNT(*) FROM {table}").fetchone()[0]
         return out
+
+    def audit_measurements(self, hardware: Optional[str] = None
+                           ) -> List[Tuple]:
+        """Rows whose latency could not have come from a healthy
+        measurement: NULL (sqlite stores NaN as NULL, which the NOT NULL
+        constraint normally rejects, but older DBs may predate it),
+        non-positive, or infinite.  Returns full measurement rows so the
+        caller can show — or delete — exactly what is poisoned."""
+        where = ("latency_us IS NULL OR latency_us <= 0 "
+                 "OR latency_us >= 1e308 OR latency_us != latency_us")
+        q = f"SELECT * FROM measurements WHERE ({where})"
+        args: Tuple = ()
+        if hardware is not None:
+            q += " AND hardware=?"
+            args = (hardware,)
+        return self.conn.execute(
+            q + " ORDER BY sig_hash, phase, num_toks, num_reqs, ctx_len",
+            args).fetchall()

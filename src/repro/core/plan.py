@@ -15,17 +15,19 @@ stored measurements where they exist.
 
 ``execute_plan`` runs the remaining tasks through the profiler's
 measurement machinery (``measure_payload_rows`` — rows bit-identical to
-a sequential ``profile_model`` over the same corpus), optionally sharded
-across worker processes, committing each task's rows atomically and then
-journaling its id to a checkpoint file, so an interrupted corpus sweep
-resumes where it stopped instead of restarting.
+a sequential ``profile_model`` over the same corpus) under supervision:
+tasks stream back per-task from a replaceable worker pool, each task's
+rows commit atomically before its id is journaled (checksummed, fsynced)
+to the checkpoint file, failures retry with backoff, and tasks that
+exhaust their retries are quarantined in the journal so an interrupted
+or partially-poisoned corpus sweep resumes where it stopped instead of
+restarting — or re-tripping.
 """
 from __future__ import annotations
 
 import hashlib
 import os
 import time
-from concurrent.futures import ProcessPoolExecutor
 from dataclasses import dataclass
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
@@ -33,7 +35,7 @@ from repro.configs.base import ModelConfig
 from repro.core.database import LatencyDB
 from repro.core.opset import entry_task_id
 from repro.core.profiler import (DoolyProf, EntryReport, ProfileReport,
-                                 SweepConfig)
+                                 SweepConfig, validate_rows)
 from repro.core.runner import ModelTrace, trace_model
 from repro.core.signature import Signature
 
@@ -318,6 +320,11 @@ class ExecuteReport:
     elapsed_s: float = 0.0
     checkpoint: Optional[str] = None
     workers: int = 1
+    retried: int = 0                # extra attempts beyond the first
+    timed_out: int = 0              # attempts killed by the task deadline
+    quarantined: int = 0            # tasks poisoned in THIS call
+    skipped_quarantined: int = 0    # quarantined earlier, per the journal
+    quarantine: Tuple[Tuple[str, str], ...] = ()    # (task_id, reason)
 
 
 # ---------------------------------------------------------------------------
@@ -409,113 +416,190 @@ def build_plan(db: LatencyDB, cfgs: Sequence[ModelConfig], *,
 
 
 # ---------------------------------------------------------------------------
-# plan execution (resumable, parallel)
+# plan execution (resumable, parallel, supervised)
 # ---------------------------------------------------------------------------
 
-def _measure_plan_shard(payload) -> List[Tuple[str, List[Tuple]]]:
-    """ProcessPoolExecutor worker: measure one shard of plan tasks — each
-    carries its own (cfg, backend), so one shard can span models.  Returns
-    (sig_hash, full DB rows) per task.  Module-level so it pickles under
-    the spawn start method."""
-    (oracle, hardware, sweep, tasks) = payload
-    with LatencyDB() as db:
-        prof = DoolyProf(db, oracle=oracle, hardware=hardware, sweep=sweep)
-        return [(tpayload[3] if tpayload[0] == "module" else tpayload[1],
-                 prof.measure_payload_rows(tpayload, cfg, backend))
-                for cfg, backend, tpayload in tasks]
+#: env hook: "module:function" resolving to a measure shim with signature
+#: ``(prof, payload, cfg, backend) -> rows``.  Applied by every execution
+#: path — in-process and spawned workers alike — so fault-injection tests
+#: can make specific tasks crash, hang, or emit garbage deterministically.
+MEASURE_SHIM_ENV = "REPRO_MEASURE_SHIM"
 
 
-def _journal_header(plan: ProfilePlan) -> str:
-    return f"# dooly-plan {plan.plan_id}"
+class PlanExecutionError(RuntimeError):
+    """A task exhausted its retries and ``fail_fast`` was requested."""
+
+    def __init__(self, task_id: str, reason: str):
+        super().__init__(
+            f"task {task_id} failed after retries: {reason}")
+        self.task_id = task_id
+        self.reason = reason
+
+
+def _resolve_measure_fn(prof: DoolyProf,
+                        measure_fn: Optional[Callable] = None) -> Callable:
+    """The per-task measure callable: an explicit override, the env-var
+    shim, or the profiler's own ``measure_payload_rows``."""
+    if measure_fn is None:
+        spec = os.environ.get(MEASURE_SHIM_ENV)
+        if spec:
+            import importlib
+            mod, _, fn = spec.partition(":")
+            measure_fn = getattr(importlib.import_module(mod), fn)
+    if measure_fn is None:
+        return lambda payload, cfg, backend: prof.measure_payload_rows(
+            payload, cfg, backend)
+    bound = measure_fn
+    return lambda payload, cfg, backend: bound(prof, payload, cfg, backend)
+
+
+def _plan_worker_setup(init):
+    """Supervised-worker setup: a throwaway in-memory DB and a profiler
+    matching the plan's oracle/hardware/sweep.  Module-level so it
+    pickles under the spawn start method."""
+    oracle, hardware, sweep = init
+    prof = DoolyProf(LatencyDB(), oracle=oracle, hardware=hardware,
+                     sweep=sweep)
+    return _resolve_measure_fn(prof)
+
+
+def _plan_worker_run(measure: Callable, payload) -> List[Tuple]:
+    """Supervised-worker task: measure one plan task and validate its
+    rows *in the worker*, so garbage measurements fail the attempt (and
+    consume retry budget) instead of reaching the coordinator."""
+    cfg, backend, tpayload = payload
+    return validate_rows(measure(tpayload, cfg, backend))
 
 
 def read_journal(path: str, plan: ProfilePlan) -> set:
     """Completed task ids from a checkpoint file; refuses a journal
-    written for a different plan."""
-    if not path or not os.path.exists(path):
-        return set()
-    lines = [ln.strip() for ln in open(path) if ln.strip()]
-    if not lines:
-        return set()
-    if lines[0] != _journal_header(plan):
-        raise RuntimeError(
-            f"checkpoint {path!r} belongs to a different plan "
-            f"({lines[0]!r}, expected {_journal_header(plan)!r}); delete "
-            "it or pass the matching plan")
-    return set(lines[1:])
+    written for a different plan.  Quarantined tasks are not included —
+    use :func:`repro.core.journal.read_journal_state` for the full
+    picture."""
+    return _journal_state(path, plan).done
+
+
+def _journal_state(path: Optional[str], plan: ProfilePlan):
+    from repro.core.journal import read_journal_state
+    return read_journal_state(path, plan.plan_id,
+                              known_ids={t.task_id for t in plan.tasks})
 
 
 def execute_plan(db: LatencyDB, plan: ProfilePlan, *, workers: int = 1,
                  checkpoint: Optional[str] = None,
-                 progress: Optional[Callable] = None) -> ExecuteReport:
-    """Measure every unsatisfied, un-journaled task and land the plan's
-    signatures + per-model call-graph rows.
+                 progress: Optional[Callable] = None,
+                 task_timeout: Optional[float] = None,
+                 max_retries: int = 2, retry_backoff_s: float = 0.1,
+                 fail_fast: bool = False, journal_fsync: bool = True,
+                 measure_fn: Optional[Callable] = None) -> ExecuteReport:
+    """Measure every unsatisfied, un-journaled, un-quarantined task and
+    land the plan's signatures + per-model call-graph rows.
 
     Each task's measurement rows and its signature commit in one
-    transaction *before* its id is appended to the checkpoint journal, so
-    a crash can lose at most the in-flight task and a resume re-measures
-    only what never committed.  With ``workers > 1`` tasks shard across
-    spawn processes by signature hash (same partition as the parallel
-    profiler); rows are bit-identical to a serial run either way."""
+    transaction *before* its id is appended to the checkpoint journal
+    (flushed and fsynced), so a crash can lose at most in-flight tasks
+    and a resume re-measures only what never committed.
+
+    Execution is supervised: a task whose measurement raises, returns
+    invalid rows, crashes its worker, or (``task_timeout``) hangs is
+    retried up to ``max_retries`` times with exponential backoff
+    (``retry_backoff_s * 2**attempt``), then **quarantined** — recorded
+    in the journal so resumes skip it — while the rest of the corpus
+    completes.  ``fail_fast=True`` raises :class:`PlanExecutionError` on
+    the first exhausted task instead (committed tasks stay journaled for
+    resume).  With ``workers > 1`` or a ``task_timeout``, tasks run on a
+    replaceable spawn-process pool and stream back in completion order;
+    rows are bit-identical to a serial run either way.  Commit,
+    journal-append, and ``progress`` failures are never swallowed — only
+    measurement failures are supervised."""
     t0 = time.perf_counter()
+    from repro.core.journal import PlanJournal
+    from repro.core.supervisor import SupervisedPool
     prof = DoolyProf(db, oracle=plan.oracle, hardware=plan.hardware,
                      sweep=plan.sweep)
     sig_by_hash = {s.hash: s for s in plan.signatures}
-    done = read_journal(checkpoint, plan) if checkpoint else set()
-    todo = [t for t in plan.todo if t.task_id not in done]
-    skipped = len(plan.todo) - len(todo)
+    state = _journal_state(checkpoint, plan)
+    todo = [t for t in plan.todo if t.task_id not in state.done
+            and t.task_id not in state.quarantined]
+    skipped = sum(t.task_id in state.done for t in plan.todo)
+    skipped_quar = sum(t.task_id in state.quarantined for t in plan.todo)
 
-    jf = None
+    journal = None
     if checkpoint:
-        fresh = not os.path.exists(checkpoint) or \
-            not open(checkpoint).read().strip()
-        jf = open(checkpoint, "a")
-        if fresh:
-            jf.write(_journal_header(plan) + "\n")
-            jf.flush()
+        journal = PlanJournal(checkpoint, plan.plan_id,
+                              fsync=journal_fsync).open()
 
     measured = 0
     rows_written = 0
+    retried = 0
+    timed_out = 0
+    quarantined: List[Tuple[str, str]] = []
 
     def _commit(task: PlanTask, rows: List[Tuple]):
         nonlocal measured, rows_written
+        validate_rows(rows, where=f"task {task.task_id}")
         with db.transaction():
             db.insert_signatures_bulk([sig_by_hash[task.sig_hash]])
             db.add_measurements_bulk(rows)
-        if jf is not None:
-            jf.write(task.task_id + "\n")
-            jf.flush()
+        if journal is not None:
+            journal.record_done(task.task_id)
         measured += 1
         rows_written += len(rows)
         if progress is not None:
             progress(task, measured + skipped, len(plan.todo))
 
+    def _quarantine(task: PlanTask, reason: str):
+        if fail_fast:
+            raise PlanExecutionError(task.task_id, reason)
+        if journal is not None:
+            journal.record_quarantine(task.task_id, reason)
+        quarantined.append((task.task_id, reason))
+
     try:
-        if workers > 1 and todo:
-            import multiprocessing as mp
-            shards: List[List[PlanTask]] = [[] for _ in range(workers)]
+        if todo and (workers > 1 or task_timeout is not None):
+            by_id = {t.task_id: t for t in todo}
+            pool = SupervisedPool(
+                _plan_worker_setup, _plan_worker_run,
+                (plan.oracle, plan.hardware, plan.sweep),
+                workers=workers, task_timeout=task_timeout,
+                max_retries=max_retries, backoff_s=retry_backoff_s)
+            with pool:
+                for out in pool.run(
+                        [(t.task_id, (t.cfg, t.backend, t.payload))
+                         for t in todo]):
+                    retried += out.attempts - 1
+                    timed_out += out.n_timeouts
+                    task = by_id[out.task_id]
+                    if out.ok:
+                        _commit(task, out.result)
+                    else:
+                        _quarantine(task, out.error or "unknown failure")
+        elif todo:
+            measure = _resolve_measure_fn(prof, measure_fn)
             for task in todo:
-                shards[int(task.sig_hash, 16) % workers].append(task)
-            shards = [s for s in shards if s]
-            payloads = [(plan.oracle, plan.hardware, plan.sweep,
-                         [(t.cfg, t.backend, t.payload) for t in shard])
-                        for shard in shards]
-            with ProcessPoolExecutor(
-                    max_workers=workers,
-                    mp_context=mp.get_context("spawn")) as ex:
-                for shard, results in zip(shards,
-                                          ex.map(_measure_plan_shard,
-                                                 payloads)):
-                    by_hash = dict(results)
-                    for task in shard:
-                        _commit(task, by_hash[task.sig_hash])
-        else:
-            for task in todo:
-                _commit(task, prof.measure_payload_rows(
-                    task.payload, task.cfg, task.backend))
+                attempts = 0
+                while True:
+                    attempts += 1
+                    try:
+                        rows = validate_rows(
+                            measure(task.payload, task.cfg, task.backend),
+                            where=f"task {task.task_id}")
+                    except Exception as e:      # noqa: BLE001
+                        if attempts > max_retries:
+                            _quarantine(task,
+                                        f"{type(e).__name__}: {e}")
+                            break
+                        retried += 1
+                        time.sleep(retry_backoff_s
+                                   * (2 ** (attempts - 1)))
+                        continue
+                    _commit(task, rows)
+                    break
 
         # idempotent tail: every signature (satisfied ones included) and
-        # the per-model call-graph counts, one transaction
+        # the per-model call-graph counts, one transaction.  Quarantined
+        # signatures land here too — without measurements — which is
+        # exactly what lets degraded-mode backends see and report them.
         with db.transaction():
             db.insert_signatures_bulk(plan.signatures)
             for (name, backend, tp), pentries in plan.entries:
@@ -528,8 +612,8 @@ def execute_plan(db: LatencyDB, plan: ProfilePlan, *, workers: int = 1,
                     [(cid, sig, module, count)
                      for (sig, module), count in counts.items()])
     finally:
-        if jf is not None:
-            jf.close()
+        if journal is not None:
+            journal.close()
 
     return ExecuteReport(
         plan_id=plan.plan_id, n_tasks=len(plan.todo), measured=measured,
@@ -537,4 +621,7 @@ def execute_plan(db: LatencyDB, plan: ProfilePlan, *, workers: int = 1,
         satisfied=sum(t.satisfied for t in plan.tasks),
         rows_written=rows_written, models=len(plan.models),
         elapsed_s=time.perf_counter() - t0, checkpoint=checkpoint,
-        workers=workers)
+        workers=workers, retried=retried, timed_out=timed_out,
+        quarantined=len(quarantined),
+        skipped_quarantined=skipped_quar,
+        quarantine=tuple(quarantined))

@@ -39,6 +39,7 @@ measurement bulk path.
 """
 from __future__ import annotations
 
+import math
 import re
 import time
 from concurrent.futures import ProcessPoolExecutor
@@ -76,6 +77,65 @@ class SweepConfig:
 
 QUICK_SWEEP = SweepConfig(toks=(64, 256), reqs=(1, 2), ctx=(128, 512),
                           op_points=((64, 1), (256, 1), (64, 2)))
+
+
+class MeasurementError(RuntimeError):
+    """A measurement produced unusable data (NaN/inf/non-positive)."""
+
+
+def _valid_latency(value) -> bool:
+    return (isinstance(value, (int, float)) and math.isfinite(value)
+            and value > 0)
+
+
+def validate_rows(rows: List[Tuple], *, where: str = "") -> List[Tuple]:
+    """Reject measurement rows whose latency is NaN, infinite, or
+    non-positive — garbage that would otherwise poison fits and
+    simulations silently.  Returns the rows unchanged when clean."""
+    bad = [r for r in rows if not _valid_latency(r[-1])]
+    if bad:
+        label = f" for {where}" if where else ""
+        sample = ", ".join(f"{r[2]}@{r[3]}/{r[4]}/{r[5]}={r[-1]!r}"
+                           for r in bad[:3])
+        raise MeasurementError(
+            f"{len(bad)}/{len(rows)} invalid latency rows{label}: "
+            f"{sample}")
+    return rows
+
+
+@dataclass(frozen=True)
+class ValidationPolicy:
+    """How raw oracle measurements are vetted before landing.
+
+    ``reject_invalid`` grants one silent re-measure when a sample comes
+    back NaN/inf/non-positive, then raises :class:`MeasurementError`.
+    ``max_rel_spread``, when set, takes a second sample per point and —
+    if the pair's relative spread exceeds the threshold (a flaky
+    measurement) — one more, landing the final sample.  It defaults to
+    off because the repo's oracles are deterministic and the plan /
+    serial bit-identity gates assume one sample per point."""
+    reject_invalid: bool = True
+    max_rel_spread: Optional[float] = None
+
+    def check(self, measure_once, what: str) -> float:
+        val = measure_once()
+        if self.reject_invalid and not _valid_latency(val):
+            val = measure_once()            # one benefit-of-the-doubt
+            if not _valid_latency(val):
+                raise MeasurementError(
+                    f"oracle returned invalid latency {val!r} for "
+                    f"{what} (twice)")
+        if self.max_rel_spread is not None:
+            second = measure_once()
+            lo, hi = sorted((val, second))
+            if not _valid_latency(second) or \
+                    (hi - lo) / max(lo, 1e-30) > self.max_rel_spread:
+                val = measure_once()        # flagged: re-measure once
+                if self.reject_invalid and not _valid_latency(val):
+                    raise MeasurementError(
+                        f"oracle returned invalid latency {val!r} for "
+                        f"{what} on re-measure")
+        return val
 
 COMM_OPS = ("all-reduce", "all-gather", "reduce-scatter")
 COMM_SIZES = tuple(1 << s for s in range(17, 28, 2))   # 128 KiB .. 128 MiB
@@ -169,11 +229,15 @@ def window_for_path(cfg: ModelConfig, path: Tuple[str, ...]) -> int:
 
 class DoolyProf:
     def __init__(self, db: LatencyDB, *, oracle: str = "tpu_analytical",
-                 hardware: str = "tpu-v5e", sweep: Optional[SweepConfig] = None):
+                 hardware: str = "tpu-v5e",
+                 sweep: Optional[SweepConfig] = None,
+                 validation: Optional[ValidationPolicy] = None):
         self.db = db
         self.oracle = oracle
         self.hardware = hardware
         self.sweep = sweep or SweepConfig()
+        self.validation = (ValidationPolicy() if validation is None
+                           else validation)
         # measurements staged during the current profile_model, flushed in
         # one transaction per model; indexed for same-model dedup/replay
         self._pending_rows: List[Tuple] = []
@@ -517,14 +581,18 @@ class DoolyProf:
 
     def _measure_op(self, entry: OpEntry, toks, reqs) -> float:
         fn, args = entry.jit_callable(toks=toks, reqs=reqs)
-        return oracles.measure(self.oracle, fn, args)
+        return self.validation.check(
+            lambda: oracles.measure(self.oracle, fn, args),
+            f"op {entry.kind} toks={toks} reqs={reqs}")
 
     def _measure_module(self, mc: ModuleContext, toks, reqs, ctx) -> float:
         args = mc.abstract_inputs(max(toks, 1), max(reqs, 1), max(ctx, 1))
         full = (mc.params,) + tuple(args)
         if self.oracle == "cpu_wallclock":
             full = mc.materialize(full)
-        return oracles.measure(self.oracle, mc.fn, full)
+        return self.validation.check(
+            lambda: oracles.measure(self.oracle, mc.fn, full),
+            f"module {mc.kind} toks={toks} reqs={reqs} ctx={ctx}")
 
     def _replay(self, sig_hash: str, key) -> float:
         pending = self._pending_index.get(sig_hash)

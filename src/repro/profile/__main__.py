@@ -68,6 +68,23 @@ def build_parser() -> argparse.ArgumentParser:
             sp.add_argument("--resume", action="store_true",
                             help="journal to <db>.plan-journal (implied "
                                  "when --checkpoint is given)")
+            sp.add_argument("--task-timeout", type=float, default=None,
+                            help="per-task wall-clock limit in seconds; "
+                                 "a hung measurement is killed and "
+                                 "retried")
+            sp.add_argument("--max-retries", type=int, default=2,
+                            help="attempts beyond the first before a "
+                                 "task is quarantined (default 2)")
+            sp.add_argument("--fail-fast", action="store_true",
+                            help="abort on the first task that exhausts "
+                                 "its retries instead of quarantining "
+                                 "it")
+    audit = sub.add_parser(
+        "audit", help="scan a latency DB for poisoned measurement rows")
+    audit.add_argument("--db", required=True)
+    audit.add_argument("--hardware", default=None)
+    audit.add_argument("--json", default=None,
+                       help="write the report to this path ('-' = stdout)")
     return p
 
 
@@ -93,8 +110,28 @@ def _emit(args, payload: dict, table: str):
             print(f"wrote {args.json}")
 
 
+def _audit(args) -> int:
+    from repro.core.database import LatencyDB
+    with LatencyDB(args.db) as db:
+        bad = db.audit_measurements(args.hardware)
+    payload = {"db": args.db, "hardware": args.hardware,
+               "poisoned_rows": len(bad),
+               "rows": [list(r) for r in bad[:50]]}
+    if bad:
+        table = "\n".join(
+            [f"{len(bad)} poisoned measurement rows in {args.db}:"]
+            + [f"  {r[0][:12]} {r[2]}@{r[3]}/{r[4]}/{r[5]} "
+               f"latency_us={r[7]!r}" for r in bad[:20]])
+    else:
+        table = f"no poisoned measurement rows in {args.db}"
+    _emit(args, payload, table)
+    return 1 if bad else 0
+
+
 def main(argv=None) -> int:
     args = build_parser().parse_args(argv)
+    if args.cmd == "audit":
+        return _audit(args)
     store, plan = _build(args)
     with store:
         cov = plan.coverage()
@@ -124,19 +161,36 @@ def main(argv=None) -> int:
             print(cov.table())
         rep = store.execute(plan, workers=args.workers,
                             checkpoint=checkpoint,
-                            progress=None if to_stdout else progress)
+                            progress=None if to_stdout else progress,
+                            task_timeout=args.task_timeout,
+                            max_retries=args.max_retries,
+                            fail_fast=args.fail_fast)
         summary = (f"plan {rep.plan_id}: measured {rep.measured}, "
                    f"resumed past {rep.skipped_journal}, "
                    f"{rep.satisfied} already satisfied; "
                    f"{rep.rows_written} rows in {rep.elapsed_s:.2f}s")
+        if rep.retried or rep.timed_out:
+            summary += (f"\nsupervision: {rep.retried} retries, "
+                        f"{rep.timed_out} timeouts")
+        if rep.quarantined or rep.skipped_quarantined:
+            summary += (f"\nquarantined: {rep.quarantined} new, "
+                        f"{rep.skipped_quarantined} skipped from the "
+                        "journal")
+            for task_id, reason in rep.quarantine:
+                summary += f"\n  {task_id}: {reason}"
         _emit(args, {"plan_id": rep.plan_id, "measured": rep.measured,
                      "skipped_journal": rep.skipped_journal,
                      "satisfied": rep.satisfied,
                      "rows_written": rep.rows_written,
                      "elapsed_s": rep.elapsed_s,
                      "checkpoint": rep.checkpoint,
+                     "retried": rep.retried,
+                     "timed_out": rep.timed_out,
+                     "quarantined": rep.quarantined,
+                     "skipped_quarantined": rep.skipped_quarantined,
+                     "quarantine": [list(q) for q in rep.quarantine],
                      "coverage": cov.to_json()}, summary)
-    return 0
+        return 1 if rep.quarantined else 0
 
 
 if __name__ == "__main__":

@@ -65,10 +65,11 @@ def build_parser() -> argparse.ArgumentParser:
     p.add_argument("--hardware", default="tpu-v5e")
     p.add_argument("--oracle", default="tpu_analytical")
     p.add_argument("--latency", default="dooly",
-                   choices=available_backends(),
-                   help="registered latency backend to price scenarios with")
+                   help="registered latency backend to price scenarios "
+                        f"with (one of {', '.join(available_backends())}, "
+                        "or an 'a->b' fallback chain such as "
+                        "'dooly->roofline')")
     p.add_argument("--compare-latency", default=None, metavar="REF",
-                   choices=available_backends(),
                    help="also run the grid under this reference backend "
                         "and print the per-scenario fit-error diff "
                         "(e.g. 'oracle')")
@@ -136,7 +137,8 @@ def main(argv=None) -> int:
                       f"{r.tpot_p50:9.4f}  cost {r.cost:8.3f}")
             out = SweepResult(
                 results=sorted(results, key=lambda r: r.index),
-                summary=dict(sweep.last_summary))
+                summary=dict(sweep.last_summary),
+                failures=list(sweep.last_failures))
         else:
             out = sweep.run(scenarios)
 
@@ -148,6 +150,12 @@ def main(argv=None) -> int:
 
     if not args.stream:
         print(out.table(args.metric))
+    if out.failures:
+        print(f"\n{len(out.failures)} scenario(s) failed:")
+        print(out.failure_table())
+    if out.summary.get("degraded"):
+        print(f"\n{out.summary['degraded']} scenario(s) priced by a "
+              "degraded (fallback) backend")
     print(f"\nsummary: {out.summary}")
     front = out.frontier(args.metric)
     print(f"cost/latency frontier ({args.metric}):")

@@ -74,20 +74,40 @@ class ScenarioResult:
     tokens_per_s: float             # generated tokens / makespan
     cost: float                     # accelerator-seconds x price x tp
     index: int = -1                 # position in the submitted grid
+    degraded: bool = False          # priced by a fallback backend stage
 
     def to_json(self) -> Dict:
         out = {k: getattr(self, k) for k in
                ("mode", "makespan", "n_iterations", "ttft_mean", "ttft_p50",
                 "ttft_p90", "tpot_mean", "tpot_p50", "tpot_p90",
-                "tokens_per_s", "cost")}
+                "tokens_per_s", "cost", "degraded")}
         out["scenario"] = self.scenario.label()
         return out
+
+
+@dataclass
+class ScenarioFailure:
+    """One scenario the sweep could not evaluate, and why.
+
+    ``stage`` names the pipeline step that raised: ``"workload"``
+    (request building / scheduler replay), ``"build"`` (simulator or
+    latency-backend construction), ``"predict"`` (a fit group's batched
+    prediction), or ``"loop"`` (the interleaved full-loop run)."""
+    index: int
+    scenario: Scenario
+    stage: str
+    error: str
+
+    def to_json(self) -> Dict:
+        return {"index": self.index, "scenario": self.scenario.label(),
+                "stage": self.stage, "error": self.error}
 
 
 @dataclass
 class SweepResult:
     results: List[ScenarioResult]
     summary: Dict[str, float] = field(default_factory=dict)
+    failures: List[ScenarioFailure] = field(default_factory=list)
 
     def frontier(self, metric: str = "tpot_mean") -> List[ScenarioResult]:
         """Pareto frontier minimizing (cost, metric): the scenarios for
@@ -116,9 +136,19 @@ class SweepResult:
                 f"{r.cost:8.3f}  {'*' if id(r) in front else ''}")
         return "\n".join(lines)
 
+    def failure_table(self) -> str:
+        if not self.failures:
+            return "no failed scenarios"
+        head = f"{'scenario':58s} {'stage':9s} error"
+        lines = [head, "-" * len(head)]
+        for f in self.failures:
+            lines.append(f"{f.scenario.label():58s} {f.stage:9s} {f.error}")
+        return "\n".join(lines)
+
     def to_json(self) -> Dict:
         return {"summary": self.summary,
                 "results": [r.to_json() for r in self.results],
+                "failures": [f.to_json() for f in self.failures],
                 "frontier": [r.scenario.label() for r in self.frontier()]}
 
 
@@ -150,6 +180,8 @@ class Sweep:
         self.latency_name = latency
         #: summary counters of the most recent iter_results/run pass
         self.last_summary: Optional[Dict[str, float]] = None
+        #: per-scenario failures of the most recent pass (on_error="report")
+        self.last_failures: List[ScenarioFailure] = []
         self._requests: Dict[WorkloadSpec, List[Request]] = {}
         self._struct_keys: Dict[WorkloadSpec, Tuple] = {}
         self._traces: Dict[Tuple, PlanTrace] = {}
@@ -273,7 +305,7 @@ class Sweep:
 
     def _result(self, scn: Scenario, mode: str, makespan: float,
                 n_iterations: int, met: Dict[str, np.ndarray],
-                index: int) -> ScenarioResult:
+                index: int, degraded: bool = False) -> ScenarioResult:
         ttft, tpot = met["ttft"], met["tpot"]
         n_generated = int(met["_n_generated"])
         return ScenarioResult(
@@ -286,9 +318,14 @@ class Sweep:
             tpot_p50=float(np.percentile(tpot, 50)) if len(tpot) else 0.0,
             tpot_p90=float(np.percentile(tpot, 90)) if len(tpot) else 0.0,
             tokens_per_s=n_generated / makespan if makespan > 0 else 0.0,
-            cost=self._cost(scn, makespan), index=index)
+            cost=self._cost(scn, makespan), index=index, degraded=degraded)
 
-    def iter_results(self, scenarios: Sequence[Scenario]
+    @staticmethod
+    def _degraded(sim: DoolySim) -> bool:
+        return bool(getattr(sim.latency, "degraded", False))
+
+    def iter_results(self, scenarios: Sequence[Scenario], *,
+                     on_error: str = "report"
                      ) -> Iterator[ScenarioResult]:
         """Stream per-scenario results as fit groups complete.
 
@@ -300,10 +337,28 @@ class Sweep:
         whole grid.  Full-loop scenarios follow, one at a time.  Yield
         order is completion order; ``ScenarioResult.index`` maps back to
         the submitted grid.  ``self.last_summary`` carries the run
-        counters once the generator is exhausted."""
+        counters once the generator is exhausted.
+
+        ``on_error="report"`` (default) collects per-scenario evaluation
+        errors into ``self.last_failures`` (each a
+        :class:`ScenarioFailure`) and keeps going, so one poisoned
+        scenario — an unprofiled model, a backend that can't build —
+        costs that scenario, not the grid.  ``on_error="raise"``
+        restores fail-fast propagation."""
+        if on_error not in ("report", "raise"):
+            raise ValueError(f"on_error must be 'report' or 'raise', "
+                             f"got {on_error!r}")
         scenarios = list(scenarios)
         t0 = time.perf_counter()
         self.last_summary = None
+        self.last_failures = []
+
+        def fail(i: int, stage: str, exc: Exception):
+            if on_error == "raise":
+                raise exc
+            self.last_failures.append(ScenarioFailure(
+                index=i, scenario=scenarios[i], stage=stage,
+                error=f"{type(exc).__name__}: {exc}"))
 
         # classify: exact-replay (latency-independent) vs full-loop.
         # used_* track THIS run's distinct traces/sims — the memos persist
@@ -311,9 +366,17 @@ class Sweep:
         exact_groups: Dict[Tuple, List[int]] = {}
         loop_idx: List[int] = []
         used_traces: set = set()
+        n_degraded = 0
         for i, scn in enumerate(scenarios):
-            if is_latency_independent(self.requests(scn.workload)):
-                trace = self.plan_trace(scn)
+            try:
+                independent = is_latency_independent(
+                    self.requests(scn.workload))
+                if independent:
+                    trace = self.plan_trace(scn)
+            except Exception as e:
+                fail(i, "workload", e)
+                continue
+            if independent:
                 used_traces.add(id(trace))
                 key = (self._trace_content_key(trace), scn.sim_key)
                 exact_groups.setdefault(key, []).append(i)
@@ -322,36 +385,65 @@ class Sweep:
 
         # one batched prediction pass per fit group (= per simulator);
         # dict insertion order keeps the flattened trace order identical
-        # to the pre-streaming single predict_scenarios pass
+        # to the pre-streaming single predict_scenarios pass.  A sim that
+        # fails to build fails every scenario in its exact group; a
+        # failed batched prediction fails every scenario under that sim.
         by_sim: Dict[int, Tuple[DoolySim,
                                 List[Tuple[PlanTrace, List[int]]]]] = {}
         for key, idxs in exact_groups.items():
-            sim = self.sim(scenarios[idxs[0]])
+            try:
+                sim = self.sim(scenarios[idxs[0]])
+            except Exception as e:
+                for i in idxs:
+                    fail(i, "build", e)
+                continue
             trace = self.plan_trace(scenarios[idxs[0]])
             by_sim.setdefault(id(sim), (sim, []))[1].append((trace, idxs))
         for sim, group in by_sim.values():
-            lats = sim.predict_traces([trace.plans for trace, _ in group])
+            try:
+                lats = sim.predict_traces([trace.plans
+                                           for trace, _ in group])
+            except Exception as e:
+                for _, idxs in group:
+                    for i in idxs:
+                        fail(i, "predict", e)
+                continue
+            degraded = self._degraded(sim)
             for (trace, idxs), lat in zip(group, lats):
                 clocks = trace.times(lat)
                 met = trace.metrics(lat, times=clocks)
                 met["_n_generated"] = int(trace.generated.sum())
                 makespan = trace.makespan(lat, times=clocks)
+                n_degraded += len(idxs) if degraded else 0
                 for j, i in enumerate(idxs):
                     yield self._result(
                         scenarios[i], "replay" if j == 0 else "replay-dedup",
-                        makespan, trace.n_iterations, met, index=i)
+                        makespan, trace.n_iterations, met, index=i,
+                        degraded=degraded)
 
         # full-loop scenarios: per-scenario interleaved run (predictions
         # still batched per iteration and memoized per fit group)
         for i in loop_idx:
             scn = scenarios[i]
-            sim = self.sim(scn)
-            res = sim.run(clone_sorted(self.requests(scn.workload)),
-                          via_replay=False)
-            met = request_metrics(res["requests"])
-            met["_n_generated"] = sum(r.generated for r in res["requests"])
+            try:
+                sim = self.sim(scn)
+            except Exception as e:
+                fail(i, "build", e)
+                continue
+            try:
+                res = sim.run(clone_sorted(self.requests(scn.workload)),
+                              via_replay=False)
+                met = request_metrics(res["requests"])
+                met["_n_generated"] = sum(r.generated
+                                          for r in res["requests"])
+            except Exception as e:
+                fail(i, "loop", e)
+                continue
+            degraded = self._degraded(sim)
+            n_degraded += 1 if degraded else 0
             yield self._result(scn, "loop", res["makespan"],
-                               len(res["iterations"]), met, index=i)
+                               len(res["iterations"]), met, index=i,
+                               degraded=degraded)
 
         n_dedup = sum(len(idxs) - 1 for idxs in exact_groups.values())
         self.last_summary = {
@@ -362,16 +454,22 @@ class Sweep:
             "plan_replays": len(used_traces),
             "sims": len({s.sim_key for s in scenarios}),
             "fit_groups": len({s.fit_key for s in scenarios}),
+            "failed": len(self.last_failures),
+            "degraded": n_degraded,
             "elapsed_s": time.perf_counter() - t0,
         }
 
-    def run(self, scenarios: Sequence[Scenario]) -> SweepResult:
+    def run(self, scenarios: Sequence[Scenario], *,
+            on_error: str = "report") -> SweepResult:
+        """Evaluate the grid; failed scenarios (``on_error="report"``)
+        are dropped from ``results`` and itemized in ``.failures``."""
         scenarios = list(scenarios)
-        results: List[Optional[ScenarioResult]] = [None] * len(scenarios)
-        for r in self.iter_results(scenarios):
-            results[r.index] = r
-        return SweepResult(results=list(results),
-                           summary=dict(self.last_summary))
+        slots: List[Optional[ScenarioResult]] = [None] * len(scenarios)
+        for r in self.iter_results(scenarios, on_error=on_error):
+            slots[r.index] = r
+        return SweepResult(results=[r for r in slots if r is not None],
+                           summary=dict(self.last_summary),
+                           failures=list(self.last_failures))
 
 
 #: metrics the calibration diff reports (ScenarioResult fields)

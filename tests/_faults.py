@@ -1,0 +1,126 @@
+"""Deterministic fault injection for plan-execution tests.
+
+Two pieces live here:
+
+1. **The measure shim** (``shim``): plugged in via the
+   ``REPRO_MEASURE_SHIM`` env hook (see ``repro.core.plan``) as
+   ``_faults:shim``.  It delegates to the profiler's real
+   ``measure_payload_rows`` except for *targeted* tasks, which fault in
+   a configured way.  All configuration rides on environment variables,
+   which spawned supervisor workers inherit — so the same shim misfires
+   identically in-process and inside a worker process:
+
+   =====================  =============================================
+   ``REPRO_FAULT_MODE``   ``crash`` (``os._exit``), ``hang`` (sleep),
+                          ``garbage`` (NaN latency rows), ``error``
+                          (raise RuntimeError)
+   ``REPRO_FAULT_SIGS``   comma-separated sig-hash prefixes to target;
+                          empty/unset targets every task
+   ``REPRO_FAULT_STATE``  directory for one-shot markers: when set, each
+                          (mode, sig) faults exactly once — the marker
+                          file survives worker respawns, so the retry
+                          heals; when unset the fault fires every
+                          attempt (→ quarantine)
+   ``REPRO_FAULT_HANG_S`` hang duration in seconds (default 60)
+   =====================  =============================================
+
+2. **The kill harness** (``python tests/_faults.py kill-run ...``): a
+   subprocess entry point that executes a plan against an on-disk DB and
+   checkpoint, then SIGKILLs itself after N task commits — simulating a
+   machine crash mid-corpus.  The parent test re-executes the same plan
+   and asserts the journal saved exactly the committed work.
+"""
+from __future__ import annotations
+
+import os
+import sys
+import time
+
+
+def _payload_sig(payload) -> str:
+    # module payloads are (kind, module_kind, window, sig_hash);
+    # op payloads are (kind, sig_hash, entry)
+    return payload[3] if payload[0] == "module" else payload[1]
+
+
+def _targeted(sig: str) -> bool:
+    spec = os.environ.get("REPRO_FAULT_SIGS", "")
+    prefixes = [p for p in spec.split(",") if p]
+    return not prefixes or any(sig.startswith(p) for p in prefixes)
+
+
+def _fires_once(mode: str, sig: str) -> bool:
+    """True when the fault should fire now.  With a state dir, atomically
+    claim a per-(mode, sig) marker file: first claimer faults, everyone
+    after heals.  Without one, always fire."""
+    state = os.environ.get("REPRO_FAULT_STATE")
+    if not state:
+        return True
+    marker = os.path.join(state, f"{mode}-{sig}")
+    try:
+        fd = os.open(marker, os.O_CREAT | os.O_EXCL | os.O_WRONLY)
+    except FileExistsError:
+        return False
+    os.close(fd)
+    return True
+
+
+def shim(prof, payload, cfg, backend):
+    """``REPRO_MEASURE_SHIM`` entry point; signature per
+    ``repro.core.plan.MEASURE_SHIM_ENV``."""
+    sig = _payload_sig(payload)
+    mode = os.environ.get("REPRO_FAULT_MODE", "")
+    if mode and _targeted(sig) and _fires_once(mode, sig):
+        if mode == "crash":
+            os._exit(17)
+        elif mode == "hang":
+            time.sleep(float(os.environ.get("REPRO_FAULT_HANG_S", "60")))
+        elif mode == "garbage":
+            return [(sig, prof.hardware, "prefill", 8, 1, 0, prof.oracle,
+                     float("nan"))]
+        elif mode == "error":
+            raise RuntimeError(f"injected failure for {sig[:12]}")
+        else:
+            raise ValueError(f"unknown REPRO_FAULT_MODE {mode!r}")
+    return prof.measure_payload_rows(payload, cfg, backend)
+
+
+# -- subprocess kill harness ---------------------------------------------
+
+def _kill_run(argv) -> int:
+    """Execute a single-model plan, SIGKILL self after N commits."""
+    import argparse
+    import signal
+
+    from repro.configs import get_smoke_config
+    from repro.core.database import LatencyDB
+    from repro.core.plan import build_plan, execute_plan
+    from repro.core.profiler import QUICK_SWEEP
+
+    p = argparse.ArgumentParser()
+    p.add_argument("--db", required=True)
+    p.add_argument("--checkpoint", required=True)
+    p.add_argument("--model", default="yi-9b")
+    p.add_argument("--kill-after", type=int, required=True)
+    p.add_argument("--workers", type=int, default=2)
+    args = p.parse_args(argv)
+
+    def progress(task, i, n):
+        # rows + journal entry for task i are already durable; dying here
+        # loses only uncommitted work
+        if i >= args.kill_after:
+            os.kill(os.getpid(), signal.SIGKILL)
+
+    with LatencyDB(args.db) as db:
+        plan = build_plan(db, [get_smoke_config(args.model)],
+                          backends=("xla",), hardware="tpu-v5e",
+                          oracle="tpu_analytical", sweep=QUICK_SWEEP)
+        execute_plan(db, plan, workers=args.workers,
+                     checkpoint=args.checkpoint, progress=progress)
+    return 0    # only reached when kill_after > number of tasks
+
+
+if __name__ == "__main__":
+    if len(sys.argv) > 1 and sys.argv[1] == "kill-run":
+        sys.exit(_kill_run(sys.argv[2:]))
+    sys.exit(f"usage: {sys.argv[0]} kill-run ...")

@@ -1,4 +1,7 @@
+import importlib.util
 import os
+import signal
+import threading
 
 # smoke tests and benches see the REAL device count (1 CPU); only
 # launch/dryrun.py forces 512 placeholder devices.
@@ -7,3 +10,55 @@ os.environ.setdefault("JAX_PLATFORMS", "cpu")
 import jax  # noqa: E402
 
 jax.config.update("jax_enable_x64", False)
+
+import pytest  # noqa: E402
+
+# Hang insurance: pytest-timeout enforces the `timeout` ini when
+# installed (CI does); environments without it get a SIGALRM fallback
+# below, so a wedged worker pipe or deadlocked pool can never hang the
+# suite silently in either place.
+_HAVE_TIMEOUT_PLUGIN = importlib.util.find_spec("pytest_timeout") is not None
+FALLBACK_TIMEOUT_S = 300.0
+
+
+def pytest_addoption(parser):
+    if not _HAVE_TIMEOUT_PLUGIN:
+        # claim the ini key pytest-timeout would own, so the pyproject
+        # `timeout` setting isn't an unknown-option warning without it
+        parser.addini("timeout", "per-test wall-clock limit in seconds "
+                      "(SIGALRM fallback; pytest-timeout when installed)",
+                      default=None)
+
+
+def pytest_configure(config):
+    if not _HAVE_TIMEOUT_PLUGIN:
+        config.addinivalue_line(
+            "markers",
+            "timeout(seconds): per-test wall-clock limit (enforced by the "
+            "SIGALRM fallback here, or by pytest-timeout when installed)")
+
+
+if not _HAVE_TIMEOUT_PLUGIN:
+    @pytest.fixture(autouse=True)
+    def _sigalrm_timeout(request):
+        if (not hasattr(signal, "SIGALRM")
+                or threading.current_thread()
+                is not threading.main_thread()):
+            yield
+            return
+        marker = request.node.get_closest_marker("timeout")
+        ini = request.config.getini("timeout")
+        limit = (float(marker.args[0]) if marker and marker.args
+                 else float(ini) if ini else FALLBACK_TIMEOUT_S)
+
+        def _expired(signum, frame):
+            pytest.fail(f"test exceeded the {limit:.0f}s fallback "
+                        "timeout", pytrace=False)
+
+        old = signal.signal(signal.SIGALRM, _expired)
+        signal.setitimer(signal.ITIMER_REAL, limit)
+        try:
+            yield
+        finally:
+            signal.setitimer(signal.ITIMER_REAL, 0)
+            signal.signal(signal.SIGALRM, old)

@@ -1,0 +1,352 @@
+"""Fault-tolerance gates: supervised plan execution under deterministic
+fault injection (``tests/_faults.py``).
+
+Every recovery path must preserve the repo's bit-identity contract: a
+run that crashed, hung, retried, or quarantined still lands exactly the
+rows a fault-free serial execute lands (minus quarantined signatures'
+measurements) — supervision changes *when* work happens, never *what*
+is written.
+"""
+import gc
+import json
+import os
+import signal
+import subprocess
+import sys
+import warnings
+from pathlib import Path
+
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.core.database import LatencyDB
+from repro.core.journal import (JournalError, PlanJournal,
+                                read_journal_state)
+from repro.core.plan import build_plan, execute_plan, read_journal
+from repro.core.profiler import QUICK_SWEEP
+from repro.core.runner import trace_model
+
+ROOT = Path(__file__).resolve().parents[1]
+MODEL = "yi-9b"
+HW = "tpu-v5e"
+ORACLE = "tpu_analytical"
+SHIM = "_faults:shim"
+FAULT_ENV = ("REPRO_MEASURE_SHIM", "REPRO_FAULT_MODE", "REPRO_FAULT_SIGS",
+             "REPRO_FAULT_STATE", "REPRO_FAULT_HANG_S")
+
+MEAS_Q = ("SELECT * FROM measurements ORDER BY sig_hash, hardware, phase, "
+          "num_toks, num_reqs, ctx_len, oracle")
+SIGS_Q = "SELECT * FROM signatures ORDER BY hash"
+OPS_Q = ("SELECT * FROM model_operations ORDER BY config_id, sig_hash, "
+         "module")
+
+
+def _tables(db: LatencyDB):
+    return {q: db.conn.execute(q).fetchall()
+            for q in (MEAS_Q, SIGS_Q, OPS_Q)}
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return get_smoke_config(MODEL)
+
+
+@pytest.fixture(scope="module")
+def traces(cfg):
+    return {cfg.name: trace_model(cfg)}
+
+
+def _plan(db, cfg, traces):
+    return build_plan(db, [cfg], backends=("xla",), hardware=HW,
+                      oracle=ORACLE, sweep=QUICK_SWEEP, traces=traces)
+
+
+@pytest.fixture(scope="module")
+def reference(cfg, traces):
+    """(tables, n_tasks) from a fault-free serial execute — the
+    bit-identity reference every recovery test compares against."""
+    saved = {k: os.environ.pop(k) for k in FAULT_ENV if k in os.environ}
+    try:
+        with LatencyDB() as db:
+            plan = _plan(db, cfg, traces)
+            execute_plan(db, plan)
+            return _tables(db), len(plan.todo)
+    finally:
+        os.environ.update(saved)
+
+
+# -- crash-safe journal --------------------------------------------------
+
+def test_torn_tail_warns_drops_and_remeasures(cfg, traces, tmp_path,
+                                              reference):
+    ref_tables, n_todo = reference
+    ckpt = str(tmp_path / "journal")
+
+    class Boom(RuntimeError):
+        pass
+
+    def boom(task, i, n):
+        if i >= 2:
+            raise Boom
+
+    with LatencyDB() as db:
+        plan = _plan(db, cfg, traces)
+        with pytest.raises(Boom):
+            execute_plan(db, plan, checkpoint=ckpt, progress=boom)
+        assert len(read_journal(ckpt, plan)) == 2
+        # tear the tail mid-record, as a crash mid-write would
+        with open(ckpt, "rb+") as f:
+            f.seek(-5, os.SEEK_END)
+            f.truncate()
+        with pytest.warns(RuntimeWarning, match="torn final record"):
+            done = read_journal(ckpt, plan)
+        assert len(done) == 1                   # torn record dropped...
+        with pytest.warns(RuntimeWarning, match="torn final record"):
+            rep = execute_plan(db, plan, checkpoint=ckpt)
+        assert rep.skipped_journal == 1
+        assert rep.measured == n_todo - 1       # ...and re-measured
+        assert _tables(db) == ref_tables
+
+
+def test_corrupt_mid_file_is_refused(tmp_path):
+    ckpt = str(tmp_path / "journal")
+    with PlanJournal(ckpt, "feedc0ffee123456") as j:
+        j.record_done("task-a")
+        j.record_done("task-b")
+    lines = Path(ckpt).read_text().splitlines()
+    lines[1] = lines[1][:-4] + "zzzz"           # damage a NON-final record
+    Path(ckpt).write_text("\n".join(lines) + "\n")
+    with pytest.raises(JournalError, match="corrupt at line 2"):
+        read_journal_state(ckpt, "feedc0ffee123456")
+
+
+def test_quarantine_record_round_trips(tmp_path):
+    ckpt = str(tmp_path / "journal")
+    with PlanJournal(ckpt, "feedc0ffee123456") as j:
+        j.record_done("task-a")
+        j.record_quarantine("task-b", "oracle kept\nreturning NaN")
+    state = read_journal_state(ckpt, "feedc0ffee123456")
+    assert state.done == {"task-a"}
+    # multi-line reasons are flattened so they can't forge records
+    assert state.quarantined == {"task-b": "oracle kept returning NaN"}
+    assert state.dropped_torn == 0
+
+
+def test_killed_run_resumes_with_zero_lost_tasks(cfg, traces, tmp_path,
+                                                 reference):
+    """SIGKILL mid-corpus (the kill-run harness, workers=2): every
+    committed task is journaled, resume re-measures only the rest, and
+    the final tables are indistinguishable from a never-killed run."""
+    ref_tables, n_todo = reference
+    dbp = str(tmp_path / "lat.sqlite")
+    ckpt = str(tmp_path / "journal")
+    kill_after = 3
+    env = {k: v for k, v in os.environ.items() if k not in FAULT_ENV}
+    env["PYTHONPATH"] = str(ROOT / "src")
+    proc = subprocess.run(
+        [sys.executable, str(ROOT / "tests" / "_faults.py"), "kill-run",
+         "--db", dbp, "--checkpoint", ckpt, "--model", MODEL,
+         "--kill-after", str(kill_after), "--workers", "2"],
+        env=env, capture_output=True, text=True, timeout=570)
+    assert proc.returncode == -signal.SIGKILL, proc.stderr
+
+    with LatencyDB(dbp) as db:
+        # the rebuilt plan (the CLI resume path) sees the committed rows
+        # as satisfied — dedup against the DB, not the journal — so the
+        # killed run lost nothing and nothing re-measures
+        plan = _plan(db, cfg, traces)
+        state = read_journal_state(ckpt, plan.plan_id)
+        assert len(state.done) == kill_after    # exactly the commits
+        rep = execute_plan(db, plan, checkpoint=ckpt)
+        assert rep.satisfied == kill_after      # never re-measured
+        assert rep.measured == n_todo - kill_after
+        assert _tables(db) == ref_tables
+
+
+# -- supervised retries --------------------------------------------------
+
+def test_worker_crash_is_retried_and_heals(cfg, traces, tmp_path,
+                                           monkeypatch, reference):
+    ref_tables, n_todo = reference
+    state_dir = tmp_path / "state"
+    state_dir.mkdir()
+    with LatencyDB() as db:
+        plan = _plan(db, cfg, traces)
+        monkeypatch.setenv("REPRO_MEASURE_SHIM", SHIM)
+        monkeypatch.setenv("REPRO_FAULT_MODE", "crash")
+        monkeypatch.setenv("REPRO_FAULT_SIGS", plan.todo[3].sig_hash)
+        monkeypatch.setenv("REPRO_FAULT_STATE", str(state_dir))
+        rep = execute_plan(db, plan, workers=2)
+        assert rep.retried >= 1                 # the crash consumed one
+        assert rep.quarantined == 0             # ...but the retry healed
+        assert rep.measured == n_todo
+        assert _tables(db) == ref_tables
+
+
+def test_hung_task_trips_timeout_and_retries(cfg, traces, tmp_path,
+                                             monkeypatch, reference):
+    ref_tables, n_todo = reference
+    state_dir = tmp_path / "state"
+    state_dir.mkdir()
+    with LatencyDB() as db:
+        plan = _plan(db, cfg, traces)
+        monkeypatch.setenv("REPRO_MEASURE_SHIM", SHIM)
+        monkeypatch.setenv("REPRO_FAULT_MODE", "hang")
+        monkeypatch.setenv("REPRO_FAULT_SIGS", plan.todo[0].sig_hash)
+        monkeypatch.setenv("REPRO_FAULT_STATE", str(state_dir))
+        monkeypatch.setenv("REPRO_FAULT_HANG_S", "120")
+        rep = execute_plan(db, plan, workers=1, task_timeout=15.0)
+        assert rep.timed_out >= 1
+        assert rep.retried >= 1
+        assert rep.quarantined == 0
+        assert rep.measured == n_todo
+        assert _tables(db) == ref_tables
+
+
+def test_garbage_quarantined_healthy_rows_bit_identical(cfg, traces,
+                                                        tmp_path,
+                                                        monkeypatch,
+                                                        reference):
+    """A persistently-garbage measurement (NaN rows every attempt) is
+    rejected by validation, consumes its retries, quarantines — and the
+    remaining tasks still land bit-identical to the fault-free run.  The
+    quarantine persists in the journal (resume skips it) and leaves the
+    signature unmeasured, which a dooly->roofline fallback chain detects
+    at construction and degrades on."""
+    ref_tables, n_todo = reference
+    ckpt = str(tmp_path / "journal")
+    with LatencyDB() as db:
+        plan = _plan(db, cfg, traces)
+        target = plan.todo[0]
+        monkeypatch.setenv("REPRO_MEASURE_SHIM", SHIM)
+        monkeypatch.setenv("REPRO_FAULT_MODE", "garbage")
+        monkeypatch.setenv("REPRO_FAULT_SIGS", target.sig_hash)
+        rep = execute_plan(db, plan, checkpoint=ckpt, max_retries=1,
+                           retry_backoff_s=0.01)
+        assert rep.quarantined == 1 and rep.retried == 1
+        (qid, reason), = rep.quarantine
+        assert qid == target.task_id
+        assert "invalid" in reason
+        assert rep.measured == n_todo - 1
+        got = _tables(db)
+        assert got[MEAS_Q] == [r for r in ref_tables[MEAS_Q]
+                               if r[0] != target.sig_hash]
+        assert got[SIGS_Q] == ref_tables[SIGS_Q]    # sig lands regardless
+        assert got[OPS_Q] == ref_tables[OPS_Q]
+
+        # resume skips the poisoned task instead of re-poisoning the run
+        for k in ("REPRO_MEASURE_SHIM", "REPRO_FAULT_MODE",
+                  "REPRO_FAULT_SIGS"):
+            monkeypatch.delenv(k)
+        rep2 = execute_plan(db, plan, checkpoint=ckpt)
+        assert rep2.skipped_quarantined == 1
+        assert rep2.measured == 0 and rep2.quarantined == 0
+
+        # the unmeasured signature degrades a fallback chain to roofline
+        from repro.api import ProfileStore
+        from repro.sweep.grid import SchedSpec
+        store = ProfileStore.wrap(db, hardware=HW, oracle=ORACLE)
+        be = store.backend("dooly->roofline", cfg,
+                           sched_config=SchedSpec().to_config(),
+                           max_seq=128)
+        assert be.degraded and be.active_name == "roofline"
+        assert target.sig_hash[:12] in be.degraded_reason
+
+
+def test_fail_fast_raises_instead_of_quarantining(cfg, traces,
+                                                  monkeypatch):
+    from repro.core.plan import PlanExecutionError
+    with LatencyDB() as db:
+        plan = _plan(db, cfg, traces)
+        monkeypatch.setenv("REPRO_MEASURE_SHIM", SHIM)
+        monkeypatch.setenv("REPRO_FAULT_MODE", "error")
+        monkeypatch.setenv("REPRO_FAULT_SIGS", plan.todo[0].sig_hash)
+        with pytest.raises(PlanExecutionError,
+                           match="failed after retries"):
+            execute_plan(db, plan, max_retries=0, fail_fast=True)
+
+
+# -- hygiene -------------------------------------------------------------
+
+def test_execute_plan_closes_journal_handles(cfg, traces, tmp_path,
+                                             reference):
+    _, n_todo = reference
+    ckpt = str(tmp_path / "journal")
+    with LatencyDB() as db:
+        plan = _plan(db, cfg, traces)
+        with warnings.catch_warnings():
+            warnings.simplefilter("error", ResourceWarning)
+            execute_plan(db, plan, checkpoint=ckpt)
+            # second pass exercises the journal freshness probe + resume
+            rep = execute_plan(db, plan, checkpoint=ckpt)
+            gc.collect()                # unclosed handles would warn here
+        assert rep.skipped_journal == n_todo
+
+
+def test_audit_flags_poisoned_rows(tmp_path, capsys):
+    from repro.profile.__main__ import main
+    dbp = str(tmp_path / "bad.sqlite")
+    with LatencyDB(dbp) as db:
+        db.add_measurement("sig-ok", HW, "prefill", 8, 1, 0, ORACLE, 12.5)
+        db.add_measurement("sig-neg", HW, "prefill", 8, 1, 0, ORACLE, -1.0)
+        db.add_measurement("sig-inf", HW, "prefill", 8, 1, 0, ORACLE,
+                           float("inf"))
+        bad = db.audit_measurements()
+        assert {r[0] for r in bad} == {"sig-inf", "sig-neg"}
+        assert db.audit_measurements("other-hw") == []
+    assert main(["audit", "--db", dbp, "--json", "-"]) == 1
+    payload = json.loads(capsys.readouterr().out)
+    assert payload["poisoned_rows"] == 2
+
+    clean = str(tmp_path / "clean.sqlite")
+    with LatencyDB(clean) as db:
+        db.add_measurement("sig-ok", HW, "prefill", 8, 1, 0, ORACLE, 12.5)
+    assert main(["audit", "--db", clean]) == 0
+
+
+def test_validation_policy_remeasures_then_rejects():
+    from repro.core.profiler import MeasurementError, ValidationPolicy
+    pol = ValidationPolicy()
+    vals = iter([float("nan"), 2.5])
+    assert pol.check(lambda: next(vals), "op x") == 2.5     # healed once
+    with pytest.raises(MeasurementError, match="invalid latency"):
+        pol.check(lambda: float("nan"), "op y")
+    # high-variance pair flags one re-measure; the final sample lands
+    seq = iter([1.0, 5.0, 1.01])
+    flaky = ValidationPolicy(max_rel_spread=0.5)
+    assert flaky.check(lambda: next(seq), "op z") == 1.01
+    # tight pair passes straight through with the first sample
+    tight = iter([1.0, 1.01])
+    assert flaky.check(lambda: next(tight), "op w") == 1.0
+
+
+# -- degraded-mode sweep -------------------------------------------------
+
+def test_sweep_32_scenarios_one_failure_reports(cfg, traces):
+    """The acceptance grid: 32 scenarios, one referencing an unprofiled
+    model — 31 results plus a structured failure report, not an abort."""
+    from repro.api import ProfileStore
+    from repro.sweep.grid import Scenario, SchedSpec, WorkloadSpec
+    with ProfileStore(hardware=HW, oracle=ORACLE,
+                      sweep=QUICK_SWEEP) as store:
+        store.execute(store.plan(cfg, backends=("xla",), traces=traces))
+        wl = WorkloadSpec()
+        scns = [Scenario(model=MODEL, sched=SchedSpec(max_num_seqs=s),
+                         workload=wl, hardware=HW)
+                for s in range(2, 33)]
+        scns.append(Scenario(model="command-r7b", sched=SchedSpec(),
+                             workload=wl, hardware=HW))
+        assert len(scns) == 32
+        sweep = store.sweep()
+        out = sweep.run(scns)
+        assert len(out.results) == 31
+        assert len(out.failures) == 1
+        fail = out.failures[0]
+        assert fail.index == 31 and fail.stage == "build"
+        assert fail.scenario.model == "command-r7b"
+        assert out.summary["failed"] == 1
+        assert "command-r7b" in out.failure_table()
+        json.dumps(out.to_json())                   # report is valid JSON
+        # raise mode restores the old fail-fast contract
+        with pytest.raises(RuntimeError, match="no call-graph rows"):
+            sweep.run(scns, on_error="raise")
