@@ -24,11 +24,20 @@ purpose):
   makespan equivalence.
 * ``sweep`` — a 32-scenario configuration grid (4 models x 2 scheduler
   configs x 4 burst workloads) evaluated by a per-scenario
-  ``DoolySim.run(via_replay=False)`` loop (fresh sim per scenario — the
+  ``DoolySim.run(engine="loop")`` loop (fresh sim per scenario — the
   pre-sweep way to run a config search) vs the ``repro.sweep`` engine
   (shared scheduler replays, content-dedup, one batched prediction pass
   per fit group).  Gates: >=3x and <=1e-9 makespan equivalence for the
   exact-replay groups (all 32 here are exact).
+* ``staggered`` — a Poisson rate sweep where exact replay does not
+  apply: 8 models x 4 offered-load levels over one request mix (common
+  random numbers across rates, the standard variance-reduction design
+  for a capacity sweep).  The per-scenario interleaved scalar loop (one
+  prediction per iteration — the pre-events full-loop tax) vs the
+  sweep's event-driven tier (chunked speculation with one batched
+  prediction per chunk, StaggeredTrace sharing across the models on
+  each workload).  Gates: >=3x and <=1e-9 makespan equivalence across
+  all 32 scenarios.
 * ``backend_dispatch`` — the ``repro.api`` facade seam: predicting a
   recorded trace through ``DoolySim.predict_trace`` (which routes through
   the ``LatencyBackend`` protocol) vs calling the backend engine
@@ -93,6 +102,11 @@ TRACE_REPEATS = 5
 
 SWEEP_MODELS = ("llama3-8b", "command-r7b", "yi-9b", "starcoder2-15b")
 SWEEP_REPEATS = 3
+# staggered section: the wider the model set sharing one workload's
+# StaggeredTrace, the more the leader's schedule amortizes
+STAG_MODELS = ("llama3-8b", "command-r7b", "yi-9b", "starcoder2-15b",
+               "minicpm3-4b", "olmoe-1b-7b", "granite-20b",
+               "falcon-mamba-7b")
 
 DISPATCH_REPEATS = 40    # interleaved (direct, facade) timing pairs
 DISPATCH_TILE = 4        # tile the recorded trace so the timed work is real
@@ -196,13 +210,16 @@ def bench_sim() -> Tuple[Dict, "DoolySim", Any]:
     base.predict_iteration = scalar_iteration
     # warm the regression fits (memoized pre-PR as well) out of the timing
     base.predict_call_scalar(phase="prefill", toks=8, reqs=1, ctx=128)
+    # both sides pin engine="loop": this section compares scalar vs
+    # memoized *per-iteration* prediction, not the scheduling tiers
+    # (bench_staggered covers events-vs-loop)
     t0 = time.perf_counter()
-    res_base = base.run(reqs())
+    res_base = base.run(reqs(), engine="loop")
     base_s = time.perf_counter() - t0
 
     fast = mk()
     t0 = time.perf_counter()
-    res_fast = fast.run(reqs())
+    res_fast = fast.run(reqs(), engine="loop")
     fast_s = time.perf_counter() - t0
 
     max_diff = max(
@@ -305,7 +322,7 @@ def bench_sweep() -> Dict:
                            sched_config=scn.sched.to_config(),
                            max_seq=scn.max_seq)
             res = sim.run(clone_sorted(requests[scn.workload]),
-                          via_replay=False)
+                          engine="loop")
             out.append(res["makespan"])
         return out
 
@@ -324,6 +341,64 @@ def bench_sweep() -> Dict:
             "plan_replays": summary["plan_replays"],
             "deduped": summary["deduped"],
             "exact_replay": summary["exact_replay"],
+            "baseline_s": base_s, "optimized_s": opt_s,
+            "speedup": base_s / opt_s,
+            "max_makespan_diff_s": max_diff}
+
+
+def bench_staggered() -> Dict:
+    """Staggered-arrival capacity sweep over a 32-scenario Poisson grid:
+    8 models x 4 offered-load levels over one request mix (common random
+    numbers across rates — the standard variance-reduction design for a
+    rate sweep).  The pre-events path (fresh per-scenario DoolySim,
+    interleaved scalar loop — one prediction per iteration, the
+    full-loop tax) vs the sweep engine's event-driven tier (chunked
+    speculation priced in batched ``predict_trace`` calls,
+    StaggeredTrace prefix-sharing across the models that share each
+    workload structure)."""
+    from repro.sim.replay import clone_sorted
+    from repro.sweep import SchedSpec, Sweep, WorkloadSpec, expand_grid
+
+    db = LatencyDB()
+    prof = DoolyProf(db, oracle="tpu_analytical", hardware="tpu-v5e",
+                     sweep=SIM_SWEEP)
+    cfgs = {m: get_smoke_config(m) for m in STAG_MODELS}
+    for m in STAG_MODELS:
+        prof.profile_model(cfgs[m], backend="xla")
+
+    scheds = [SchedSpec(4, 64, 32)]
+    workloads = [WorkloadSpec(kind="sharegpt", n=48, rate=r, seed=1,
+                              scale=0.05)
+                 for r in (6.0, 8.0, 10.0, 12.0)]
+    scenarios = expand_grid(STAG_MODELS, scheds, workloads)
+    requests = {w: w.build() for w in workloads}
+
+    def baseline():
+        out = []
+        for scn in scenarios:
+            sim = DoolySim(cfgs[scn.model], db, hardware=scn.hardware,
+                           backend=scn.backend,
+                           sched_config=scn.sched.to_config(),
+                           max_seq=scn.max_seq)
+            res = sim.run(clone_sorted(requests[scn.workload]),
+                          engine="loop")
+            out.append(res["makespan"])
+        return out
+
+    def optimized():
+        res = Sweep(db).run(scenarios)
+        return [r.makespan for r in res.results], res.summary
+
+    base_mks = baseline()                               # warm fits
+    opt_mks, summary = optimized()
+    base_s = min(_timed(baseline) for _ in range(SWEEP_REPEATS))
+    opt_s = min(_timed(optimized) for _ in range(SWEEP_REPEATS))
+    max_diff = max(abs(a - b) for a, b in zip(base_mks, opt_mks))
+    db.close()
+    return {"n_scenarios": len(scenarios),
+            "n_models": len(STAG_MODELS),
+            "events": summary["events"],
+            "events_shared": summary["events_shared"],
             "baseline_s": base_s, "optimized_s": opt_s,
             "speedup": base_s / opt_s,
             "max_makespan_diff_s": max_diff}
@@ -517,10 +592,12 @@ def main(out_path: str = "BENCH_perf.json") -> Dict:
     dispatch = bench_backend_dispatch(fast_sim, reqs)
     fast_sim.db.close()
     sweep = bench_sweep()
+    staggered = bench_staggered()
     plan = bench_plan_dedup()
     fault = bench_fault_overhead()
     res = {"dedup": dedup, "sim": sim, "warm_start": warm, "trace": trace,
-           "sweep": sweep, "backend_dispatch": dispatch,
+           "sweep": sweep, "staggered": staggered,
+           "backend_dispatch": dispatch,
            "plan_dedup": plan, "fault_overhead": fault}
 
     print(f"# dedup DB pipeline ({dedup['n_rows']} rows, "
@@ -560,6 +637,14 @@ def main(out_path: str = "BENCH_perf.json") -> Dict:
           f"({sweep['speedup']:.1f}x)")
     print(f"  max exact-replay makespan diff = "
           f"{sweep['max_makespan_diff_s']:.2e} s")
+    print(f"# staggered sweep ({staggered['n_scenarios']} Poisson "
+          f"scenarios, {staggered['n_models']} models, "
+          f"{staggered['events_shared']} trace-shared)")
+    print(f"  interleaved loop {staggered['baseline_s'] * 1e3:9.2f} ms -> "
+          f"events tier {staggered['optimized_s'] * 1e3:9.2f} ms  "
+          f"({staggered['speedup']:.1f}x)")
+    print(f"  max makespan diff = "
+          f"{staggered['max_makespan_diff_s']:.2e} s")
     print(f"# backend dispatch ({dispatch['n_iterations']} iterations "
           f"through {dispatch['backend']})")
     print(f"  engine direct {dispatch['baseline_s'] * 1e3:9.2f} ms -> "
@@ -595,6 +680,9 @@ def main(out_path: str = "BENCH_perf.json") -> Dict:
           and sweep["n_scenarios"] >= 32
           and sweep["speedup"] >= 3.0
           and sweep["max_makespan_diff_s"] <= 1e-9
+          and staggered["n_scenarios"] >= 32
+          and staggered["speedup"] >= 3.0
+          and staggered["max_makespan_diff_s"] <= 1e-9
           and dispatch["overhead_frac"] <= 0.05
           and dispatch["bitwise_equal"]
           and plan["n_models"] >= 4
@@ -606,7 +694,9 @@ def main(out_path: str = "BENCH_perf.json") -> Dict:
     res["pass"] = ok
     print("gates (>=5x dedup, >=5x sim, <1e-9 equivalence, >=5x warm "
           "start + bitwise, >=2x trace + <=1e-9 makespan, >=3x sweep over "
-          ">=32 scenarios + <=1e-9 exact-replay makespans, <=5% backend "
+          ">=32 scenarios + <=1e-9 exact-replay makespans, >=3x staggered "
+          "events sweep over >=32 Poisson scenarios + <=1e-9 makespans, "
+          "<=5% backend "
           "dispatch overhead + bitwise, >=30% plan task dedup over >=4 "
           "models + bit-identical rows + dry-run points == writes, <=10% "
           "supervised-executor overhead + bit-identical rows): "

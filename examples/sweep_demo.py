@@ -64,7 +64,7 @@ def main():
                           sched_config=scn.sched.to_config(),
                           max_seq=scn.max_seq, backend=scn.backend,
                           hardware=scn.hardware)
-    ref = sim.run(scn.workload.build(), via_replay=False)
+    ref = sim.run(scn.workload.build(), engine="loop")
     print(f"\nexact-replay check ({scn.label()}):")
     print(f"  sweep makespan  {out.results[0].makespan:.9f}")
     print(f"  scalar makespan {ref['makespan']:.9f}  "

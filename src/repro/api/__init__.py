@@ -17,7 +17,12 @@ One import gives the whole profile -> predict -> simulate/sweep pipeline:
 The latency source is a constructor argument: any registered
 :class:`LatencyBackend` (``"dooly"`` regression fits, ``"roofline"``
 analytic, ``"oracle"`` raw-measurement replay) drops into `DoolySim` and
-`Sweep` unchanged.
+`Sweep` unchanged.  Simulation is tiered (``engine=`` on
+``store.simulator`` / ``DoolySim.run`` / ``store.sweep``): exact replay
+for latency-independent workloads, the event-driven ``sim.events``
+engine for staggered arrivals, and the scalar interleaved loop as the
+explicit reference tier — ``latency_dependence`` / ``recommend_engine``
+expose the router.
 
 ``__all__`` below is a *contract*: `tests/test_api_surface.py` snapshots
 it together with the public signatures, so any change to this surface is a
@@ -49,6 +54,8 @@ __all__ = [
     "available_backends",
     # consumer layers (lazy re-exports)
     "DoolySim", "predict_scenarios",
+    "latency_dependence", "recommend_engine", "run_events",
+    "StaggeredTrace",
     "Sweep", "SweepResult", "ScenarioFailure", "Scenario", "SchedSpec",
     "WorkloadSpec", "expand_grid",
 ]
@@ -56,6 +63,10 @@ __all__ = [
 _LAZY = {
     "DoolySim": ("repro.sim.simulator", "DoolySim"),
     "predict_scenarios": ("repro.sim.simulator", "predict_scenarios"),
+    "latency_dependence": ("repro.sim.replay", "latency_dependence"),
+    "recommend_engine": ("repro.sim.events", "recommend_engine"),
+    "run_events": ("repro.sim.events", "run_events"),
+    "StaggeredTrace": ("repro.sim.events", "StaggeredTrace"),
     "Sweep": ("repro.sweep.runner", "Sweep"),
     "SweepResult": ("repro.sweep.runner", "SweepResult"),
     "ScenarioFailure": ("repro.sweep.runner", "ScenarioFailure"),

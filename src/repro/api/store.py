@@ -230,11 +230,17 @@ class ProfileStore:
     def simulator(self, cfg: ModelConfig, *, sched_config, max_seq: int,
                   backend: str = "xla", tp: int = 1,
                   hardware: Optional[str] = None,
-                  latency: str = "dooly", **kw):
-        """A DoolySim whose latency source is the named backend."""
+                  latency: str = "dooly", engine: str = "auto", **kw):
+        """A DoolySim whose latency source is the named backend.
+
+        ``engine`` is the default scheduling tier for ``run`` —
+        ``"auto"`` routes latency-independent workloads through exact
+        replay and staggered arrivals through the event-driven engine;
+        ``"replay"`` / ``"events"`` / ``"loop"`` pin a tier."""
         from repro.sim.simulator import DoolySim
         return DoolySim(
             cfg, sched_config=sched_config, max_seq=max_seq,
+            engine=engine,
             latency=self.backend(latency, cfg, sched_config=sched_config,
                                  max_seq=max_seq, backend=backend, tp=tp,
                                  hardware=hardware, **kw))

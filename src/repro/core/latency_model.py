@@ -110,8 +110,8 @@ class LatencyModel:
         shim keeps the old per-connection cache (``db._lm_cache``, cleared
         on close) working for existing callers."""
         warnings.warn(
-            "LatencyModel.shared is deprecated; use "
-            "repro.api.ProfileStore.model(hardware) instead",
+            "LatencyModel.shared is deprecated and will be removed in "
+            "0.4; use repro.api.ProfileStore.model(hardware) instead",
             DeprecationWarning, stacklevel=2)
         key = (hardware, use_saved_fits)
         lm = db._lm_cache.get(key)

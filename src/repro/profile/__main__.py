@@ -19,9 +19,10 @@ DB, so an interrupted corpus sweep picks up where it stopped.
 from __future__ import annotations
 
 import argparse
-import json
 import sys
 
+from repro._cli import (add_db_arg, add_hardware_arg, add_json_arg, emit,
+                        json_to_stdout)
 from repro.api import ProfileStore
 from repro.configs import get_config, get_smoke_config
 from repro.core.profiler import QUICK_SWEEP, SweepConfig
@@ -51,16 +52,14 @@ def build_parser() -> argparse.ArgumentParser:
                         help="comma-separated config registry names")
         sp.add_argument("--backends", default="xla")
         sp.add_argument("--tp", type=int, default=1)
-        sp.add_argument("--hardware", default="tpu-v5e")
+        add_hardware_arg(sp)
         sp.add_argument("--oracle", default="tpu_analytical")
-        sp.add_argument("--db", default=":memory:",
-                        help="latency DB path (dedup runs against it)")
+        add_db_arg(sp, help_suffix="dedup runs against it")
         sp.add_argument("--full", action="store_true",
                         help="full-size configs instead of smoke configs")
         sp.add_argument("--sweep", default="quick",
                         choices=("quick", "default"))
-        sp.add_argument("--json", default=None,
-                        help="write the report to this path ('-' = stdout)")
+        add_json_arg(sp)
         if name == "run":
             sp.add_argument("--workers", type=int, default=1)
             sp.add_argument("--checkpoint", default=None,
@@ -81,10 +80,9 @@ def build_parser() -> argparse.ArgumentParser:
                                  "it")
     audit = sub.add_parser(
         "audit", help="scan a latency DB for poisoned measurement rows")
-    audit.add_argument("--db", required=True)
-    audit.add_argument("--hardware", default=None)
-    audit.add_argument("--json", default=None,
-                       help="write the report to this path ('-' = stdout)")
+    add_db_arg(audit, required=True)
+    add_hardware_arg(audit, default=None)
+    add_json_arg(audit)
     return p
 
 
@@ -97,17 +95,6 @@ def _build(args) -> tuple:
                          oracle=args.oracle, sweep=_sweep(args.sweep))
     plan = store.plan(cfgs, backends=backends, tp=args.tp)
     return store, plan
-
-
-def _emit(args, payload: dict, table: str):
-    if args.json == "-":
-        print(json.dumps(payload, indent=2))
-    else:
-        print(table)
-        if args.json:
-            with open(args.json, "w") as f:
-                json.dump(payload, f, indent=2)
-            print(f"wrote {args.json}")
 
 
 def _audit(args) -> int:
@@ -124,7 +111,7 @@ def _audit(args) -> int:
                f"latency_us={r[7]!r}" for r in bad[:20]])
     else:
         table = f"no poisoned measurement rows in {args.db}"
-    _emit(args, payload, table)
+    emit(args, payload, table)
     return 1 if bad else 0
 
 
@@ -136,7 +123,7 @@ def main(argv=None) -> int:
     with store:
         cov = plan.coverage()
         if args.cmd == "plan":
-            _emit(args, {"plan_id": plan.plan_id, **cov.to_json()},
+            emit(args, {"plan_id": plan.plan_id, **cov.to_json()},
                   cov.table() + f"\nplan {plan.plan_id}: "
                   f"{cov.plan_tasks} tasks to measure")
             return 0
@@ -156,7 +143,7 @@ def main(argv=None) -> int:
 
         # --json '-' promises bare JSON on stdout for both subcommands:
         # keep the table and progress chatter off it
-        to_stdout = args.json == "-"
+        to_stdout = json_to_stdout(args)
         if not to_stdout:
             print(cov.table())
         rep = store.execute(plan, workers=args.workers,
@@ -178,7 +165,7 @@ def main(argv=None) -> int:
                         "journal")
             for task_id, reason in rep.quarantine:
                 summary += f"\n  {task_id}: {reason}"
-        _emit(args, {"plan_id": rep.plan_id, "measured": rep.measured,
+        emit(args, {"plan_id": rep.plan_id, "measured": rep.measured,
                      "skipped_journal": rep.skipped_journal,
                      "satisfied": rep.satisfied,
                      "rows_written": rep.rows_written,

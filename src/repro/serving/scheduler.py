@@ -115,21 +115,28 @@ class Scheduler:
 
     # ------------------------------------------------------------------
 
-    def complete_iteration(self, plan: IterationPlan, now: float):
+    def complete_iteration(self, plan: IterationPlan, now: float,
+                           record_times: bool = True):
         """Advance request states after the engine/sim executed ``plan`` and
-        clocked its end at ``now``."""
+        clocked its end at ``now``.  ``record_times=False`` skips the
+        per-token timestamp bookkeeping (progress counters and finish
+        state still advance) — the event-driven engine records token
+        events itself and rewrites every timestamp at the end, so the
+        placeholder appends would be pure waste on its hot path."""
         for chunk in plan.prefills:
             r = chunk.req
             r.prefilled += chunk.length
             if r.prefilled >= r.prompt_len:
                 # prefill completion emits the first token
                 r.generated += 1
-                r.first_token_t = now
-                r.token_times.append(now)
+                if record_times:
+                    r.first_token_t = now
+                    r.token_times.append(now)
                 self._maybe_finish(r, now)
         for r in plan.decodes:
             r.generated += 1
-            r.token_times.append(now)
+            if record_times:
+                r.token_times.append(now)
             self._maybe_finish(r, now)
 
     def _maybe_finish(self, r: Request, now: float):

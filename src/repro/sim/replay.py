@@ -21,8 +21,13 @@ the paper's redundancy thesis lifted from profiling to simulation.
 Workloads with staggered (Poisson) arrivals are latency-*dependent*: which
 iteration admits a request depends on how fast previous iterations ran, so
 a replayed trace is only exact for scenarios sharing iteration timing.
-``is_latency_independent`` is the classifier; callers (``DoolySim.run``,
-``repro.sweep``) fall back to the interleaved loop when it returns False.
+``latency_dependence`` is the classifier (``is_latency_independent`` is
+its boolean form); callers (``DoolySim.run``, ``repro.sweep``) route
+staggered workloads to the event-driven ``sim.events`` engine — chunked
+speculation between arrival events with batched prediction and, across
+scenarios, prefix-shared replay up to the first admission divergence.
+The scalar interleaved loop survives only as the explicit
+``engine="loop"`` reference tier.
 
 ``replay_schedule`` is pure with respect to its inputs: the caller's
 Request objects are never mutated (the scheduler drives private clones).
@@ -37,11 +42,31 @@ import numpy as np
 from repro.serving.scheduler import Request, Scheduler, SchedulerConfig
 
 
+def latency_dependence(requests: Sequence[Request]) -> str:
+    """Classify how a workload's scheduling interacts with the clock:
+
+    * ``"equal"`` — every request arrives at the same instant; the whole
+      queue is admitted before the first iteration;
+    * ``"immediate"`` — arrivals differ but all are ``<= 0``, so the
+      simulation clock (which starts at 0) admits everything at once —
+      latency-independent all the same;
+    * ``"staggered"`` — some admission waits on the predicted clock; the
+      plan sequence is latency-dependent (the ``"events"`` engine tier).
+    """
+    arrivals = {r.arrival for r in requests}
+    if len(arrivals) <= 1:
+        return "equal"
+    if max(arrivals) <= 0.0:
+        return "immediate"
+    return "staggered"
+
+
 def is_latency_independent(requests: Sequence[Request]) -> bool:
-    """True when scheduler replay cannot depend on iteration latency: every
-    request arrives at the same instant, so the whole queue is admitted
-    before the first iteration and no later admission waits on the clock."""
-    return len({r.arrival for r in requests}) <= 1
+    """True when scheduler replay cannot depend on iteration latency —
+    ``latency_dependence`` is anything but ``"staggered"``, i.e. every
+    request is already present when the clock starts and no admission
+    waits on a predicted iteration time."""
+    return latency_dependence(requests) != "staggered"
 
 
 def clone_sorted(requests: Sequence[Request]) -> List[Request]:
@@ -149,13 +174,14 @@ def replay_schedule(requests: Sequence[Request],
     """Pure scheduler replay: the iteration-plan sequence for a
     latency-independent workload, with per-request token events recorded
     as iteration indices.  Raises ``ValueError`` for latency-dependent
-    (staggered-arrival) workloads — those must go through the interleaved
-    ``DoolySim.run`` loop."""
+    (staggered-arrival) workloads — those go through the event-driven
+    ``sim.events`` engine (``DoolySim.run(engine="events")``)."""
     if not is_latency_independent(requests):
         raise ValueError(
             "replay_schedule requires a latency-independent workload "
-            "(all arrivals equal); staggered arrivals make batch "
-            "composition depend on iteration latency")
+            "(all arrivals equal, or all <= 0); staggered arrivals make "
+            "batch composition depend on iteration latency — use the "
+            "event-driven engine (DoolySim.run(engine='events'))")
     clones = clone_sorted(requests)
     start = max(clones[0].arrival, 0.0) if clones else 0.0
     sched = Scheduler(sched_config)

@@ -18,18 +18,27 @@ path) lives in the backend module; `DoolySim`'s ``predict_*`` methods are
 thin delegates kept for compatibility, bitwise-identical because they run
 the same code.
 
-Since the sweep refactor, ``run`` is two decoupled layers: for a
-latency-independent workload (equal arrivals) it delegates scheduler
-replay to the pure ``sim.replay.replay_schedule`` and prices the whole
-recorded trace in one ``predict_trace`` call; staggered-arrival workloads
-keep the interleaved scalar loop (admission depends on the predicted
-clock).  ``predict_traces`` extends the batching across *scenarios*, and
-the module-level ``predict_scenarios`` groups (sim, trace) pairs by
-latency backend so an N-scenario sweep runs one batched prediction per
-fitted (cfg, hardware, backend, tp) group.
+``run`` is tiered by how the workload's scheduling interacts with the
+clock (``engine=``, default ``"auto"``):
+
+* ``"replay"`` — latency-independent workloads (equal arrivals): pure
+  ``sim.replay.replay_schedule`` plus one batched ``predict_trace``;
+* ``"events"`` — staggered arrivals: the event-driven ``sim.events``
+  engine, which speculates iteration chunks between arrival events and
+  prices each chunk in one batched call;
+* ``"loop"`` — the interleaved scalar reference loop (one prediction per
+  iteration), kept for equivalence gates and benchmarks; never
+  auto-selected.
+
+``via_replay=`` is a deprecated alias (``True`` -> ``"replay"``,
+``False`` -> ``"loop"``).  ``predict_traces`` extends the batching across
+*scenarios*, and the module-level ``predict_scenarios`` groups
+(sim, trace) pairs by latency backend so an N-scenario sweep runs one
+batched prediction per fitted (cfg, hardware, backend, tp) group.
 """
 from __future__ import annotations
 
+import warnings
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
@@ -40,7 +49,11 @@ from repro.core.database import LatencyDB
 from repro.core.latency_model import LatencyModel
 from repro.serving.scheduler import (IterationPlan, Request, Scheduler,
                                      SchedulerConfig)
+from repro.sim.events import run_events
 from repro.sim.replay import is_latency_independent, replay_schedule
+
+#: ``DoolySim.run`` scheduling tiers (``"auto"`` resolves per workload)
+ENGINES = ("auto", "replay", "events", "loop")
 
 
 class DoolySim:
@@ -52,7 +65,12 @@ class DoolySim:
                  max_seq: Optional[int] = None,
                  overhead_s: float = 0.0, chunk_overhead_s: float = 0.0,
                  tp: int = 1, lm: Optional[LatencyModel] = None,
-                 latency: Optional[LatencyBackend] = None):
+                 latency: Optional[LatencyBackend] = None,
+                 engine: str = "auto"):
+        if engine not in ENGINES:
+            raise ValueError(f"unknown engine {engine!r}; "
+                             f"expected one of {ENGINES}")
+        self.engine = engine
         if latency is None:
             if None in (cfg, db, hardware, backend, sched_config, max_seq):
                 raise TypeError(
@@ -175,21 +193,58 @@ class DoolySim:
     # ------------------------------------------------------------------
 
     def run(self, requests: List[Request], *, record_plans: bool = False,
+            engine: Optional[str] = None,
             via_replay: Optional[bool] = None) -> Dict[str, Any]:
         """Simulate serving ``requests``.
 
-        Latency-independent workloads (equal arrivals) route through the
-        decoupled path by default: one pure ``replay_schedule`` pass, one
-        batched ``predict_trace``, times written back onto ``requests``.
-        ``via_replay`` forces the choice — ``False`` keeps the interleaved
-        scalar loop (the reference path for equivalence tests and the perf
-        benchmark's per-scenario baseline); ``True`` raises on a
-        latency-dependent workload."""
-        if via_replay is None:
-            via_replay = bool(requests) and is_latency_independent(requests)
-        if via_replay:
-            return self._run_replayed(requests, record_plans)
-        return self._run_interleaved(requests, record_plans)
+        ``engine`` selects the scheduling tier (defaulting to the
+        constructor's, normally ``"auto"``):
+
+        * ``"auto"`` — ``"replay"`` for latency-independent workloads
+          (equal arrivals), ``"events"`` for staggered arrivals;
+        * ``"replay"`` — pure ``replay_schedule`` + one batched
+          ``predict_trace`` (raises ``ValueError`` on a staggered
+          workload);
+        * ``"events"`` — event-driven chunked speculation with batched
+          prediction between arrival events (``sim.events.run_events``);
+        * ``"loop"`` — the interleaved scalar reference loop, one
+          prediction per iteration (equivalence gates + benchmark
+          baselines).
+
+        The result dict carries the resolved tier under ``"engine"``.
+        ``via_replay`` is a deprecated alias: ``True`` -> ``"replay"``,
+        ``False`` -> ``"loop"``."""
+        if via_replay is not None:
+            warnings.warn(
+                "DoolySim.run(via_replay=...) is deprecated; use "
+                "engine='replay' / engine='loop' (removal: two releases "
+                "after 0.2)", DeprecationWarning, stacklevel=2)
+            if engine is not None:
+                raise TypeError("pass engine= or the deprecated "
+                                "via_replay=, not both")
+            engine = "replay" if via_replay else "loop"
+        if engine is None:
+            engine = self.engine
+        if engine not in ENGINES:
+            raise ValueError(f"unknown engine {engine!r}; "
+                             f"expected one of {ENGINES}")
+        if engine == "auto":
+            engine = ("loop" if not requests else
+                      "replay" if is_latency_independent(requests)
+                      else "events")
+        if engine == "replay":
+            out = self._run_replayed(requests, record_plans)
+        elif engine == "events":
+            out = self._run_events(requests, record_plans)
+        else:
+            out = self._run_interleaved(requests, record_plans)
+        out["engine"] = engine
+        return out
+
+    def _run_events(self, requests: List[Request],
+                    record_plans: bool) -> Dict[str, Any]:
+        return run_events(requests, self.sched_config, self.latency,
+                          record_plans=record_plans)
 
     def _run_replayed(self, requests: List[Request],
                       record_plans: bool) -> Dict[str, Any]:

@@ -27,16 +27,21 @@ summary prints before execution — instead of the old one-`ensure_profiled`
 prints the calibration diff: per-scenario TTFT/TPOT/makespan relative
 error of ``--latency`` against REF (e.g. ``oracle``), plus corpus-wide
 mean/max — the regression-fit quality report.
+
+``--engine`` routes staggered-arrival scenarios: ``auto``/``events``
+(the default) use the event-driven engine with prefix-shared traces;
+``loop`` forces the per-scenario interleaved reference loop.
 """
 from __future__ import annotations
 
 import argparse
-import json
 import math
 import sys
 from typing import List
 
-from repro.api import ProfileStore, available_backends
+from repro._cli import (add_db_arg, add_hardware_arg, add_json_arg,
+                        add_latency_arg, emit, json_to_stdout)
+from repro.api import ProfileStore
 from repro.core.profiler import SweepConfig
 from repro.sweep.grid import (SchedSpec, WorkloadSpec, expand_grid,
                               grid_summary)
@@ -62,13 +67,14 @@ def build_parser() -> argparse.ArgumentParser:
     p.add_argument("--models", default="llama3-8b,command-r7b",
                    help="comma-separated config registry names")
     p.add_argument("--backends", default="xla")
-    p.add_argument("--hardware", default="tpu-v5e")
+    add_hardware_arg(p)
     p.add_argument("--oracle", default="tpu_analytical")
-    p.add_argument("--latency", default="dooly",
-                   help="registered latency backend to price scenarios "
-                        f"with (one of {', '.join(available_backends())}, "
-                        "or an 'a->b' fallback chain such as "
-                        "'dooly->roofline')")
+    add_latency_arg(p)
+    p.add_argument("--engine", default="auto",
+                   choices=("auto", "events", "loop"),
+                   help="staggered-arrival scheduling tier: auto/events = "
+                        "event-driven with prefix-shared traces, loop = "
+                        "per-scenario interleaved reference loop")
     p.add_argument("--compare-latency", default=None, metavar="REF",
                    help="also run the grid under this reference backend "
                         "and print the per-scenario fit-error diff "
@@ -89,14 +95,15 @@ def build_parser() -> argparse.ArgumentParser:
     p.add_argument("--stream", action="store_true",
                    help="print each result as its fit group completes "
                         "(Sweep.iter_results) instead of one final table")
-    p.add_argument("--db", default=":memory:",
-                   help="latency DB path (profiles persist across runs)")
-    p.add_argument("--json", default=None, help="write results to this path")
+    add_db_arg(p, help_suffix="profiles persist across runs")
+    add_json_arg(p)
     return p
 
 
 def main(argv=None) -> int:
     args = build_parser().parse_args(argv)
+    # --json '-' promises bare JSON on stdout: tables/progress stay off it
+    quiet = json_to_stdout(args)
     models = [m for m in args.models.split(",") if m]
     backends = [b for b in args.backends.split(",") if b]
     scheds = [SchedSpec(max_num_seqs=s, max_batch_tokens=t, chunk_size=c)
@@ -109,32 +116,37 @@ def main(argv=None) -> int:
     scenarios = expand_grid(models, scheds, workloads, backends=backends,
                             hardware=args.hardware, tp=args.tp,
                             max_seq=args.max_seq)
-    print(f"grid: {grid_summary(scenarios)}")
+    if not quiet:
+        print(f"grid: {grid_summary(scenarios)}")
 
     with ProfileStore(args.db, hardware=args.hardware, oracle=args.oracle,
                       sweep=PROFILE_SWEEP) as store:
-        sweep = store.sweep(latency=args.latency)
+        sweep = store.sweep(latency=args.latency, engine=args.engine)
         # one corpus plan for the whole grid, not one ensure_profiled per
         # (model, backend): shared signatures are planned + measured once
         plan = sweep.profile_plan(scenarios)
         if plan is not None:
             cov = plan.coverage()
-            print(f"profiling plan {plan.plan_id}: {cov.naive_tasks} naive "
-                  f"-> {cov.plan_tasks} tasks "
-                  f"({100 * cov.dedup_frac:.0f}% dedup, "
-                  f"{cov.satisfied_tasks} satisfied, "
-                  f"{cov.shared_tasks} shared)")
+            if not quiet:
+                print(f"profiling plan {plan.plan_id}: {cov.naive_tasks} "
+                      f"naive -> {cov.plan_tasks} tasks "
+                      f"({100 * cov.dedup_frac:.0f}% dedup, "
+                      f"{cov.satisfied_tasks} satisfied, "
+                      f"{cov.shared_tasks} shared)")
             rep = store.execute(plan)
-            print(f"profiled {rep.models} configs: {rep.measured} tasks, "
-                  f"{rep.rows_written} rows in {rep.elapsed_s:.2f}s")
+            if not quiet:
+                print(f"profiled {rep.models} configs: {rep.measured} "
+                      f"tasks, {rep.rows_written} rows in "
+                      f"{rep.elapsed_s:.2f}s")
         if args.stream:
             results = []
             for r in sweep.iter_results(scenarios):
                 results.append(r)
-                print(f"[{len(results):4d}/{len(scenarios)}] "
-                      f"{r.scenario.label():58s} {r.mode:12s} "
-                      f"makespan {r.makespan:9.4f}  tpot.p50 "
-                      f"{r.tpot_p50:9.4f}  cost {r.cost:8.3f}")
+                if not quiet:
+                    print(f"[{len(results):4d}/{len(scenarios)}] "
+                          f"{r.scenario.label():58s} {r.mode:12s} "
+                          f"makespan {r.makespan:9.4f}  tpot.p50 "
+                          f"{r.tpot_p50:9.4f}  cost {r.cost:8.3f}")
             out = SweepResult(
                 results=sorted(results, key=lambda r: r.index),
                 summary=dict(sweep.last_summary),
@@ -148,31 +160,30 @@ def main(argv=None) -> int:
             ref = ref_sweep.run(scenarios)
             diff = compare_results(out, ref)
 
-    if not args.stream:
-        print(out.table(args.metric))
-    if out.failures:
-        print(f"\n{len(out.failures)} scenario(s) failed:")
-        print(out.failure_table())
-    if out.summary.get("degraded"):
-        print(f"\n{out.summary['degraded']} scenario(s) priced by a "
-              "degraded (fallback) backend")
-    print(f"\nsummary: {out.summary}")
-    front = out.frontier(args.metric)
-    print(f"cost/latency frontier ({args.metric}):")
-    for r in front:
-        print(f"  cost {r.cost:8.3f}  {args.metric} "
-              f"{getattr(r, args.metric):.5f}  {r.scenario.label()}")
-    if diff is not None:
-        print(f"\ncalibration diff: {args.latency} vs "
-              f"{args.compare_latency} (reference)")
-        print(compare_table(diff))
+    if not quiet:
+        if not args.stream:
+            print(out.table(args.metric))
+        if out.failures:
+            print(f"\n{len(out.failures)} scenario(s) failed:")
+            print(out.failure_table())
+        if out.summary.get("degraded"):
+            print(f"\n{out.summary['degraded']} scenario(s) priced by a "
+                  "degraded (fallback) backend")
+        print(f"\nsummary: {out.summary}")
+        front = out.frontier(args.metric)
+        print(f"cost/latency frontier ({args.metric}):")
+        for r in front:
+            print(f"  cost {r.cost:8.3f}  {args.metric} "
+                  f"{getattr(r, args.metric):.5f}  {r.scenario.label()}")
+        if diff is not None:
+            print(f"\ncalibration diff: {args.latency} vs "
+                  f"{args.compare_latency} (reference)")
+            print(compare_table(diff))
     if args.json:
         payload = out.to_json()
         if diff is not None:
             payload["calibration_diff"] = diff
-        with open(args.json, "w") as f:
-            json.dump(payload, f, indent=2)
-        print(f"wrote {args.json}")
+        emit(args, payload, "")
     return 0
 
 

@@ -32,8 +32,11 @@ class WorkloadSpec:
     """Reproducible workload: generator kind + parameters + seed.
 
     ``rate=BURST`` (infinity) produces equal arrivals — the
-    latency-independent class that sweeps evaluate by pure replay; finite
-    rates produce Poisson arrivals and fall back to the interleaved loop.
+    latency-independent class that sweeps evaluate by pure replay
+    (``sim.replay``); finite rates produce staggered Poisson arrivals,
+    which route through the event-driven ``sim.events`` engine with
+    prefix-shared traces across scenarios (the interleaved scalar loop
+    is only used when forced with ``engine="loop"``).
     """
     kind: str = "sharegpt"          # "sharegpt" | "synthetic"
     n: int = 32

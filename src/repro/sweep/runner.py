@@ -20,10 +20,18 @@ The driver composes the two decoupled simulation layers:
 Scenario classification (the latency-(in)dependence split): equal-arrival
 workloads are *exact-replay* — the replayed plans are provably the plans
 ``DoolySim.run`` would schedule, so metrics come straight from
-``PlanTrace.metrics``.  Staggered-arrival workloads are *full-loop* —
-batch composition depends on the predicted clock, so each runs the
-interleaved ``DoolySim.run`` (whose per-iteration predictions still hit
-the backend's memoized call cache, shared across the group's scenarios).
+``PlanTrace.metrics``.  Staggered-arrival workloads route through the
+event-driven ``sim.events`` engine (mode ``"events"``) with
+**prefix-shared replay** on top: scenarios sharing request structure and
+scheduler config share one recorded :class:`StaggeredTrace`; each
+follower prices the trace's plans in one batched ``predict_trace`` call
+and walks ``StaggeredTrace.divergence`` — a fully-valid walk reuses the
+whole schedule with zero scheduler work (``"events-dedup"`` under the
+same simulator, ``"events-shared"`` under another), and a divergent one
+fast-forwards the validated prefix for free and simulates only the tail.
+``Sweep(engine="loop")`` restores the interleaved per-scenario reference
+loop (mode ``"loop"``), which is also what ``latency_dependence`` can
+never route to automatically.
 
 On top, scenarios that resolve to an identical (plan-trace content,
 sim) pair — e.g. synthetic workloads differing only in the token-content
@@ -49,9 +57,10 @@ from repro.api.store import ProfileStore
 from repro.configs import get_smoke_config
 from repro.core.database import LatencyDB
 from repro.serving.scheduler import Request
+from repro.sim.events import StaggeredTrace, run_events
 from repro.sim.metrics import request_metrics
-from repro.sim.replay import (PlanTrace, clone_sorted,
-                              is_latency_independent, replay_schedule)
+from repro.sim.replay import (PlanTrace, clone_sorted, latency_dependence,
+                              replay_schedule)
 from repro.sim.simulator import DoolySim
 from repro.sweep.grid import Scenario, WorkloadSpec
 
@@ -62,7 +71,11 @@ DEFAULT_HW_COST = {"tpu-v5e": 1.0, "cpu": 0.1}
 @dataclass
 class ScenarioResult:
     scenario: Scenario
-    mode: str                       # "replay" | "replay-dedup" | "loop"
+    #: "replay" / "replay-dedup" (exact replay), "events" (event-driven
+    #: simulation, possibly prefix-resumed), "events-dedup" /
+    #: "events-shared" (full StaggeredTrace reuse), "loop" (forced
+    #: reference loop)
+    mode: str
     makespan: float
     n_iterations: int
     ttft_mean: float
@@ -92,7 +105,8 @@ class ScenarioFailure:
     ``stage`` names the pipeline step that raised: ``"workload"``
     (request building / scheduler replay), ``"build"`` (simulator or
     latency-backend construction), ``"predict"`` (a fit group's batched
-    prediction), or ``"loop"`` (the interleaved full-loop run)."""
+    prediction), ``"events"`` (the event-driven staggered run or its
+    trace-sharing walk), or ``"loop"`` (the forced interleaved run)."""
     index: int
     scenario: Scenario
     stage: str
@@ -160,13 +174,21 @@ class Sweep:
     scenario's model name to a ModelConfig (defaults to the smoke registry
     — the profile store must have been built with the same configs);
     ``latency`` names the registered backend every scenario is priced
-    with."""
+    with.  ``engine`` routes *staggered* scenarios: ``"auto"``/
+    ``"events"`` use the event-driven engine with prefix-shared traces,
+    ``"loop"`` restores the per-scenario interleaved reference loop
+    (equal-arrival scenarios always use exact replay)."""
 
     def __init__(self, db, *,
                  config_fn: Callable = get_smoke_config,
                  hw_cost: Optional[Dict[str, float]] = None,
                  use_saved_fits: bool = True,
-                 latency: str = "dooly"):
+                 latency: str = "dooly",
+                 engine: str = "auto"):
+        if engine not in ("auto", "events", "loop"):
+            raise ValueError(f"unknown sweep engine {engine!r}; expected "
+                             "'auto', 'events', or 'loop'")
+        self.engine = engine
         if isinstance(db, ProfileStore):
             self.store = db
         elif isinstance(db, LatencyDB):
@@ -334,10 +356,17 @@ class Sweep:
         ``predict_traces`` pass and its scenarios yield immediately —
         identical numerics to ``run``, but a million-scenario grid
         produces its first results after one group instead of after the
-        whole grid.  Full-loop scenarios follow, one at a time.  Yield
-        order is completion order; ``ScenarioResult.index`` maps back to
-        the submitted grid.  ``self.last_summary`` carries the run
-        counters once the generator is exhausted.
+        whole grid.  Staggered scenarios follow, grouped by (request
+        structure, scheduler config): the group leader runs the
+        event-driven engine once and records a :class:`StaggeredTrace`;
+        every other member prices the trace in one batched
+        ``predict_trace``, reuses it outright when its admission walk
+        validates end-to-end, and otherwise fast-forwards the validated
+        prefix and simulates only the tail.  Forced-loop scenarios
+        (``engine="loop"``) trail, one at a time.  Yield order is
+        completion order; ``ScenarioResult.index`` maps back to the
+        submitted grid.  ``self.last_summary`` carries the run counters
+        once the generator is exhausted.
 
         ``on_error="report"`` (default) collects per-scenario evaluation
         errors into ``self.last_failures`` (each a
@@ -360,28 +389,33 @@ class Sweep:
                 index=i, scenario=scenarios[i], stage=stage,
                 error=f"{type(exc).__name__}: {exc}"))
 
-        # classify: exact-replay (latency-independent) vs full-loop.
+        # classify: exact-replay (latency-independent) vs staggered
+        # (event-driven, or forced-loop under engine="loop").
         # used_* track THIS run's distinct traces/sims — the memos persist
         # across calls, so their sizes would overcount on reuse.
         exact_groups: Dict[Tuple, List[int]] = {}
+        stag_groups: Dict[Tuple, List[int]] = {}
         loop_idx: List[int] = []
         used_traces: set = set()
         n_degraded = 0
         for i, scn in enumerate(scenarios):
             try:
-                independent = is_latency_independent(
+                dependence = latency_dependence(
                     self.requests(scn.workload))
-                if independent:
+                if dependence != "staggered":
                     trace = self.plan_trace(scn)
             except Exception as e:
                 fail(i, "workload", e)
                 continue
-            if independent:
+            if dependence != "staggered":
                 used_traces.add(id(trace))
                 key = (self._trace_content_key(trace), scn.sim_key)
                 exact_groups.setdefault(key, []).append(i)
-            else:
+            elif self.engine == "loop":
                 loop_idx.append(i)
+            else:
+                key = (self._structure_key(scn.workload), scn.sched)
+                stag_groups.setdefault(key, []).append(i)
 
         # one batched prediction pass per fit group (= per simulator);
         # dict insertion order keeps the flattened trace order identical
@@ -421,8 +455,73 @@ class Sweep:
                         makespan, trace.n_iterations, met, index=i,
                         degraded=degraded)
 
-        # full-loop scenarios: per-scenario interleaved run (predictions
-        # still batched per iteration and memoized per fit group)
+        # staggered scenarios: event-driven engine with prefix-shared
+        # traces.  Every completed run in a group records its trace, and
+        # each follower validates against *all* cached traces — a
+        # divergence walk costs microseconds, a prefix-resumed simulation
+        # costs milliseconds, so trying every trace for a full validation
+        # (or the deepest prefix) is almost always a win.  The cache is
+        # per-call on purpose — traces depend on backend latencies, and
+        # reusing them across runs would make mode labels (and counters)
+        # order-dependent.
+        n_events = 0
+        n_events_shared = 0
+        for key, idxs in stag_groups.items():
+            cached: List[Tuple[StaggeredTrace, int]] = []
+            for i in idxs:
+                scn = scenarios[i]
+                try:
+                    sim = self.sim(scn)
+                except Exception as e:
+                    fail(i, "build", e)
+                    continue
+                try:
+                    reqs = clone_sorted(self.requests(scn.workload))
+                    sched_cfg = scn.sched.to_config()
+                    # best = (d, trace, lat, clocks, origin): the first
+                    # fully-valid trace, else the deepest valid prefix
+                    best = None
+                    for trace, origin in cached:
+                        lat = sim.predict_trace(trace.plans)
+                        clocks, d = trace.divergence(lat)
+                        if best is None or d > best[0]:
+                            best = (d, trace, lat, clocks, origin)
+                        if d == trace.n_iterations:
+                            break
+                    if best is not None and best[0] == best[1].n_iterations:
+                        d, trace, lat, clocks, origin = best
+                        mode = ("events-dedup" if id(sim) == origin
+                                else "events-shared")
+                        makespan = (float(clocks[-1]) if len(clocks)
+                                    else 0.0)
+                        n_iter = trace.n_iterations
+                        met = trace.metrics_at(clocks)
+                        met["_n_generated"] = int(trace.generated.sum())
+                    else:
+                        pre = None
+                        if best is not None and best[0] > 0:
+                            pre = (best[1], best[2], best[0])
+                        res = run_events(reqs, sched_cfg, sim.latency,
+                                         record_trace=True, prefix=pre)
+                        cached.append((res["trace"], id(sim)))
+                        mode = "events"
+                        makespan = res["makespan"]
+                        n_iter = len(res["iterations"])
+                        met = request_metrics(res["requests"])
+                        met["_n_generated"] = sum(
+                            r.generated for r in res["requests"])
+                except Exception as e:
+                    fail(i, "events", e)
+                    continue
+                degraded = self._degraded(sim)
+                n_degraded += 1 if degraded else 0
+                n_events += 1
+                n_events_shared += mode in ("events-dedup", "events-shared")
+                yield self._result(scn, mode, makespan, n_iter, met,
+                                   index=i, degraded=degraded)
+
+        # forced-loop scenarios (engine="loop"): per-scenario interleaved
+        # reference run (predictions still memoized per fit group)
         for i in loop_idx:
             scn = scenarios[i]
             try:
@@ -432,7 +531,7 @@ class Sweep:
                 continue
             try:
                 res = sim.run(clone_sorted(self.requests(scn.workload)),
-                              via_replay=False)
+                              engine="loop")
                 met = request_metrics(res["requests"])
                 met["_n_generated"] = sum(r.generated
                                           for r in res["requests"])
@@ -449,6 +548,8 @@ class Sweep:
         self.last_summary = {
             "scenarios": len(scenarios),
             "exact_replay": sum(len(v) for v in exact_groups.values()),
+            "events": n_events,
+            "events_shared": n_events_shared,
             "full_loop": len(loop_idx),
             "deduped": n_dedup,
             "plan_replays": len(used_traces),

@@ -1,0 +1,286 @@
+"""Event-driven staggered-arrival engine gates.
+
+The tentpole guarantee: ``engine="events"`` — chunked speculation between
+arrival events, one batched ``predict_trace`` per chunk — must match the
+interleaved scalar reference loop (``engine="loop"``) within 1e-9 on
+makespan, per-request token times, and the scheduled plan sequence, for
+seeded Poisson and burst workloads.  Plus: the ``engine=`` tier selector
+and its auto-routing, the deprecated ``via_replay=`` alias, the
+``latency_dependence`` classifier, ``StaggeredTrace.divergence``
+prefix-sharing, and the sweep-level events / events-shared /
+events-dedup modes.
+"""
+import math
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.core.database import LatencyDB
+from repro.core.profiler import QUICK_SWEEP, DoolyProf
+from repro.serving.scheduler import Request, SchedulerConfig
+from repro.sim.events import StaggeredTrace, recommend_engine, run_events
+from repro.sim.replay import (clone_sorted, is_latency_independent,
+                              latency_dependence)
+from repro.sim.simulator import DoolySim
+from repro.sim.workload import sharegpt_like, synthetic
+from repro.sweep import SchedSpec, Sweep, WorkloadSpec, expand_grid
+
+HW = "tpu-v5e"
+MODELS = ("llama3-8b", "command-r7b")
+SCHED = SchedulerConfig(max_num_seqs=4, max_batch_tokens=64, chunk_size=32)
+
+
+@pytest.fixture(scope="module")
+def profiled_db():
+    db = LatencyDB()
+    prof = DoolyProf(db, oracle="tpu_analytical", hardware=HW,
+                     sweep=QUICK_SWEEP)
+    for m in MODELS:
+        prof.profile_model(get_smoke_config(m), backend="xla")
+    return db
+
+
+def _sim(db, model=MODELS[0], sched=SCHED, **kw):
+    return DoolySim(get_smoke_config(model), db, hardware=HW, backend="xla",
+                    sched_config=sched, max_seq=128, **kw)
+
+
+def _assert_equivalent(a, b, tol=1e-9):
+    assert abs(a["makespan"] - b["makespan"]) <= tol
+    assert len(a["iterations"]) == len(b["iterations"])
+    assert a.get("plans") == b.get("plans")
+    ra = sorted(a["requests"], key=lambda r: (r.arrival, r.rid))
+    rb = sorted(b["requests"], key=lambda r: (r.arrival, r.rid))
+    for x, y in zip(ra, rb):
+        assert x.generated == y.generated
+        assert abs(x.first_token_t - y.first_token_t) <= tol
+        assert abs(x.finish_t - y.finish_t) <= tol
+        assert np.abs(np.array(x.token_times)
+                      - np.array(y.token_times)).max() <= tol
+
+
+# -- tentpole: events == loop -------------------------------------------
+
+
+@pytest.mark.parametrize("rate,seed,kind", [
+    (5.0, 0, "sharegpt"), (20.0, 1, "sharegpt"), (50.0, 2, "sharegpt"),
+    (200.0, 3, "sharegpt"), (10.0, 4, "synthetic"),
+])
+def test_events_matches_loop_poisson(profiled_db, rate, seed, kind):
+    if kind == "sharegpt":
+        gen = lambda: sharegpt_like(16, rate=rate, seed=seed, scale=0.05)
+    else:
+        gen = lambda: synthetic(16, rate=rate, seed=seed,
+                                prompt_len=48, out_len=8)
+    sim = _sim(profiled_db)
+    a = sim.run(gen(), engine="events", record_plans=True)
+    b = sim.run(gen(), engine="loop", record_plans=True)
+    assert a["engine"] == "events" and b["engine"] == "loop"
+    _assert_equivalent(a, b)
+    # the whole point: far fewer predictions than iterations
+    assert a["stats"]["chunks"] < len(a["iterations"])
+
+
+def test_events_matches_loop_burst(profiled_db):
+    """Events handles the degenerate burst case too (everything admitted
+    at clock 0, pure drain phase — one mega-chunk)."""
+    sim = _sim(profiled_db)
+    gen = lambda: sharegpt_like(12, rate=math.inf, seed=5, scale=0.05)
+    a = sim.run(gen(), engine="events", record_plans=True)
+    b = sim.run(gen(), engine="loop", record_plans=True)
+    _assert_equivalent(a, b)
+
+
+def test_events_matches_loop_sparse_arrivals(profiled_db):
+    """Very slow arrivals force repeated drain-jump events (scheduler
+    empties between requests) — the empty-plan clock jump must match."""
+    sim = _sim(profiled_db)
+    gen = lambda: sharegpt_like(8, rate=0.5, seed=7, scale=0.05)
+    a = sim.run(gen(), engine="events")
+    b = sim.run(gen(), engine="loop")
+    _assert_equivalent(a, b)
+
+
+def test_events_handles_duplicate_rids(profiled_db):
+    sim = _sim(profiled_db)
+    gen = lambda: (sharegpt_like(6, rate=30.0, seed=0, scale=0.05)
+                   + sharegpt_like(6, rate=30.0, seed=1, scale=0.05))
+    a = sim.run(gen(), engine="events")
+    b = sim.run(gen(), engine="loop")
+    _assert_equivalent(a, b)
+
+
+def test_events_empty_workload(profiled_db):
+    out = _sim(profiled_db).run([], engine="events")
+    assert out["makespan"] == 0.0 and out["iterations"] == []
+
+
+# -- the engine= tier selector ------------------------------------------
+
+
+def test_auto_routing(profiled_db):
+    sim = _sim(profiled_db)
+    burst = sharegpt_like(8, rate=math.inf, seed=0, scale=0.05)
+    poisson = sharegpt_like(8, rate=20.0, seed=0, scale=0.05)
+    assert sim.run(clone_sorted(burst))["engine"] == "replay"
+    assert sim.run(clone_sorted(poisson))["engine"] == "events"
+    assert sim.run([])["engine"] == "loop"
+    assert recommend_engine(burst) == "replay"
+    assert recommend_engine(poisson) == "events"
+
+
+def test_engine_constructor_default(profiled_db):
+    sim = _sim(profiled_db, engine="loop")
+    out = sim.run(sharegpt_like(6, rate=math.inf, seed=0, scale=0.05))
+    assert out["engine"] == "loop"          # per-run override still wins
+    out = sim.run(sharegpt_like(6, rate=math.inf, seed=0, scale=0.05),
+                  engine="auto")
+    assert out["engine"] == "replay"
+    with pytest.raises(ValueError):
+        _sim(profiled_db, engine="warp")
+    with pytest.raises(ValueError):
+        sim.run([], engine="warp")
+
+
+def test_replay_engine_rejects_staggered(profiled_db):
+    sim = _sim(profiled_db)
+    with pytest.raises(ValueError):
+        sim.run(sharegpt_like(8, rate=5.0, seed=0, scale=0.05),
+                engine="replay")
+
+
+def test_via_replay_alias_deprecation(profiled_db):
+    sim = _sim(profiled_db)
+    gen = lambda: sharegpt_like(6, rate=math.inf, seed=0, scale=0.05)
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        with pytest.raises(DeprecationWarning):
+            sim.run(gen(), via_replay=True)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        a = sim.run(gen(), via_replay=True)
+        b = sim.run(gen(), via_replay=False)
+        assert a["engine"] == "replay" and b["engine"] == "loop"
+        with pytest.raises(TypeError):
+            sim.run(gen(), engine="loop", via_replay=False)
+
+
+def test_latency_dependence_classifier():
+    mk = lambda arrivals: [Request(rid=i, arrival=a, prompt=[1, 2, 3],
+                                   max_new_tokens=2)
+                           for i, a in enumerate(arrivals)]
+    assert latency_dependence(mk([0.0, 0.0, 0.0])) == "equal"
+    assert latency_dependence(mk([])) == "equal"
+    assert latency_dependence(mk([-2.0, -1.0, 0.0])) == "immediate"
+    assert latency_dependence(mk([0.0, 0.5, 1.0])) == "staggered"
+    assert is_latency_independent(mk([-2.0, 0.0]))
+    assert not is_latency_independent(mk([0.0, 0.5]))
+
+
+# -- StaggeredTrace: recording, divergence, prefix sharing --------------
+
+
+def test_trace_divergence_self_consistent(profiled_db):
+    """A trace walked under the exact latencies that produced it must
+    validate end-to-end and reproduce the recorded clocks."""
+    sim = _sim(profiled_db)
+    reqs = clone_sorted(sharegpt_like(16, rate=20.0, seed=2, scale=0.05))
+    res = run_events(reqs, SCHED, sim.latency, record_trace=True)
+    trace = res["trace"]
+    assert isinstance(trace, StaggeredTrace)
+    assert trace.n_iterations == len(res["iterations"])
+    lat = np.array([it[2] for it in res["iterations"]])
+    clocks, d = trace.divergence(lat)
+    assert d == trace.n_iterations
+    ref = np.array([it[0] for it in res["iterations"]])
+    assert np.abs(clocks - ref).max() <= 1e-12
+    met = trace.metrics_at(clocks)
+    reqs_sorted = sorted(res["requests"], key=lambda r: r.arrival)
+    ttft_ref = np.array([r.first_token_t - r.arrival for r in reqs_sorted])
+    assert np.abs(met["ttft"] - ttft_ref).max() <= 1e-12
+
+
+def test_trace_divergence_detects_admission_flip(profiled_db):
+    """Slowing the iterations before an admission beyond the next arrival
+    gap must diverge the walk strictly before the end."""
+    sim = _sim(profiled_db)
+    reqs = clone_sorted(sharegpt_like(16, rate=20.0, seed=2, scale=0.05))
+    res = run_events(reqs, SCHED, sim.latency, record_trace=True)
+    trace = res["trace"]
+    lat = np.array([it[2] for it in res["iterations"]])
+    # find the first iteration whose admission count increases, then make
+    # every earlier iteration so slow the arrival lands iterations early
+    grow = np.nonzero(np.diff(trace.admit_before))[0]
+    assert len(grow)                        # staggered: admissions happen
+    _, d = trace.divergence(lat * 1000.0)
+    assert d < trace.n_iterations
+
+
+def test_prefix_resume_matches_full_run(profiled_db):
+    """run_events(prefix=...) fast-forwards a validated prefix from
+    another scenario's trace and must land on the same numbers as a
+    from-scratch run under the follower's own backend."""
+    gen = lambda: clone_sorted(
+        sharegpt_like(16, rate=20.0, seed=3, scale=0.05))
+    leader = _sim(profiled_db, model=MODELS[0])
+    follower = _sim(profiled_db, model=MODELS[1])
+    res = run_events(gen(), SCHED, leader.latency, record_trace=True)
+    trace = res["trace"]
+    lat = follower.predict_trace(trace.plans)
+    clocks, d = trace.divergence(lat)
+    full = run_events(gen(), SCHED, follower.latency)
+    if d == trace.n_iterations:
+        # full reuse: the walk prices the whole schedule directly
+        assert abs(float(clocks[-1]) - full["makespan"]) <= 1e-9
+    else:
+        resumed = run_events(gen(), SCHED, follower.latency,
+                             prefix=(trace, lat, d))
+        assert resumed["stats"]["prefix_iters"] == d
+        _assert_equivalent(resumed, full)
+
+
+# -- sweep integration --------------------------------------------------
+
+
+def test_sweep_staggered_modes_and_equivalence(profiled_db):
+    """A staggered grid sweeps through the events tier: leaders run the
+    engine, structure-sharing followers reuse or prefix-resume, and every
+    scenario matches its forced-loop reference within 1e-9."""
+    scheds = [SchedSpec(max_num_seqs=4, max_batch_tokens=64, chunk_size=32)]
+    workloads = [WorkloadSpec(kind="sharegpt", n=12, rate=20.0, seed=0),
+                 WorkloadSpec(kind="sharegpt", n=12, rate=50.0, seed=1)]
+    scenarios = expand_grid(MODELS, scheds, workloads, hardware=HW)
+    out = Sweep(profiled_db).run(scenarios)
+    modes = [r.mode for r in out.results]
+    assert all(m.startswith("events") for m in modes)
+    assert out.summary["events"] == len(scenarios)
+    assert (out.summary["events_shared"]
+            == sum(m in ("events-dedup", "events-shared") for m in modes))
+    # 2 groups (one per workload structure) -> 2 leaders minimum
+    assert modes.count("events") >= 2
+    ref = Sweep(profiled_db, engine="loop").run(scenarios)
+    for a, b in zip(out.results, ref.results):
+        assert abs(a.makespan - b.makespan) <= 1e-9, a.scenario.label()
+        assert abs(a.ttft_p50 - b.ttft_p50) <= 1e-9
+        assert abs(a.tpot_mean - b.tpot_mean) <= 1e-9
+        assert a.n_iterations == b.n_iterations
+
+
+def test_sweep_dedup_same_sim_full_reuse(profiled_db):
+    """Same sim + structurally identical workloads (content-seed only
+    difference) -> the follower's divergence walk validates end-to-end
+    and reuses the leader's trace outright."""
+    sched = SchedSpec(max_num_seqs=4, max_batch_tokens=64, chunk_size=32)
+    w0 = WorkloadSpec(kind="synthetic", n=8, rate=15.0, seed=0,
+                      prompt_len=48, out_len=8)
+    w0b = WorkloadSpec(kind="synthetic", n=8, rate=15.0, seed=0,
+                       prompt_len=48, out_len=8, vocab=500)
+    scenarios = expand_grid(MODELS[:1], [sched], [w0, w0b], hardware=HW)
+    out = Sweep(profiled_db).run(scenarios)
+    modes = [r.mode for r in out.results]
+    assert modes == ["events", "events-dedup"]
+    # the follower re-prices the shared plans in one batched call, so the
+    # agreement is at prediction-association level, not bitwise
+    assert abs(out.results[0].makespan - out.results[1].makespan) <= 1e-9

@@ -4,7 +4,8 @@ The load-bearing guarantee: for *exact-replay* scenario groups
 (latency-independent workloads), the sweep's replayed makespan must equal
 the scalar per-scenario ``DoolySim.run`` path within 1e-9 — the plan
 generation / latency prediction decoupling must not change the answer.
-Plus: classification (exact-replay vs full-loop), cross-spec dedup,
+Plus: classification (exact-replay vs event-driven vs forced-loop),
+cross-spec dedup,
 cross-scenario prediction batching, replay purity, the bounded
 build_context memo, detached op entries, and the CLI.
 """
@@ -40,7 +41,7 @@ def profiled_db():
 
 
 def _grid(n=16):
-    """Mixed grid: half burst (exact replay), half Poisson (full loop)."""
+    """Mixed grid: half burst (exact replay), half Poisson (events)."""
     scheds = [SchedSpec(max_num_seqs=4, max_batch_tokens=64, chunk_size=32),
               SchedSpec(max_num_seqs=8, max_batch_tokens=64, chunk_size=32)]
     workloads = [WorkloadSpec(kind="sharegpt", n=12, rate=math.inf, seed=0),
@@ -59,7 +60,7 @@ def test_exact_replay_matches_scalar_run(profiled_db):
                        hardware=scn.hardware, backend=scn.backend,
                        sched_config=scn.sched.to_config(),
                        max_seq=scn.max_seq)
-        ref = sim.run(scn.workload.build(), via_replay=False)
+        ref = sim.run(scn.workload.build(), engine="loop")
         assert abs(res.makespan - ref["makespan"]) <= 1e-9, scn.label()
         met = request_metrics(ref["requests"])
         assert abs(res.ttft_p50 - np.percentile(met["ttft"], 50)) <= 1e-9
@@ -77,13 +78,28 @@ def test_classification_and_sharing(profiled_db):
         == {k: v for k, v in out.summary.items() if k != "elapsed_s"}
     modes = [r.mode for r in out.results]
     assert len(modes) == 8          # 2 models x 2 scheds x 2 workloads
-    assert modes.count("loop") == 4                 # finite-rate workloads
+    # finite-rate workloads route through the event-driven engine
+    assert sum(m.startswith("events") for m in modes) == 4
     assert sum(m.startswith("replay") for m in modes) == 4
+    assert "loop" not in modes
     # 2 models x (2 scheds x 1 burst workload) share 2 plan replays
     assert out.summary["plan_replays"] == 2
     assert out.summary["fit_groups"] == 2
     assert out.summary["exact_replay"] == 4
-    assert out.summary["full_loop"] == 4
+    assert out.summary["events"] == 4
+    assert out.summary["full_loop"] == 0
+
+    # engine="loop" restores the interleaved reference loop
+    forced = Sweep(profiled_db, engine="loop").run(scenarios)
+    fmodes = [r.mode for r in forced.results]
+    assert fmodes.count("loop") == 4
+    assert forced.summary["full_loop"] == 4
+    assert forced.summary["events"] == 0
+    for a, b in zip(out.results, forced.results):
+        assert abs(a.makespan - b.makespan) <= 1e-9, a.scenario.label()
+        assert abs(a.tpot_p50 - b.tpot_p50) <= 1e-9
+    with pytest.raises(ValueError):
+        Sweep(profiled_db, engine="warp")
 
 
 def test_dedup_identical_plan_traces(profiled_db):
@@ -148,7 +164,7 @@ def test_run_replay_path_equivalent_to_interleaved(profiled_db):
                    sched_config=sched, max_seq=128)
     gen = lambda: sharegpt_like(15, rate=math.inf, seed=6, scale=0.05)
     a = sim.run(gen(), record_plans=True)                 # auto: replay
-    b = sim.run(gen(), via_replay=False, record_plans=True)
+    b = sim.run(gen(), engine="loop", record_plans=True)
     assert a["plans"] == b["plans"]
     assert abs(a["makespan"] - b["makespan"]) <= 1e-9
     ra = sorted(a["requests"], key=lambda r: r.rid)
@@ -172,7 +188,7 @@ def test_run_replay_handles_duplicate_rids(profiled_db):
     gen = lambda: (sharegpt_like(6, rate=math.inf, seed=0, scale=0.05)
                    + sharegpt_like(6, rate=math.inf, seed=1, scale=0.05))
     a = sim.run(gen())                                    # auto: replay
-    b = sim.run(gen(), via_replay=False)
+    b = sim.run(gen(), engine="loop")
     assert abs(a["makespan"] - b["makespan"]) <= 1e-9
     for x, y in zip(a["requests"], b["requests"]):
         assert x.generated == y.generated == x.max_new_tokens
@@ -181,11 +197,16 @@ def test_run_replay_handles_duplicate_rids(profiled_db):
 
 
 def test_shared_latency_model_is_cached():
-    db = LatencyDB()
-    a = LatencyModel.shared(db, HW)
-    b = LatencyModel.shared(db, HW)
-    c = LatencyModel.shared(db, "other-hw")
-    assert a is b and a is not c
+    from repro.api import ProfileStore
+    with ProfileStore(hardware=HW) as store:
+        a = store.model()
+        b = store.model(HW)
+        c = store.model("other-hw")
+        assert a is b and a is not c
+        # the legacy classmethod is past its grace period: under the test
+        # suite's warning filters, any use is an error
+        with pytest.raises(DeprecationWarning):
+            LatencyModel.shared(store.db, HW)
 
 
 def test_build_context_cache_bounded_and_keyed():
@@ -343,13 +364,17 @@ def test_iter_results_streams_and_matches_run(profiled_db):
 
 
 def test_iter_results_groups_complete_before_loops(profiled_db):
-    """Exact-replay groups stream first (batched per fit group), loop
-    scenarios trail — the order large grids want for early results."""
+    """Exact-replay groups stream first (batched per fit group), staggered
+    event-driven scenarios trail — the order large grids want for early
+    results; forced loops trail both."""
     scenarios = _grid()
     modes = [r.mode for r in Sweep(profiled_db).iter_results(scenarios)]
     n_replay = sum(m.startswith("replay") for m in modes)
     assert all(m.startswith("replay") for m in modes[:n_replay])
-    assert all(m == "loop" for m in modes[n_replay:])
+    assert all(m.startswith("events") for m in modes[n_replay:])
+    forced = [r.mode for r in
+              Sweep(profiled_db, engine="loop").iter_results(scenarios)]
+    assert all(m == "loop" for m in forced[n_replay:])
 
 
 def test_sweep_cli_stream(tmp_path, capsys):
