@@ -3,9 +3,22 @@
 Diffs a freshly produced ``BENCH_perf.json`` against a committed baseline
 and exits nonzero if the trajectory regressed:
 
-* any ``speedup`` value drops by more than ``TOLERANCE`` (30%) relative to
-  the baseline, or
+* any ``speedup`` or ``est_speedup`` value drops by more than
+  ``TOLERANCE`` (30%) relative to the baseline, or
 * any ``pass`` flag that was true in the baseline flips to false.
+
+Key conventions (what perf.py emits and why only some keys latch):
+
+* ``speedup`` — a *measured* wall-clock ratio the section is willing to
+  defend as a trajectory number.  Latched with 30% tolerance.
+* ``est_speedup`` — a *deterministic* structural bound (e.g. LPT packing
+  total-cost / makespan), noise-free by construction.  Latched with the
+  same tolerance; a drop means the packing/partition logic regressed,
+  not the machine.
+* ``ratio`` — an informational wall-clock ratio on a configuration the
+  CI box cannot measure honestly (1-cpu spawn workers, dedup-bound
+  pipelines hovering near 1).  Reported, never latched — gating it
+  would institutionalize noise.
 
 Sections present only in the new results (new benchmarks) are reported but
 never fail the gate; sections missing from the new results do fail it —
@@ -45,11 +58,13 @@ def _walk(base: Any, new: Any, path: str, tol: float,
     for key, bval in base.items():
         where = f"{path}{key}"
         if key not in new:
-            if key in ("speedup", "pass") or isinstance(bval, dict):
+            if key in ("speedup", "est_speedup", "pass") \
+                    or isinstance(bval, dict):
                 failures.append(f"{where}: missing from new results")
             continue
         nval = new[key]
-        if key == "speedup" and isinstance(bval, (int, float)):
+        if key in ("speedup", "est_speedup") \
+                and isinstance(bval, (int, float)):
             if not isinstance(nval, (int, float)):
                 failures.append(f"{where}: {nval!r} is not a number")
             elif nval < (1.0 - tol) * bval:

@@ -37,8 +37,9 @@ from repro.api.backends import (DoolyBackend, FallbackBackend,  # noqa: F401
                                 register_backend)
 from repro.api.store import ProfileStore  # noqa: F401
 from repro.core.plan import (CoverageReport, ExecuteReport,  # noqa: F401
-                             PlanTask, ProfilePlan, build_plan,
-                             execute_plan)
+                             PlanTask, ProfilePlan, ShardMergeReport,
+                             build_plan, execute_plan, merge_shards,
+                             shard_plan)
 
 __all__ = [
     # session + profiling
@@ -46,6 +47,8 @@ __all__ = [
     # the profiling-plan IR (plan-first surface)
     "ProfilePlan", "PlanTask", "CoverageReport", "ExecuteReport",
     "build_plan", "execute_plan",
+    # distributed profiling (shard -> execute -> merge)
+    "shard_plan", "merge_shards", "ShardMergeReport",
     # the latency seam
     "LatencyBackend", "PlanBackend",
     "DoolyBackend", "RooflineBackend", "OracleBackend",

@@ -38,8 +38,9 @@ from typing import Dict, Optional, Sequence, Tuple, Union
 from repro.configs.base import ModelConfig
 from repro.core.database import LatencyDB
 from repro.core.latency_model import LatencyModel
-from repro.core.plan import (ExecuteReport, ProfilePlan, build_plan,
-                             execute_plan)
+from repro.core.plan import (ExecuteReport, ProfilePlan, ShardMergeReport,
+                             build_plan, execute_plan, merge_shards,
+                             shard_plan)
 from repro.core.profiler import DoolyProf, ProfileReport, SweepConfig
 
 
@@ -167,6 +168,26 @@ class ProfileStore:
                             checkpoint=checkpoint, progress=progress,
                             task_timeout=task_timeout,
                             max_retries=max_retries, fail_fast=fail_fast)
+
+    def shard(self, plan: ProfilePlan, n: int) -> Tuple[ProfilePlan, ...]:
+        """Split ``plan`` into up to ``n`` content-addressed sub-plans
+        balanced by estimated cost, each independently executable against
+        its own scratch store/journal — the distributed-profiling seam
+        (see :func:`repro.core.plan.shard_plan`).  Sharding depends only
+        on plan content, so rebuilding and re-sharding after a partial
+        execution yields identical shards."""
+        return shard_plan(plan, n)
+
+    def merge(self, plan: ProfilePlan, *, dbs: Sequence = (),
+              journals: Sequence[str] = (),
+              checkpoint: Optional[str] = None,
+              on_conflict: str = "error") -> ShardMergeReport:
+        """Fold shard scratch databases and/or journals back into this
+        store with exact point accounting, then land the plan's
+        call-graph rows (see :func:`repro.core.plan.merge_shards`).
+        Idempotent: re-merging already-landed shards skips their rows."""
+        return merge_shards(self.db, plan, dbs=dbs, journals=journals,
+                            checkpoint=checkpoint, on_conflict=on_conflict)
 
     def ensure_profiled(self, cfg: ModelConfig, *, backend: str = "xla",
                         tp: int = 1, hardware: Optional[str] = None,

@@ -28,9 +28,23 @@ from __future__ import annotations
 
 import sqlite3
 from contextlib import contextmanager
+from dataclasses import dataclass
 from typing import (Any, Dict, Iterable, List, Optional, Sequence, Tuple)
 
 from repro.core.signature import Signature
+
+
+class MergeConflictError(RuntimeError):
+    """Two databases disagree on a measurement's latency."""
+
+
+@dataclass(frozen=True)
+class DBMergeReport:
+    """Exact row accounting for one :meth:`LatencyDB.merge_from` call."""
+    rows_merged: int                # measurement rows newly inserted
+    rows_skipped: int               # identical rows already present
+    conflicts: int                  # same key, different latency
+    signatures_merged: int          # signature rows newly inserted
 
 _SCHEMA = """
 CREATE TABLE IF NOT EXISTS configurations (
@@ -277,6 +291,85 @@ class LatencyDB:
         dict-backed after."""
         return self.measurement_map(sig_hash, hardware).get(
             (phase, num_toks, num_reqs, ctx_len))
+
+    def merge_from(self, other: "LatencyDB", *,
+                   hardware: Optional[str] = None,
+                   on_conflict: str = "error") -> DBMergeReport:
+        """Fold another latency DB's measurements and signatures into
+        this one with exact accounting — the coordinator half of sharded
+        profiling (each shard measures into a scratch DB; the canonical
+        DB merges them all).
+
+        Every source measurement row is classified: **merged** (key not
+        present here — inserted), **skipped** (present with a bitwise-
+        identical latency — untouched, which makes re-merging the same
+        shard a no-op), or a **conflict** (present with a different
+        latency).  Conflicts ``"error"`` (default) raise
+        :class:`MergeConflictError`; ``"keep"`` preserves this DB's row;
+        ``"replace"`` takes the source's.  ``hardware`` restricts the
+        copy to one hardware's rows.  Fits and comm rows are not merged:
+        fits are derived artifacts (and measurement inserts invalidate
+        the affected ones here), comm rows are not produced by plan
+        execution."""
+        if on_conflict not in ("error", "keep", "replace"):
+            raise ValueError(f"on_conflict must be 'error', 'keep', or "
+                             f"'replace', got {on_conflict!r}")
+        q = ("SELECT sig_hash,hardware,phase,num_toks,num_reqs,ctx_len,"
+             "oracle,latency_us FROM measurements")
+        args: Tuple = ()
+        if hardware is not None:
+            q += " WHERE hardware=?"
+            args = (hardware,)
+        src_rows = other.conn.execute(
+            q + " ORDER BY sig_hash,hardware,phase,num_toks,num_reqs,"
+                "ctx_len,oracle", args).fetchall()
+
+        # existing rows for the affected (sig, hardware) pairs only —
+        # keyed on the full measurement primary key (incl. oracle)
+        existing: Dict[Tuple, float] = {}
+        for sig, hw in {(r[0], r[1]) for r in src_rows}:
+            for row in self.conn.execute(
+                    "SELECT phase,num_toks,num_reqs,ctx_len,oracle,"
+                    "latency_us FROM measurements WHERE sig_hash=? AND "
+                    "hardware=?", (sig, hw)):
+                existing[(sig, hw) + tuple(row[:5])] = row[5]
+
+        new: List[Tuple] = []
+        skipped = conflicts = 0
+        for row in src_rows:
+            have = existing.get(tuple(row[:7]))
+            if have is None:
+                new.append(row)
+            elif have == row[7]:
+                skipped += 1
+            else:
+                conflicts += 1
+                if on_conflict == "error":
+                    raise MergeConflictError(
+                        f"measurement {row[:7]} is {have!r} here but "
+                        f"{row[7]!r} in the source; pass "
+                        "on_conflict='keep' or 'replace' to resolve")
+                if on_conflict == "replace":
+                    new.append(row)
+
+        src_sigs = other.conn.execute(
+            "SELECT hash,op_name,spec,fingerprint,attrs FROM signatures"
+            " ORDER BY hash").fetchall()
+        before = self.conn.total_changes
+        with self.transaction():
+            if new:
+                self.add_measurements_bulk(new)
+            changes_after_meas = self.conn.total_changes
+            self.conn.executemany(
+                "INSERT OR IGNORE INTO signatures VALUES(?,?,?,?,?)",
+                src_sigs)
+            sigs_merged = self.conn.total_changes - changes_after_meas
+        assert self.conn.total_changes - before >= len(new)
+        return DBMergeReport(
+            rows_merged=len(new) - (conflicts
+                                    if on_conflict == "replace" else 0),
+            rows_skipped=skipped, conflicts=conflicts,
+            signatures_merged=sigs_merged)
 
     def model_operations(self, config_id: int) -> List[Tuple[str, str, int]]:
         return self.conn.execute(

@@ -30,6 +30,12 @@ Durability is a policy knob: ``fsync=True`` (the default for execution)
 fsyncs after every record, so "journaled" means "on disk"; callers that
 prefer throughput over the last-task guarantee can turn it off and keep
 flush-only semantics.
+
+Sharded execution (``repro.core.plan.shard_plan``) gives every shard its
+own journal bound to the shard's content-addressed plan id;
+:func:`merge_journals` folds those back into one parent journal after
+the coordinator merge, refusing sources whose records fall outside the
+parent plan's task set.
 """
 from __future__ import annotations
 
@@ -143,6 +149,98 @@ def read_journal_state(path: Optional[str], plan_id: str,
         else:
             state.done.add(task_id)
     return state
+
+
+def journal_plan_id(path: str) -> Optional[str]:
+    """The plan id a journal's header is bound to, or None for a missing
+    or empty file.  Raises :class:`JournalError` when the file exists but
+    is not a plan journal."""
+    if not os.path.exists(path):
+        return None
+    with open(path) as fh:
+        for line in fh:
+            line = line.strip()
+            if not line:
+                continue
+            head = line.split(" ")
+            if len(head) < 3 or " ".join(head[:2]) != JOURNAL_MAGIC:
+                raise JournalError(
+                    f"{path!r} is not a plan journal (header {line!r})")
+            return head[2]
+    return None
+
+
+@dataclass
+class JournalMergeReport:
+    """What one :func:`merge_journals` call folded in."""
+    sources: int = 0
+    done_merged: int = 0            # records newly appended
+    done_skipped: int = 0           # already present in the target
+    quarantined_merged: int = 0
+    quarantined_skipped: int = 0
+    dropped_torn: int = 0           # torn source tails ignored
+
+    @property
+    def done_total(self) -> int:
+        return self.done_merged + self.done_skipped
+
+    @property
+    def quarantined_total(self) -> int:
+        return self.quarantined_merged + self.quarantined_skipped
+
+
+def merge_journals(target_path: str, plan_id: str, sources,
+                   *, known_ids: Optional[Set[str]] = None,
+                   fsync: bool = True) -> JournalMergeReport:
+    """Fold shard journals into one parent journal bound to ``plan_id``.
+
+    Each source journal is read under its *own* header plan id — shards
+    are content-addressed sub-plans with their own ids — but every record
+    must name a task in ``known_ids`` (the parent plan's task set);
+    otherwise the source is refused as a foreign-plan journal.  The merge
+    is idempotent: records already present in the target are skipped, so
+    re-running after adding one more shard appends only the new work.
+    Records are appended in sorted task-id order per source, making the
+    merged file deterministic for a given source set."""
+    report = JournalMergeReport()
+    target = read_journal_state(target_path, plan_id, known_ids)
+    states = []
+    for src in sources:
+        sid = journal_plan_id(src)
+        if sid is None:
+            raise JournalError(f"{src!r} is missing or empty; nothing "
+                               "to merge")
+        st = read_journal_state(src, sid, known_ids)
+        if known_ids is not None:
+            foreign = (st.done | set(st.quarantined)) - known_ids
+            if foreign:
+                raise JournalError(
+                    f"journal {src!r} (plan {sid}) records "
+                    f"{len(foreign)} task(s) outside plan {plan_id} "
+                    f"(e.g. {sorted(foreign)[0]!r}); refusing to merge "
+                    "a foreign-plan journal")
+        states.append(st)
+        report.dropped_torn += st.dropped_torn
+    report.sources = len(states)
+    with PlanJournal(target_path, plan_id, fsync=fsync) as journal:
+        for st in states:
+            for task_id in sorted(st.done):
+                if task_id in target.done:
+                    report.done_skipped += 1
+                    continue
+                journal.record_done(task_id)
+                target.done.add(task_id)
+                report.done_merged += 1
+            for task_id in sorted(st.quarantined):
+                if (task_id in target.quarantined
+                        or task_id in target.done):
+                    report.quarantined_skipped += 1
+                    continue
+                journal.record_quarantine(task_id,
+                                          st.quarantined[task_id])
+                target.quarantined[task_id] = st.quarantined[task_id]
+                report.quarantined_merged += 1
+    return report
 
 
 class PlanJournal:

@@ -26,10 +26,12 @@ restarting — or re-tripping.
 from __future__ import annotations
 
 import hashlib
+import heapq
 import os
 import time
 from dataclasses import dataclass
-from typing import Callable, Dict, List, Optional, Sequence, Tuple
+from typing import (Callable, Dict, List, Optional, Sequence, Tuple,
+                    Union)
 
 from repro.configs.base import ModelConfig
 from repro.core.database import LatencyDB
@@ -416,6 +418,208 @@ def build_plan(db: LatencyDB, cfgs: Sequence[ModelConfig], *,
 
 
 # ---------------------------------------------------------------------------
+# packing + sharding (the multi-host seam)
+# ---------------------------------------------------------------------------
+
+def _nominal_cost(task: PlanTask) -> float:
+    """Content-deterministic task price: a pure function of the task's
+    sweep-point count, never of DB state.  Unsatisfied tasks' ``est_cost_s``
+    equals this already; satisfied tasks replay stored measurements, which
+    would make shard assignment drift as rows land — so packing always
+    prices nominally."""
+    return float(task.n_points)
+
+
+def lpt_order(tasks: Sequence[PlanTask]) -> Tuple[PlanTask, ...]:
+    """Longest-processing-time-first schedule: tasks sorted by descending
+    nominal cost, ties broken by task id.  Deterministic for a given task
+    set, independent of worker count and DB state — the supervised pool
+    drains this order so its makespan is not tail-dominated by a long
+    task landing last."""
+    return tuple(sorted(
+        tasks, key=lambda t: (-_nominal_cost(t), t.task_id)))
+
+
+def lpt_assign(tasks: Sequence[PlanTask], n: int,
+               cost: Optional[Callable[[PlanTask], float]] = None
+               ) -> List[List[PlanTask]]:
+    """Greedy LPT bin packing of ``tasks`` onto ``n`` bins: longest first,
+    each task onto the currently-lightest bin (ties to the lowest bin
+    index).  Deterministic; bins partition the input exactly."""
+    n = max(1, int(n))
+    cost = cost or _nominal_cost
+    bins: List[List[PlanTask]] = [[] for _ in range(n)]
+    loads = [(0.0, i) for i in range(n)]
+    heapq.heapify(loads)
+    for t in lpt_order(tasks):
+        load, i = heapq.heappop(loads)
+        bins[i].append(t)
+        heapq.heappush(loads, (load + cost(t), i))
+    return bins
+
+
+def packing_report(tasks: Sequence[PlanTask], n: int) -> Dict[str, float]:
+    """Structural packing accounting for ``n`` parallel workers, priced
+    nominally (so it is deterministic on any machine): total cost, the
+    LPT makespan, the FIFO (submission-order list scheduling) makespan,
+    Graham's list-scheduling bound ``total/n + (1 - 1/n) * max_task``
+    (which LPT must respect), and the resulting estimated speedup
+    ``total / lpt_makespan``."""
+    n = max(1, int(n))
+    costs = [_nominal_cost(t) for t in tasks]
+    total = float(sum(costs))
+    max_task = float(max(costs, default=0.0))
+
+    def _makespan(ordered: Sequence[PlanTask]) -> float:
+        loads = [(0.0, i) for i in range(n)]
+        heapq.heapify(loads)
+        for t in ordered:
+            load, i = heapq.heappop(loads)
+            heapq.heappush(loads, (load + _nominal_cost(t), i))
+        return max(load for load, _ in loads) if tasks else 0.0
+
+    lpt = _makespan(lpt_order(tasks))
+    fifo = _makespan(list(tasks))
+    bound = total / n + (1.0 - 1.0 / n) * max_task
+    return {
+        "n_tasks": len(tasks), "n_bins": n,
+        "total_cost": total, "max_task_cost": max_task,
+        "lpt_makespan": lpt, "fifo_makespan": fifo,
+        "bound": bound,
+        "lpt_within_bound": bool(lpt <= bound * (1 + 1e-12)),
+        "fifo_over_lpt": fifo / lpt if lpt else 1.0,
+        "est_speedup": total / lpt if lpt else float(n),
+    }
+
+
+def shard_plan(plan: ProfilePlan, n: int) -> Tuple[ProfilePlan, ...]:
+    """Split a corpus plan into at most ``n`` content-addressed sub-plans
+    balanced by nominal task cost (LPT bin packing over the *full* task
+    set, satisfied tasks included).
+
+    Each shard is a full :class:`ProfilePlan` — same hardware / oracle /
+    sweep / model keys, its own task subset and matching signatures, and
+    therefore its own ``plan_id`` — executable independently against a
+    scratch DB with its own journal.  Shards carry no ``entries``: the
+    per-model call-graph rows land once, at the coordinator, when
+    :func:`merge_shards` (or a final ``execute_plan`` of the parent plan)
+    folds shard results back into the canonical DB.
+
+    The assignment is a pure function of task content (ids and sweep
+    point counts), never of DB state: rebuilding the parent plan after a
+    partially-executed shard run re-shards identically, so each shard's
+    journal still matches its shard's ``plan_id`` and a killed shard
+    resumes without touching the others.  Empty bins (``n`` larger than
+    the task count) are dropped."""
+    bins = lpt_assign(plan.tasks, n)
+    shards = []
+    for bin_tasks in bins:
+        if not bin_tasks:
+            continue
+        hashes = {t.sig_hash for t in bin_tasks}
+        shards.append(ProfilePlan(
+            hardware=plan.hardware, oracle=plan.oracle, sweep=plan.sweep,
+            models=plan.models, tasks=tuple(bin_tasks), entries=(),
+            signatures=tuple(s for s in plan.signatures
+                             if s.hash in hashes)))
+    return tuple(shards)
+
+
+@dataclass(frozen=True)
+class ShardMergeReport:
+    """Coordinator accounting for one :func:`merge_shards` call."""
+    plan_id: str
+    n_dbs: int                      # scratch DBs folded in
+    n_journals: int                 # shard journals folded in
+    rows_merged: int                # measurement rows newly landed
+    rows_skipped: int               # identical rows already present
+    conflicts: int                  # same key, different latency
+    signatures_merged: int
+    tasks_done: int                 # done records now in the checkpoint
+    tasks_quarantined: int
+    points_planned: int             # plan.todo points at merge time
+    checkpoint: Optional[str] = None
+
+    @property
+    def points_merged(self) -> int:
+        """Measurement points accounted for across this merge and any
+        earlier ones (exactness gate: equals ``points_planned`` once all
+        shards merged)."""
+        return self.rows_merged + self.rows_skipped
+
+
+def merge_shards(db: LatencyDB, plan: ProfilePlan, *,
+                 dbs: Sequence[Union[str, LatencyDB]] = (),
+                 journals: Sequence[str] = (),
+                 checkpoint: Optional[str] = None,
+                 on_conflict: str = "error") -> ShardMergeReport:
+    """The coordinator merge step: fold shard scratch DBs and shard
+    journals back into the canonical DB (and parent checkpoint journal),
+    then land the parent plan's idempotent tail — every signature and the
+    per-model call-graph rows shard executions deliberately skip.
+
+    ``dbs`` are scratch :class:`LatencyDB` handles or paths (paths are
+    opened read-only for the copy and closed); ``journals`` are shard
+    journal files, each bound to its shard's ``plan_id`` — accepted only
+    if every record names a task of ``plan`` (foreign-plan journals are
+    refused).  The whole operation is idempotent: re-merging the same
+    shards reports rows as skipped, not merged, and appends no duplicate
+    journal records.  Point accounting is exact — once every shard has
+    merged, ``points_merged == points_planned``."""
+    from repro.core.journal import merge_journals
+    rows_merged = rows_skipped = conflicts = sigs = 0
+    for src in dbs:
+        owned = isinstance(src, (str, os.PathLike))
+        sdb = LatencyDB(os.fspath(src), wal=False) if owned else src
+        try:
+            rep = db.merge_from(sdb, hardware=plan.hardware,
+                                on_conflict=on_conflict)
+        finally:
+            if owned:
+                sdb.close()
+        rows_merged += rep.rows_merged
+        rows_skipped += rep.rows_skipped
+        conflicts += rep.conflicts
+        sigs += rep.signatures_merged
+
+    tasks_done = tasks_quar = 0
+    if journals:
+        if not checkpoint:
+            raise ValueError("merging journals needs a target checkpoint")
+        jrep = merge_journals(
+            checkpoint, plan.plan_id, journals,
+            known_ids={t.task_id for t in plan.tasks})
+        tasks_done = jrep.done_total
+        tasks_quar = jrep.quarantined_total
+    _land_plan_tail(db, plan)
+    return ShardMergeReport(
+        plan_id=plan.plan_id, n_dbs=len(list(dbs)),
+        n_journals=len(list(journals)), rows_merged=rows_merged,
+        rows_skipped=rows_skipped, conflicts=conflicts,
+        signatures_merged=sigs, tasks_done=tasks_done,
+        tasks_quarantined=tasks_quar,
+        points_planned=sum(t.n_points for t in plan.todo),
+        checkpoint=checkpoint)
+
+
+def _land_plan_tail(db: LatencyDB, plan: ProfilePlan) -> None:
+    """The idempotent execution tail: every signature (satisfied and
+    quarantined ones included) plus the per-model call-graph counts, in
+    one transaction.  Shared by ``execute_plan`` and ``merge_shards``."""
+    with db.transaction():
+        db.insert_signatures_bulk(plan.signatures)
+        for (name, backend, tp), pentries in plan.entries:
+            cid = db.config_id(name, backend, plan.hardware, tp)
+            counts: Dict[Tuple[str, str], int] = {}
+            for e in pentries:
+                k = (e.sig_hash, e.module)
+                counts[k] = counts.get(k, 0) + e.count
+            db.add_model_operations_bulk(
+                [(cid, sig, module, count)
+                 for (sig, module), count in counts.items()])
+
+
+# ---------------------------------------------------------------------------
 # plan execution (resumable, parallel, supervised)
 # ---------------------------------------------------------------------------
 
@@ -454,21 +658,29 @@ def _resolve_measure_fn(prof: DoolyProf,
 
 
 def _plan_worker_setup(init):
-    """Supervised-worker setup: a throwaway in-memory DB and a profiler
-    matching the plan's oracle/hardware/sweep.  Module-level so it
-    pickles under the spawn start method."""
-    oracle, hardware, sweep = init
+    """Supervised-worker setup: a throwaway in-memory DB, a profiler
+    matching the plan's oracle/hardware/sweep, and the corpus config
+    table.  Module-level so it pickles under the spawn start method.
+
+    The config table ships each distinct ``ModelConfig`` once per worker
+    at setup; per-task payloads then reference configs by name, so a
+    10k-task plan does not re-pickle the same config 10k times.  Workers
+    never re-trace: the measure payloads were fully built at plan time
+    (see the ``REPRO_TRACE_LOG`` hook in ``repro.core.runner`` used by
+    the regression test)."""
+    oracle, hardware, sweep, cfgs = init
     prof = DoolyProf(LatencyDB(), oracle=oracle, hardware=hardware,
                      sweep=sweep)
-    return _resolve_measure_fn(prof)
+    return _resolve_measure_fn(prof), cfgs
 
 
-def _plan_worker_run(measure: Callable, payload) -> List[Tuple]:
+def _plan_worker_run(state, payload) -> List[Tuple]:
     """Supervised-worker task: measure one plan task and validate its
     rows *in the worker*, so garbage measurements fail the attempt (and
     consume retry budget) instead of reaching the coordinator."""
-    cfg, backend, tpayload = payload
-    return validate_rows(measure(tpayload, cfg, backend))
+    measure, cfgs = state
+    cfg_name, backend, tpayload = payload
+    return validate_rows(measure(tpayload, cfgs[cfg_name], backend))
 
 
 def read_journal(path: str, plan: ProfilePlan) -> set:
@@ -508,8 +720,10 @@ def execute_plan(db: LatencyDB, plan: ProfilePlan, *, workers: int = 1,
     completes.  ``fail_fast=True`` raises :class:`PlanExecutionError` on
     the first exhausted task instead (committed tasks stay journaled for
     resume).  With ``workers > 1`` or a ``task_timeout``, tasks run on a
-    replaceable spawn-process pool and stream back in completion order;
-    rows are bit-identical to a serial run either way.  Commit,
+    replaceable spawn-process pool, submitted longest-first
+    (:func:`lpt_order` — a deterministic schedule, so the parallel
+    makespan is not tail-dominated) and streaming back in completion
+    order; rows are bit-identical to a serial run either way.  Commit,
     journal-append, and ``progress`` failures are never swallowed — only
     measurement failures are supervised."""
     t0 = time.perf_counter()
@@ -558,15 +772,24 @@ def execute_plan(db: LatencyDB, plan: ProfilePlan, *, workers: int = 1,
     try:
         if todo and (workers > 1 or task_timeout is not None):
             by_id = {t.task_id: t for t in todo}
+            # longest-first submission: the pool drains its queue FIFO,
+            # so lpt_order keeps a long task from landing last and
+            # tail-dominating the makespan.  Rows stay bit-identical to
+            # any other order — each task commits independently and the
+            # measurement table is primary-keyed.
+            schedule = lpt_order(todo)
+            cfg_table = {}
+            for t in schedule:
+                cfg_table.setdefault(t.cfg.name, t.cfg)
             pool = SupervisedPool(
                 _plan_worker_setup, _plan_worker_run,
-                (plan.oracle, plan.hardware, plan.sweep),
+                (plan.oracle, plan.hardware, plan.sweep, cfg_table),
                 workers=workers, task_timeout=task_timeout,
                 max_retries=max_retries, backoff_s=retry_backoff_s)
             with pool:
                 for out in pool.run(
-                        [(t.task_id, (t.cfg, t.backend, t.payload))
-                         for t in todo]):
+                        [(t.task_id, (t.cfg.name, t.backend, t.payload))
+                         for t in schedule]):
                     retried += out.attempts - 1
                     timed_out += out.n_timeouts
                     task = by_id[out.task_id]
@@ -600,17 +823,7 @@ def execute_plan(db: LatencyDB, plan: ProfilePlan, *, workers: int = 1,
         # the per-model call-graph counts, one transaction.  Quarantined
         # signatures land here too — without measurements — which is
         # exactly what lets degraded-mode backends see and report them.
-        with db.transaction():
-            db.insert_signatures_bulk(plan.signatures)
-            for (name, backend, tp), pentries in plan.entries:
-                cid = db.config_id(name, backend, plan.hardware, tp)
-                counts: Dict[Tuple[str, str], int] = {}
-                for e in pentries:
-                    k = (e.sig_hash, e.module)
-                    counts[k] = counts.get(k, 0) + e.count
-                db.add_model_operations_bulk(
-                    [(cid, sig, module, count)
-                     for (sig, module), count in counts.items()])
+        _land_plan_tail(db, plan)
     finally:
         if journal is not None:
             journal.close()

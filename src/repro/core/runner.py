@@ -12,6 +12,7 @@ collision-free prime — exactly the paper's retrace-with-different-prompt.
 """
 from __future__ import annotations
 
+import os
 from dataclasses import dataclass
 from typing import Any, Dict, Optional
 
@@ -26,6 +27,20 @@ from repro.models import build_model
 
 _PRIMES = (3, 5, 7, 11, 13, 17, 19, 23, 29, 31, 37, 41, 43, 47, 53, 59, 61,
            67, 71, 73, 79, 83, 89, 97, 101, 103, 107, 109, 113)
+
+#: env hook: a file path every ``trace_model`` call appends
+#: "<pid> <model>" to.  Tracing is the expensive plan-build step that
+#: must happen exactly once per model, in the coordinator — the
+#: distributed-execution tests use this to assert that spawned workers
+#: and shard executions never re-trace.
+TRACE_LOG_ENV = "REPRO_TRACE_LOG"
+
+
+def _log_trace(cfg: ModelConfig) -> None:
+    path = os.environ.get(TRACE_LOG_ENV)
+    if path:
+        with open(path, "a") as fh:
+            fh.write(f"{os.getpid()} {cfg.name}\n")
 
 
 def config_taint_values(cfg: ModelConfig) -> Dict[int, set]:
@@ -71,6 +86,7 @@ def _pick_free(model_vals, used, start_idx=0) -> int:
 def trace_model(cfg: ModelConfig, *, batch: Optional[int] = None,
                 seq: Optional[int] = None, max_retries: int = 4,
                 impl: str = "xla") -> ModelTrace:
+    _log_trace(cfg)
     model = build_model(cfg)
     model_vals = config_taint_values(cfg)
     retraces = 0

@@ -34,9 +34,11 @@ import heapq
 import itertools
 import multiprocessing as mp
 import time
+from collections import deque
 from dataclasses import dataclass
 from multiprocessing.connection import wait as _conn_wait
-from typing import Any, Callable, Dict, Iterable, List, Optional, Tuple
+from typing import (Any, Callable, Deque, Dict, Iterable, List, Optional,
+                    Tuple)
 
 _READY = "__ready__"
 _SETUP_ERROR = "__setup_error__"
@@ -71,7 +73,10 @@ class _Sched:
 
     def __init__(self, tasks: Iterable[Tuple[str, Any]]):
         self.states: Dict[str, _TaskState] = {}
-        self.queue: List[str] = []              # ready to assign, FIFO
+        # ready to assign, FIFO — submission order IS the schedule (plan
+        # execution submits longest-first), so assignment must preserve
+        # it; a deque keeps the head-pop O(1) on 10k-task plans
+        self.queue: Deque[str] = deque()
         self.retry: List[Tuple[float, int, str]] = []   # (due, seq, id)
         self.outcomes: List[TaskOutcome] = []   # terminal, to yield
         self._seq = itertools.count()
@@ -268,7 +273,7 @@ class SupervisedPool:
             except (OSError, ValueError):
                 st.attempts -= 1        # worker died; task stays queued
                 continue
-            sched.queue.pop(0)
+            sched.queue.popleft()
             w.task_id = task_id
             if self.task_timeout is not None:
                 w.deadline = time.monotonic() + self.task_timeout

@@ -31,6 +31,11 @@ mean/max — the regression-fit quality report.
 ``--engine`` routes staggered-arrival scenarios: ``auto``/``events``
 (the default) use the event-driven engine with prefix-shared traces;
 ``loop`` forces the per-scenario interleaved reference loop.
+
+``--eval-workers N`` shards the grid's evaluation units (fit groups /
+trace-sharing groups) across N spawn processes, each reopening the store
+read-share-safely — results stay bit-identical to serial because a
+group's batched prediction never splits across workers.
 """
 from __future__ import annotations
 
@@ -95,6 +100,13 @@ def build_parser() -> argparse.ArgumentParser:
     p.add_argument("--stream", action="store_true",
                    help="print each result as its fit group completes "
                         "(Sweep.iter_results) instead of one final table")
+    p.add_argument("--eval-workers", type=int, default=1, metavar="N",
+                   help="shard evaluation units across N spawn processes "
+                        "(clamped to cpu count and unit count; results "
+                        "bit-identical to serial)")
+    p.add_argument("--oversubscribe", action="store_true",
+                   help="allow --eval-workers above the cpu count "
+                        "(testing/benchmark escape hatch)")
     add_db_arg(p, help_suffix="profiles persist across runs")
     add_json_arg(p)
     return p
@@ -138,9 +150,11 @@ def main(argv=None) -> int:
                 print(f"profiled {rep.models} configs: {rep.measured} "
                       f"tasks, {rep.rows_written} rows in "
                       f"{rep.elapsed_s:.2f}s")
+        workers_kw = dict(workers=args.eval_workers,
+                          oversubscribe=args.oversubscribe)
         if args.stream:
             results = []
-            for r in sweep.iter_results(scenarios):
+            for r in sweep.iter_results(scenarios, **workers_kw):
                 results.append(r)
                 if not quiet:
                     print(f"[{len(results):4d}/{len(scenarios)}] "
@@ -152,7 +166,7 @@ def main(argv=None) -> int:
                 summary=dict(sweep.last_summary),
                 failures=list(sweep.last_failures))
         else:
-            out = sweep.run(scenarios)
+            out = sweep.run(scenarios, **workers_kw)
 
         diff = None
         if args.compare_latency:

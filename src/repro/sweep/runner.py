@@ -46,7 +46,13 @@ reassembles input order.
 """
 from __future__ import annotations
 
+import heapq
+import multiprocessing
+import os
+import pickle
 import time
+import warnings
+from concurrent.futures import ProcessPoolExecutor, as_completed
 from dataclasses import dataclass, field
 from typing import (Callable, Dict, Iterator, List, Optional, Sequence,
                     Tuple)
@@ -347,7 +353,8 @@ class Sweep:
         return bool(getattr(sim.latency, "degraded", False))
 
     def iter_results(self, scenarios: Sequence[Scenario], *,
-                     on_error: str = "report"
+                     on_error: str = "report", workers: int = 1,
+                     oversubscribe: bool = False
                      ) -> Iterator[ScenarioResult]:
         """Stream per-scenario results as fit groups complete.
 
@@ -368,16 +375,36 @@ class Sweep:
         submitted grid.  ``self.last_summary`` carries the run counters
         once the generator is exhausted.
 
+        ``workers > 1`` shards the grid's evaluation units across spawn
+        processes, each reopening the store's database read-only-in-
+        practice (WAL readers share safely) and running this same serial
+        evaluator on its shard — results are bit-identical to serial
+        because shards are closed under the grouping keys above (a fit
+        group's batch never splits).  The effective worker count clamps
+        to ``min(workers, os.cpu_count(), n_units)`` with a warning
+        (``oversubscribe=True`` lifts the cpu clamp); in-memory stores
+        and unpicklable ``config_fn``s fall back to serial with a
+        warning.
+
         ``on_error="report"`` (default) collects per-scenario evaluation
         errors into ``self.last_failures`` (each a
         :class:`ScenarioFailure`) and keeps going, so one poisoned
         scenario — an unprofiled model, a backend that can't build —
-        costs that scenario, not the grid.  ``on_error="raise"``
-        restores fail-fast propagation."""
+        costs that scenario, not the grid; a crashed worker process
+        fails its shard's scenarios with ``stage="worker"``.
+        ``on_error="raise"`` restores fail-fast propagation."""
         if on_error not in ("report", "raise"):
             raise ValueError(f"on_error must be 'report' or 'raise', "
                              f"got {on_error!r}")
         scenarios = list(scenarios)
+        if workers > 1 and self._parallel_ok():
+            return self._iter_parallel(scenarios, on_error=on_error,
+                                       workers=workers,
+                                       oversubscribe=oversubscribe)
+        return self._iter_serial(scenarios, on_error=on_error)
+
+    def _iter_serial(self, scenarios: List[Scenario], *,
+                     on_error: str) -> Iterator[ScenarioResult]:
         t0 = time.perf_counter()
         self.last_summary = None
         self.last_failures = []
@@ -560,17 +587,193 @@ class Sweep:
             "elapsed_s": time.perf_counter() - t0,
         }
 
+    # -- parallel evaluation --------------------------------------------
+
+    def _parallel_ok(self) -> bool:
+        """Whether this sweep can shard evaluation across processes;
+        warns and returns False (serial fallback) when it can't."""
+        if self.store.closed or self.store.path == ":memory:":
+            warnings.warn(
+                "parallel sweep evaluation needs a file-backed store "
+                "(workers reopen the database by path); evaluating "
+                "serially", RuntimeWarning, stacklevel=3)
+            return False
+        try:
+            pickle.dumps((self.config_fn, self.hw_cost))
+        except Exception as e:
+            warnings.warn(
+                "parallel sweep evaluation needs a picklable config_fn "
+                f"({type(e).__name__}: {e}); evaluating serially",
+                RuntimeWarning, stacklevel=3)
+            return False
+        return True
+
+    def _parallel_units(self, scenarios: List[Scenario],
+                        fail: Callable) -> List[List[int]]:
+        """Partition scenario indices into evaluation units closed under
+        the serial grouping keys — every exact-replay scenario of one
+        simulator, every staggered scenario of one (structure, sched)
+        trace-sharing group — so a unit's batched predictions and shared
+        traces never split across workers and per-worker evaluation is
+        bit-identical to serial.  Forced-loop scenarios are independent
+        and shard singly."""
+        units: Dict[Tuple, List[int]] = {}
+        for i, scn in enumerate(scenarios):
+            try:
+                dependence = latency_dependence(
+                    self.requests(scn.workload))
+            except Exception as e:
+                fail(i, "workload", e)
+                continue
+            if dependence != "staggered":
+                key: Tuple = ("exact", scn.sim_key)
+            elif self.engine == "loop":
+                key = ("loop", i)
+            else:
+                key = ("stag", self._structure_key(scn.workload),
+                       scn.sched)
+            units.setdefault(key, []).append(i)
+        return list(units.values())
+
+    @staticmethod
+    def _bundle_units(units: List[List[int]],
+                      n: int) -> List[List[int]]:
+        """Greedy longest-first packing of units into ``n`` worker
+        bundles balanced by scenario count; deterministic (ties break on
+        first scenario index)."""
+        order = sorted(range(len(units)),
+                       key=lambda u: (-len(units[u]), units[u][0]))
+        heap = [(0, b) for b in range(n)]
+        heapq.heapify(heap)
+        bundles: List[List[int]] = [[] for _ in range(n)]
+        for u in order:
+            load, b = heapq.heappop(heap)
+            bundles[b].extend(units[u])
+            heapq.heappush(heap, (load + len(units[u]), b))
+        # original submission order within a bundle keeps the worker's
+        # group-discovery order identical to serial's on that subset
+        return [sorted(b) for b in bundles if b]
+
+    def _iter_parallel(self, scenarios: List[Scenario], *,
+                       on_error: str, workers: int,
+                       oversubscribe: bool) -> Iterator[ScenarioResult]:
+        t0 = time.perf_counter()
+        self.last_summary = None
+        self.last_failures = []
+
+        def fail(i: int, stage: str, exc: Exception):
+            if on_error == "raise":
+                raise exc
+            self.last_failures.append(ScenarioFailure(
+                index=i, scenario=scenarios[i], stage=stage,
+                error=f"{type(exc).__name__}: {exc}"))
+
+        units = self._parallel_units(scenarios, fail)
+        eff = min(workers, max(1, len(units)))
+        cpu = os.cpu_count() or 1
+        if not oversubscribe:
+            eff = min(eff, cpu)
+        if eff < workers:
+            warnings.warn(
+                f"clamping sweep evaluation workers {workers} -> {eff} "
+                f"({len(units)} evaluation unit(s), {cpu} cpu(s))",
+                RuntimeWarning, stacklevel=3)
+        if eff <= 1 or not units:
+            # classification failures re-derive identically in the
+            # serial pass, so delegating wholesale is safe
+            yield from self._iter_serial(scenarios, on_error=on_error)
+            return
+
+        store_kw = dict(path=self.store.path,
+                        hardware=self.store.hardware,
+                        oracle=self.store.oracle,
+                        sweep=self.store.profile_sweep,
+                        wal=self.store.wal)
+        sweep_kw = dict(config_fn=self.config_fn, hw_cost=self.hw_cost,
+                        use_saved_fits=self.use_saved_fits,
+                        latency=self.latency_name, engine=self.engine)
+        bundles = self._bundle_units(units, eff)
+        summaries: List[Dict[str, float]] = []
+        ctx = multiprocessing.get_context("spawn")
+        with ProcessPoolExecutor(max_workers=eff, mp_context=ctx) as pool:
+            futs = {pool.submit(_eval_worker, store_kw, sweep_kw,
+                                [scenarios[i] for i in bundle],
+                                on_error): bundle
+                    for bundle in bundles}
+            for fut in as_completed(futs):
+                bundle = futs[fut]
+                try:
+                    results, failures, summary = fut.result()
+                except Exception as e:
+                    if on_error == "raise":
+                        raise
+                    for i in bundle:
+                        self.last_failures.append(ScenarioFailure(
+                            index=i, scenario=scenarios[i],
+                            stage="worker",
+                            error=f"{type(e).__name__}: {e}"))
+                    continue
+                for f in failures:
+                    f.index = bundle[f.index]
+                    f.scenario = scenarios[f.index]
+                    self.last_failures.append(f)
+                summaries.append(summary)
+                for r in results:
+                    r.index = bundle[r.index]
+                    r.scenario = scenarios[r.index]
+                    yield r
+        agg = {k: sum(s[k] for s in summaries) for k in
+               ("exact_replay", "events", "events_shared", "full_loop",
+                "deduped", "plan_replays", "degraded")}
+        self.last_summary = {
+            "scenarios": len(scenarios),
+            "exact_replay": agg["exact_replay"],
+            "events": agg["events"],
+            "events_shared": agg["events_shared"],
+            "full_loop": agg["full_loop"],
+            "deduped": agg["deduped"],
+            "plan_replays": agg["plan_replays"],
+            "sims": len({s.sim_key for s in scenarios}),
+            "fit_groups": len({s.fit_key for s in scenarios}),
+            "failed": len(self.last_failures),
+            "degraded": agg["degraded"],
+            "elapsed_s": time.perf_counter() - t0,
+            "workers": eff,
+        }
+
     def run(self, scenarios: Sequence[Scenario], *,
-            on_error: str = "report") -> SweepResult:
+            on_error: str = "report", workers: int = 1,
+            oversubscribe: bool = False) -> SweepResult:
         """Evaluate the grid; failed scenarios (``on_error="report"``)
-        are dropped from ``results`` and itemized in ``.failures``."""
+        are dropped from ``results`` and itemized in ``.failures``.
+        ``workers > 1`` shards evaluation units across spawn processes
+        (see :meth:`iter_results`)."""
         scenarios = list(scenarios)
         slots: List[Optional[ScenarioResult]] = [None] * len(scenarios)
-        for r in self.iter_results(scenarios, on_error=on_error):
+        for r in self.iter_results(scenarios, on_error=on_error,
+                                   workers=workers,
+                                   oversubscribe=oversubscribe):
             slots[r.index] = r
         return SweepResult(results=[r for r in slots if r is not None],
                            summary=dict(self.last_summary),
                            failures=list(self.last_failures))
+
+
+def _eval_worker(store_kw: Dict, sweep_kw: Dict,
+                 scenarios: List[Scenario], on_error: str):
+    """Evaluate one shard of a scenario grid in a spawned process.
+
+    Reopens the profile store by path (WAL readers share the file; fit
+    write-back degrades to in-memory on contention with identical
+    coefficients), runs the serial evaluator on the shard, and returns
+    the shard-local results/failures/summary for the coordinator to
+    remap into grid indices."""
+    from repro.api.store import ProfileStore
+    with ProfileStore(**store_kw) as store:
+        sweep = Sweep(store, **sweep_kw)
+        results = list(sweep._iter_serial(list(scenarios),
+                                          on_error=on_error))
+        return results, sweep.last_failures, sweep.last_summary
 
 
 #: metrics the calibration diff reports (ScenarioResult fields)

@@ -88,21 +88,25 @@ def shim(prof, payload, cfg, backend):
 # -- subprocess kill harness ---------------------------------------------
 
 def _kill_run(argv) -> int:
-    """Execute a single-model plan, SIGKILL self after N commits."""
+    """Execute a plan (optionally one shard of it), SIGKILL self after N
+    commits."""
     import argparse
     import signal
 
     from repro.configs import get_smoke_config
     from repro.core.database import LatencyDB
-    from repro.core.plan import build_plan, execute_plan
+    from repro.core.plan import build_plan, execute_plan, shard_plan
     from repro.core.profiler import QUICK_SWEEP
 
     p = argparse.ArgumentParser()
     p.add_argument("--db", required=True)
     p.add_argument("--checkpoint", required=True)
-    p.add_argument("--model", default="yi-9b")
+    p.add_argument("--model", default="yi-9b",
+                   help="comma-separated config registry names")
     p.add_argument("--kill-after", type=int, required=True)
     p.add_argument("--workers", type=int, default=2)
+    p.add_argument("--shards", type=int, default=1)
+    p.add_argument("--shard-index", type=int, default=0)
     args = p.parse_args(argv)
 
     def progress(task, i, n):
@@ -112,9 +116,12 @@ def _kill_run(argv) -> int:
             os.kill(os.getpid(), signal.SIGKILL)
 
     with LatencyDB(args.db) as db:
-        plan = build_plan(db, [get_smoke_config(args.model)],
+        plan = build_plan(db, [get_smoke_config(m)
+                               for m in args.model.split(",")],
                           backends=("xla",), hardware="tpu-v5e",
                           oracle="tpu_analytical", sweep=QUICK_SWEEP)
+        if args.shards > 1:
+            plan = shard_plan(plan, args.shards)[args.shard_index]
         execute_plan(db, plan, workers=args.workers,
                      checkpoint=args.checkpoint, progress=progress)
     return 0    # only reached when kill_after > number of tasks

@@ -1,0 +1,383 @@
+"""Distributed-profiling gates: LPT scheduling, plan sharding, the
+coordinator merge, and parallel sweep evaluation.
+
+The contract under test is bit-identity: however a corpus is executed —
+serially, through N supervised workers, or split into content-addressed
+shards measured against scratch DBs and merged back — the canonical
+database ends up byte-for-byte identical, with exact measurement-point
+accounting.  Likewise a sweep grid evaluated across spawn processes must
+reproduce the serial evaluator's numbers exactly, because evaluation
+units never split a fit group's batched prediction.
+"""
+import os
+import signal
+import subprocess
+import sys
+import warnings
+from pathlib import Path
+
+import pytest
+
+from repro.api import ProfileStore
+from repro.configs import get_smoke_config
+from repro.core.database import LatencyDB
+from repro.core.journal import (JournalError, PlanJournal, journal_plan_id,
+                                merge_journals, read_journal_state)
+from repro.core.plan import (build_plan, execute_plan, lpt_assign,
+                             lpt_order, merge_shards, packing_report,
+                             shard_plan)
+from repro.core.profiler import QUICK_SWEEP
+from repro.core.runner import TRACE_LOG_ENV, trace_model
+from repro.sweep.grid import SchedSpec, WorkloadSpec, expand_grid
+
+ROOT = Path(__file__).resolve().parents[1]
+CORPUS = ("llama3-8b", "command-r7b")
+HW = "tpu-v5e"
+ORACLE = "tpu_analytical"
+
+MEAS_Q = ("SELECT * FROM measurements ORDER BY sig_hash, hardware, phase, "
+          "num_toks, num_reqs, ctx_len, oracle")
+SIGS_Q = "SELECT * FROM signatures ORDER BY hash"
+OPS_Q = ("SELECT * FROM model_operations ORDER BY config_id, sig_hash, "
+         "module")
+
+
+def _tables(db: LatencyDB):
+    return {q: db.conn.execute(q).fetchall()
+            for q in (MEAS_Q, SIGS_Q, OPS_Q)}
+
+
+@pytest.fixture(scope="module")
+def cfgs():
+    return [get_smoke_config(m) for m in CORPUS]
+
+
+@pytest.fixture(scope="module")
+def traces(cfgs):
+    return {c.name: trace_model(c) for c in cfgs}
+
+
+def _plan(db, cfgs, traces=None):
+    return build_plan(db, cfgs, backends=("xla",), hardware=HW,
+                      oracle=ORACLE, sweep=QUICK_SWEEP, traces=traces)
+
+
+@pytest.fixture(scope="module")
+def reference(cfgs, traces):
+    """(tables, plan) from a fault-free serial execute — the bit-identity
+    reference.  The plan was built against an empty DB, so every task is
+    todo and its coverage is the full corpus."""
+    with LatencyDB() as db:
+        plan = _plan(db, cfgs, traces)
+        execute_plan(db, plan)
+        return _tables(db), plan
+
+
+# -- LPT scheduling ------------------------------------------------------
+
+def test_lpt_order_is_deterministic_and_input_order_free(reference):
+    _, plan = reference
+    sched = lpt_order(plan.tasks)
+    assert sched == lpt_order(tuple(reversed(plan.tasks)))
+    assert sched == lpt_order(sorted(plan.tasks, key=lambda t: t.task_id))
+    costs = [t.n_points for t in sched]
+    assert costs == sorted(costs, reverse=True)
+    assert {t.task_id for t in sched} == {t.task_id for t in plan.tasks}
+
+
+def test_lpt_packing_beats_fifo_and_respects_bound(reference):
+    _, plan = reference
+    rep = packing_report(plan.tasks, 4)
+    assert rep["lpt_within_bound"]
+    assert rep["lpt_makespan"] <= rep["fifo_makespan"]
+    assert rep["est_speedup"] >= 1.0
+    # the classic Graham bound: makespan <= total/n + (1 - 1/n) * max
+    assert rep["lpt_makespan"] <= rep["bound"] + 1e-9
+    # every task lands in exactly one bin
+    bins = lpt_assign(plan.tasks, 4)
+    ids = [t.task_id for b in bins for t in b]
+    assert sorted(ids) == sorted(t.task_id for t in plan.tasks)
+
+
+# -- plan sharding -------------------------------------------------------
+
+def test_shards_partition_the_plan(reference):
+    _, plan = reference
+    shards = shard_plan(plan, 3)
+    assert 1 < len(shards) <= 3
+    all_ids = [t.task_id for s in shards for t in s.tasks]
+    assert sorted(all_ids) == sorted(t.task_id for t in plan.tasks)
+    assert len(set(all_ids)) == len(all_ids)        # pairwise disjoint
+    for s in shards:
+        assert s.entries == ()                      # call graph lands once
+        assert s.hardware == plan.hardware and s.oracle == plan.oracle
+        # every shard task's signature rides along
+        hashes = {sig.hash for sig in s.signatures}
+        assert {t.sig_hash for t in s.tasks} <= hashes
+
+
+def test_shard_decomposition_ignores_db_state(cfgs, traces):
+    """Re-sharding after a partial (or full) execution must reproduce the
+    same shards — shard journals stay bound to their plan ids across
+    resumes."""
+    with LatencyDB() as db:
+        fresh = shard_plan(_plan(db, cfgs, traces), 3)
+        execute_plan(db, _plan(db, cfgs, traces))
+        after = shard_plan(_plan(db, cfgs, traces), 3)
+    assert [s.plan_id for s in fresh] == [s.plan_id for s in after]
+    assert ([sorted(t.task_id for t in s.tasks) for s in fresh]
+            == [sorted(t.task_id for t in s.tasks) for s in after])
+
+
+# -- supervised execution ------------------------------------------------
+
+def test_worker_counts_are_bit_identical_and_never_retrace(
+        cfgs, traces, tmp_path, monkeypatch, reference):
+    """workers=2 and workers=4 land byte-for-byte the serial tables, and
+    spawned workers never re-trace a model — the coordinator ships
+    ready-built measure payloads plus one config table per worker."""
+    ref_tables, _ = reference
+    log = tmp_path / "traces.log"
+    monkeypatch.setenv(TRACE_LOG_ENV, str(log))
+    for workers in (2, 4):
+        with LatencyDB() as db:
+            plan = _plan(db, cfgs, traces)
+            rep = execute_plan(db, plan, workers=workers)
+            assert rep.measured == len(plan.todo)
+            assert _tables(db) == ref_tables
+    assert not log.exists() or log.read_text() == ""
+
+
+# -- shard execute + coordinator merge -----------------------------------
+
+def test_sharded_execution_merges_bit_identical_with_exact_accounting(
+        cfgs, traces, tmp_path, reference):
+    ref_tables, parent = reference
+    shards = shard_plan(parent, 3)
+    scratch, journals = [], []
+    for i, s in enumerate(shards):
+        dbp = str(tmp_path / f"shard{i}.sqlite")
+        ckp = str(tmp_path / f"shard{i}.journal")
+        with LatencyDB(dbp) as sdb:
+            rep = execute_plan(sdb, s, checkpoint=ckp)
+            assert rep.measured == len(s.tasks)
+        assert journal_plan_id(ckp) == s.plan_id
+        scratch.append(dbp)
+        journals.append(ckp)
+
+    ckpt = str(tmp_path / "parent.journal")
+    with LatencyDB() as db:
+        rep = merge_shards(db, parent, dbs=scratch, journals=journals,
+                           checkpoint=ckpt)
+        assert _tables(db) == ref_tables
+        # exact point accounting: everything planned is accounted for
+        assert rep.points_merged == rep.points_planned
+        assert rep.conflicts == 0
+        assert rep.tasks_done == len(parent.tasks)
+        # parent journal now covers the whole plan: a coordinator resume
+        # measures nothing
+        state = read_journal_state(ckpt, parent.plan_id)
+        assert state.done == {t.task_id for t in parent.tasks}
+        again = execute_plan(db, _plan(db, cfgs, traces), checkpoint=ckpt)
+        assert again.measured == 0
+
+        # idempotent: re-merging the same shards only skips
+        rep2 = merge_shards(db, parent, dbs=scratch, journals=journals,
+                            checkpoint=ckpt)
+        assert rep2.rows_merged == 0
+        assert rep2.rows_skipped == rep.points_merged
+        assert _tables(db) == ref_tables
+
+
+def test_foreign_plan_journal_is_refused(tmp_path, reference):
+    _, parent = reference
+    src = str(tmp_path / "foreign.journal")
+    with PlanJournal(src, "deadbeefdeadbeef") as j:
+        j.record_done("task-that-is-not-in-the-plan")
+    with LatencyDB() as db:
+        with pytest.raises(JournalError, match="foreign-plan"):
+            merge_shards(db, parent, journals=[src],
+                         checkpoint=str(tmp_path / "parent.journal"))
+        # journals without a target checkpoint are an error, not a no-op
+        with pytest.raises(ValueError, match="checkpoint"):
+            merge_shards(db, parent, journals=[src])
+
+
+def test_merge_journals_is_idempotent(tmp_path):
+    a = str(tmp_path / "a.journal")
+    b = str(tmp_path / "b.journal")
+    tgt = str(tmp_path / "parent.journal")
+    with PlanJournal(a, "aaaa000011112222") as j:
+        j.record_done("t1")
+        j.record_quarantine("t2", "poisoned")
+    with PlanJournal(b, "bbbb000011112222") as j:
+        j.record_done("t3")
+    known = {"t1", "t2", "t3"}
+    rep = merge_journals(tgt, "cccc000011112222", [a, b], known_ids=known)
+    assert (rep.done_merged, rep.quarantined_merged) == (2, 1)
+    rep2 = merge_journals(tgt, "cccc000011112222", [a, b], known_ids=known)
+    assert (rep2.done_merged, rep2.quarantined_merged) == (0, 0)
+    assert (rep2.done_skipped, rep2.quarantined_skipped) == (2, 1)
+    st = read_journal_state(tgt, "cccc000011112222")
+    assert st.done == {"t1", "t3"} and set(st.quarantined) == {"t2"}
+
+
+def test_killed_shard_resumes_without_touching_other_shards(
+        cfgs, traces, tmp_path, reference):
+    """SIGKILL one shard mid-run: its journal saved exactly the committed
+    work, the sibling shard's journal is untouched, and resume + merge
+    still lands the bit-identical corpus."""
+    ref_tables, parent = reference
+    shards = shard_plan(parent, 2)
+    assert len(shards) == 2
+
+    # shard 1 completes cleanly against its own scratch DB + journal
+    db1 = str(tmp_path / "s1.sqlite")
+    ck1 = str(tmp_path / "s1.journal")
+    with LatencyDB(db1) as sdb:
+        execute_plan(sdb, shards[1], checkpoint=ck1)
+    ck1_bytes = Path(ck1).read_bytes()
+
+    # shard 0 is killed after 2 task commits (subprocess harness)
+    db0 = str(tmp_path / "s0.sqlite")
+    ck0 = str(tmp_path / "s0.journal")
+    env = dict(os.environ, PYTHONPATH=str(ROOT / "src"))
+    proc = subprocess.run(
+        [sys.executable, str(ROOT / "tests" / "_faults.py"), "kill-run",
+         "--db", db0, "--checkpoint", ck0, "--model", ",".join(CORPUS),
+         "--kill-after", "2", "--workers", "2", "--shards", "2",
+         "--shard-index", "0"],
+        env=env, capture_output=True, text=True, timeout=570)
+    assert proc.returncode == -signal.SIGKILL, proc.stderr
+    assert Path(ck1).read_bytes() == ck1_bytes   # sibling untouched
+
+    state = read_journal_state(ck0, shards[0].plan_id)
+    assert len(state.done) == 2                  # exactly the commits
+
+    # resume shard 0: the re-derived decomposition matches, committed
+    # rows read back as satisfied, only the rest re-measures
+    with LatencyDB(db0) as sdb:
+        resumed = shard_plan(_plan(sdb, cfgs, traces), 2)[0]
+        assert resumed.plan_id == shards[0].plan_id
+        rep = execute_plan(sdb, resumed, checkpoint=ck0)
+        assert rep.measured == len(shards[0].tasks) - 2
+        assert rep.satisfied == 2
+
+    with LatencyDB() as db:
+        mrep = merge_shards(db, parent, dbs=[db0, db1],
+                            journals=[ck0, ck1],
+                            checkpoint=str(tmp_path / "parent.journal"))
+        assert mrep.points_merged == mrep.points_planned
+        assert _tables(db) == ref_tables
+
+
+# -- parallel sweep evaluation -------------------------------------------
+
+def _grid(models=CORPUS):
+    scheds = [SchedSpec(max_num_seqs=s, max_batch_tokens=64, chunk_size=32)
+              for s in (4, 8)]
+    wls = [WorkloadSpec(kind="synthetic", n=12, rate=r, seed=s)
+           for r in (float("inf"), 20.0) for s in (0, 1)]
+    return expand_grid(list(models), scheds, wls)
+
+
+RESULT_FIELDS = ("mode", "makespan", "n_iterations", "ttft_mean",
+                 "ttft_p50", "ttft_p90", "tpot_mean", "tpot_p50",
+                 "tpot_p90", "tokens_per_s", "cost", "degraded")
+
+
+def _assert_same_results(a, b):
+    assert len(a.results) == len(b.results)
+    for ra, rb in zip(a.results, b.results):
+        assert ra.index == rb.index and ra.scenario == rb.scenario
+        for f in RESULT_FIELDS:
+            assert getattr(ra, f) == getattr(rb, f), \
+                (f, ra.scenario.label())
+
+
+@pytest.fixture(scope="module")
+def store_path(tmp_path_factory, cfgs, traces):
+    path = str(tmp_path_factory.mktemp("dist") / "lat.sqlite")
+    with ProfileStore(path, hardware=HW, oracle=ORACLE,
+                      sweep=QUICK_SWEEP) as store:
+        execute_plan(store.db, _plan(store.db, cfgs, traces))
+    return path
+
+
+def test_parallel_sweep_is_bit_identical_to_serial(store_path):
+    scns = _grid()
+    with ProfileStore(store_path, hardware=HW, oracle=ORACLE) as store:
+        serial = store.sweep().run(scns)
+        par = store.sweep().run(scns, workers=2, oversubscribe=True)
+    _assert_same_results(serial, par)
+    assert par.summary["workers"] == 2
+    for k in ("exact_replay", "events", "events_shared", "deduped",
+              "plan_replays", "failed", "degraded"):
+        assert par.summary[k] == serial.summary[k], k
+
+
+def test_parallel_sweep_preserves_failure_reporting(store_path):
+    # yi-9b is unprofiled in this store: its scenarios fail to build,
+    # everything else still evaluates — identically serial or parallel
+    scns = _grid(models=CORPUS + ("yi-9b",))
+    with ProfileStore(store_path, hardware=HW, oracle=ORACLE) as store:
+        serial = store.sweep().run(scns)
+        par = store.sweep().run(scns, workers=2, oversubscribe=True)
+    assert serial.failures                      # the injected fault fired
+    _assert_same_results(serial, par)
+    assert ({(f.index, f.stage) for f in par.failures}
+            == {(f.index, f.stage) for f in serial.failures})
+    assert par.summary["failed"] == serial.summary["failed"]
+
+
+def test_parallel_sweep_on_error_raise_propagates(store_path):
+    scns = _grid(models=("yi-9b",))
+    with ProfileStore(store_path, hardware=HW, oracle=ORACLE) as store:
+        with pytest.raises(RuntimeError, match="no call-graph rows"):
+            list(store.sweep().iter_results(
+                scns, on_error="raise", workers=2, oversubscribe=True))
+
+
+def test_worker_clamp_warns_and_still_matches(store_path):
+    scns = _grid()
+    with ProfileStore(store_path, hardware=HW, oracle=ORACLE) as store:
+        serial = store.sweep().run(scns)
+        # on this box cpu_count caps the effective pool; the request is
+        # honored as far as the clamp allows and results never change
+        with pytest.warns(RuntimeWarning, match="clamping"):
+            clamped = store.sweep().run(scns, workers=64)
+    _assert_same_results(serial, clamped)
+
+
+def test_single_unit_grid_clamps_to_serial(store_path):
+    scns = _grid()[:1]                          # one evaluation unit
+    with ProfileStore(store_path, hardware=HW, oracle=ORACLE) as store:
+        with pytest.warns(RuntimeWarning, match="clamping"):
+            out = store.sweep().run(scns, workers=2, oversubscribe=True)
+    assert len(out.results) == 1
+    assert "workers" not in out.summary         # fell back to serial
+
+
+def test_in_memory_store_falls_back_to_serial(cfgs, traces):
+    with LatencyDB() as db:
+        execute_plan(db, _plan(db, cfgs, traces))
+        store = ProfileStore.wrap(db, hardware=HW, oracle=ORACLE)
+        with pytest.warns(RuntimeWarning, match="file-backed"):
+            out = store.sweep().run(_grid(), workers=2,
+                                    oversubscribe=True)
+    assert len(out.results) == len(_grid())
+
+
+def test_unpicklable_config_fn_falls_back_to_serial(store_path):
+    captured = {}
+
+    def config_fn(name, _c=captured):            # closure: not picklable
+        return get_smoke_config(name)
+
+    with ProfileStore(store_path, hardware=HW, oracle=ORACLE) as store:
+        with warnings.catch_warnings(record=True) as w:
+            warnings.simplefilter("always")
+            out = store.sweep(config_fn=config_fn).run(
+                _grid(), workers=2, oversubscribe=True)
+    assert any("picklable" in str(x.message) for x in w)
+    assert len(out.results) == len(_grid())
