@@ -77,6 +77,16 @@ purpose):
   injected unprofiled-model fault, >=200 scenarios, ``est_speedup``
   >= 2.
 
+* ``trace_replay`` — trace-driven workloads (``repro.workload``): a
+  recorded multi-turn session trace round-trips bit-identically through
+  ``save_trace``/``load_trace``, evaluates through the replay / events /
+  loop engines within 1e-9, and the scheduler's prefix-cache model turns
+  shared turn contexts into admission hits.  Gates (all deterministic):
+  round-trip identical, <=1e-9 engine parity, >0 cache-hit tokens with
+  strictly better TTFT and strictly fewer scheduler iterations than the
+  cache-disabled run; the cached-vs-uncached wall-clock ``ratio`` is
+  informational.
+
 A gate failure raises SystemExit so the CI step goes red.
 
 Writes ``BENCH_perf.json`` next to the CWD so later PRs can track the
@@ -777,6 +787,92 @@ def bench_warm_start(scratch_dir: str) -> Dict:
             "bitwise_equal": bool((cold_pred == warm_pred).all())}
 
 
+TRACE_REPLAY_SESSIONS = 32   # x 4 turns = 128 session requests
+TRACE_REPLAY_REPEATS = 5
+
+
+def bench_trace_replay(scratch_dir: str) -> Dict:
+    """Trace-driven workloads end to end (``repro.workload``): a recorded
+    multi-turn session trace save -> load round-trips bit-identically,
+    evaluates through the replay / events / loop engines within 1e-9,
+    and the prefix-cache model turns the shared turn contexts into
+    admission-time hits — fewer prefill chunks, fewer scheduler
+    iterations, strictly better TTFT than the cache-disabled run.  All
+    gates are deterministic; the cached-vs-uncached wall-clock ``ratio``
+    is informational (the iteration reduction is the structural win)."""
+    import math
+
+    from repro.sim.metrics import cache_hit_rate, request_metrics
+    from repro.sim.replay import clone_sorted
+    from repro.workload import (load_trace, save_trace,
+                                synthetic_session_rows, time_warp,
+                                to_requests, trace_key)
+
+    cfg = get_smoke_config("llama3-8b")
+    db = LatencyDB()
+    DoolyProf(db, oracle="tpu_analytical", hardware="tpu-v5e",
+              sweep=SIM_SWEEP).profile_model(cfg, backend="xla")
+    mk = lambda sched: DoolySim(cfg, db, hardware="tpu-v5e",
+                                backend="xla", sched_config=sched,
+                                max_seq=512)
+    cached = mk(SchedulerConfig(max_num_seqs=4, max_batch_tokens=64,
+                                chunk_size=32))
+    uncached = mk(SchedulerConfig(max_num_seqs=4, max_batch_tokens=64,
+                                  chunk_size=32, prefix_caching=False))
+
+    rows = synthetic_session_rows(TRACE_REPLAY_SESSIONS, rate=16.0,
+                                  turns=4, prompt_len=48, out_len=8,
+                                  think_time=0.15, seed=3)
+    path = os.path.join(scratch_dir, "sessions.jsonl")
+    key = save_trace(path, rows)
+    loaded = load_trace(path)
+    round_trip = loaded == rows and trace_key(loaded) == key
+
+    reqs = to_requests(loaded, seed=1)
+    gen = lambda: clone_sorted(reqs)
+    burst = to_requests(time_warp(loaded, math.inf), seed=1)
+    bgen = lambda: clone_sorted(burst)
+
+    # engine parity on the trace: staggered events vs loop, burst-warped
+    # through all three tiers
+    ev = cached.run(gen(), engine="events")
+    lp = cached.run(gen(), engine="loop")
+    stag_diff = abs(ev["makespan"] - lp["makespan"])
+    b_rep = cached.run(bgen(), engine="replay")
+    b_ev = cached.run(bgen(), engine="events")
+    b_lp = cached.run(bgen(), engine="loop")
+    burst_diff = max(abs(b_rep["makespan"] - b_ev["makespan"]),
+                     abs(b_rep["makespan"] - b_lp["makespan"]))
+
+    # prefix cache: hits, TTFT, and the iteration count it saves
+    cold = uncached.run(gen())
+    hits = int(request_metrics(ev["requests"])["cache_hit_tokens"].sum())
+    hit_rate = cache_hit_rate(ev["requests"])
+    ttft_on = float(request_metrics(ev["requests"])["ttft"].mean())
+    ttft_off = float(request_metrics(cold["requests"])["ttft"].mean())
+    iters_on, iters_off = len(ev["iterations"]), len(cold["iterations"])
+
+    on_s = min(_timed(lambda: cached.run(gen()))
+               for _ in range(TRACE_REPLAY_REPEATS))
+    off_s = min(_timed(lambda: uncached.run(gen()))
+                for _ in range(TRACE_REPLAY_REPEATS))
+    db.close()
+    return {"n_requests": len(reqs),
+            "n_sessions": TRACE_REPLAY_SESSIONS,
+            "trace_key": key,
+            "round_trip_identical": bool(round_trip),
+            "staggered_max_diff_s": stag_diff,
+            "burst_max_diff_s": burst_diff,
+            "cache_hit_tokens": hits,
+            "cache_hit_rate": hit_rate,
+            "ttft_cached": ttft_on, "ttft_uncached": ttft_off,
+            "ttft_improved": ttft_on < ttft_off,
+            "n_iterations_cached": iters_on,
+            "n_iterations_uncached": iters_off,
+            "uncached_s": off_s, "cached_s": on_s,
+            "ratio": off_s / on_s}
+
+
 def main(out_path: str = "BENCH_perf.json") -> Dict:
     with tempfile.TemporaryDirectory(dir=".") as scratch:
         dedup = bench_dedup(scratch)
@@ -792,11 +888,12 @@ def main(out_path: str = "BENCH_perf.json") -> Dict:
     with tempfile.TemporaryDirectory(dir=".") as scratch:
         shard = bench_shard_exec(scratch)
         par = bench_par_sweep(scratch)
+        trep = bench_trace_replay(scratch)
     res = {"dedup": dedup, "sim": sim, "warm_start": warm, "trace": trace,
            "sweep": sweep, "staggered": staggered,
            "backend_dispatch": dispatch,
            "plan_dedup": plan, "fault_overhead": fault,
-           "shard_exec": shard, "par_sweep": par}
+           "shard_exec": shard, "par_sweep": par, "trace_replay": trep}
 
     print(f"# dedup DB pipeline ({dedup['n_rows']} rows, "
           f"{dedup['corpus_passes']} corpus passes)")
@@ -890,6 +987,20 @@ def main(out_path: str = "BENCH_perf.json") -> Dict:
     print(f"  max metric diff = {par['max_metric_diff']:.2e}, failure "
           f"reports match: {par['failures_match']}")
 
+    print(f"# trace-driven workloads ({trep['n_requests']} requests, "
+          f"{trep['n_sessions']} sessions, trace_key "
+          f"{trep['trace_key'][:12]}…)")
+    print(f"  round-trip identical: {trep['round_trip_identical']}, "
+          f"staggered events-vs-loop diff "
+          f"{trep['staggered_max_diff_s']:.2e} s, burst 3-engine diff "
+          f"{trep['burst_max_diff_s']:.2e} s")
+    print(f"  prefix cache: {trep['cache_hit_tokens']} hit tokens "
+          f"({trep['cache_hit_rate'] * 100:.1f}%), ttft "
+          f"{trep['ttft_uncached']:.2e} -> {trep['ttft_cached']:.2e} s, "
+          f"iterations {trep['n_iterations_uncached']} -> "
+          f"{trep['n_iterations_cached']} (wall-clock ratio "
+          f"{trep['ratio']:.2f}, informational)")
+
     ok = (dedup["speedup"] >= 5.0 and sim["speedup"] >= 5.0
           and sim["max_abs_diff_s"] < 1e-9 and dedup["bulk_rows_identical"]
           and warm["speedup"] >= 5.0 and warm["bitwise_equal"]
@@ -914,7 +1025,13 @@ def main(out_path: str = "BENCH_perf.json") -> Dict:
           and shard["lpt_deterministic"] and shard["lpt_within_bound"]
           and shard["merge_idempotent"] and shard["est_speedup"] >= 2.0
           and par["n_scenarios"] >= 200 and par["metrics_match"]
-          and par["failures_match"] and par["est_speedup"] >= 2.0)
+          and par["failures_match"] and par["est_speedup"] >= 2.0
+          and trep["round_trip_identical"]
+          and trep["staggered_max_diff_s"] <= 1e-9
+          and trep["burst_max_diff_s"] <= 1e-9
+          and trep["cache_hit_tokens"] > 0
+          and trep["ttft_improved"]
+          and trep["n_iterations_cached"] < trep["n_iterations_uncached"])
     res["pass"] = ok
     print("gates (>=5x dedup, >=5x sim, <1e-9 equivalence, >=5x warm "
           "start + bitwise, >=2x trace + <=1e-9 makespan, >=3x sweep over "
@@ -927,7 +1044,9 @@ def main(out_path: str = "BENCH_perf.json") -> Dict:
           "execution bit-identical + exact accounting + deterministic "
           "LPT in bound + idempotent merge + est >=2x, parallel sweep "
           "exact metrics + failure parity over >=200 scenarios + est "
-          ">=2x): "
+          ">=2x, trace round-trip bit-identical + <=1e-9 engine parity "
+          "+ prefix-cache hits with strictly better TTFT and fewer "
+          "iterations): "
           f"{'PASS' if ok else 'FAIL'}")
     with open(out_path, "w") as f:
         json.dump(res, f, indent=2)

@@ -4,11 +4,16 @@
 sets independently; this module is the single source of truth for the
 flags they share, so spellings, defaults, and help text cannot drift:
 
-* ``--db``        — latency DB path (default in-memory);
-* ``--hardware``  — hardware name measurements/fits are keyed by;
-* ``--latency``   — registered latency backend (or an ``a->b`` chain);
-* ``--json``      — machine-readable report path, ``'-'`` for bare JSON
-  on stdout (tables and progress chatter stay off it).
+* ``--db``             — latency DB path (default in-memory);
+* ``--hardware``       — hardware name measurements/fits are keyed by;
+* ``--latency``        — registered latency backend (or an ``a->b``
+  chain);
+* ``--json``           — machine-readable report path, ``'-'`` for bare
+  JSON on stdout (tables and progress chatter stay off it);
+* ``--workload-trace`` — a recorded ``dooly-trace`` JSONL file to build
+  trace-kind workloads from (repeatable);
+* ``--shape``          — a diurnal/spike traffic shape composed onto
+  every workload (``repro.workload.shapes.parse_shape`` syntax).
 
 ``emit`` implements the ``--json`` convention for any CLI that renders
 both a human table and a JSON payload.
@@ -50,6 +55,21 @@ def add_latency_arg(p: argparse.ArgumentParser, *,
                         f"with (one of {', '.join(available_backends())}, "
                         "or an 'a->b' fallback chain such as "
                         "'dooly->roofline')")
+
+
+def add_workload_trace_arg(p: argparse.ArgumentParser) -> None:
+    p.add_argument("--workload-trace", action="append", default=None,
+                   metavar="PATH",
+                   help="dooly-trace JSONL file to replay as a workload "
+                        "(repeatable; content hash is pinned into the "
+                        "scenario cache keys)")
+
+
+def add_shape_arg(p: argparse.ArgumentParser) -> None:
+    p.add_argument("--shape", default="", metavar="SPEC",
+                   help="traffic shape composed onto every workload: "
+                        "'diurnal:period=P,amplitude=A' or "
+                        "'spike:at=T,width=W,magnitude=M'")
 
 
 def json_to_stdout(args: argparse.Namespace) -> bool:

@@ -61,6 +61,11 @@ __all__ = [
     "StaggeredTrace",
     "Sweep", "SweepResult", "ScenarioFailure", "Scenario", "SchedSpec",
     "WorkloadSpec", "expand_grid",
+    # workload subsystem (trace ingestion / sessions / traffic shapes)
+    "TraceRow", "TraceError", "load_trace", "save_trace", "trace_key",
+    "time_warp", "resample_trace", "truncate_trace",
+    "to_requests", "synthetic_sessions",
+    "ShapeSpec", "parse_shape", "shaped_arrivals", "warp_times",
 ]
 
 _LAZY = {
@@ -77,6 +82,20 @@ _LAZY = {
     "SchedSpec": ("repro.sweep.grid", "SchedSpec"),
     "WorkloadSpec": ("repro.sweep.grid", "WorkloadSpec"),
     "expand_grid": ("repro.sweep.grid", "expand_grid"),
+    "TraceRow": ("repro.workload", "TraceRow"),
+    "TraceError": ("repro.workload", "TraceError"),
+    "load_trace": ("repro.workload", "load_trace"),
+    "save_trace": ("repro.workload", "save_trace"),
+    "trace_key": ("repro.workload", "trace_key"),
+    "time_warp": ("repro.workload", "time_warp"),
+    "resample_trace": ("repro.workload", "resample_trace"),
+    "truncate_trace": ("repro.workload", "truncate_trace"),
+    "to_requests": ("repro.workload", "to_requests"),
+    "synthetic_sessions": ("repro.workload", "synthetic_sessions"),
+    "ShapeSpec": ("repro.workload", "ShapeSpec"),
+    "parse_shape": ("repro.workload", "parse_shape"),
+    "shaped_arrivals": ("repro.workload", "shaped_arrivals"),
+    "warp_times": ("repro.workload", "warp_times"),
 }
 
 

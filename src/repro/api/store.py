@@ -222,8 +222,8 @@ class ProfileStore:
               use_saved_fits: bool = True) -> LatencyModel:
         """The shared per-(store, hardware) LatencyModel — each persisted
         fit is loaded/decoded once per store session no matter how many
-        simulators or sweep scenarios consume it.  Replaces
-        ``LatencyModel.shared`` (deprecated), whose cache had no owner."""
+        simulators or sweep scenarios consume it.  Replaces the removed
+        ``LatencyModel.shared``, whose cache had no owner."""
         hw = hardware or self.hardware
         key = (hw, use_saved_fits)
         lm = self._models.get(key)

@@ -106,10 +106,6 @@ class LatencyDB:
         self.measurement_generation = 0
         # bumped on every fits-table write/delete, same contract
         self.fit_generation = 0
-        # shared LatencyModel instances, one per (hardware, use_saved_fits);
-        # populated by the deprecated LatencyModel.shared shim — new code
-        # gets the owned equivalent from repro.api.ProfileStore.model
-        self._lm_cache: Dict[Tuple[str, bool], object] = {}
 
     def _check_schema_version(self):
         row = self.conn.execute(
@@ -135,7 +131,6 @@ class LatencyDB:
             self.conn.close()
             self.conn = None
         self._meas_cache.clear()
-        self._lm_cache.clear()
 
     def __enter__(self) -> "LatencyDB":
         return self

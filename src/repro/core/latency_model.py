@@ -29,14 +29,14 @@ In-memory fit caches follow the same contract: every prediction entry point
 checks the DB's generation counters (``refresh``) and drops cached
 fits/batches when a foreign write landed, bumping ``epoch`` so downstream
 prediction memos (DoolyBackend's call cache) invalidate too.  Long-lived
-shared instances are owned by :class:`repro.api.ProfileStore`;
-``LatencyModel.shared`` is the deprecated per-connection shim.
+shared instances are owned by :class:`repro.api.ProfileStore` (the
+deprecated ``LatencyModel.shared`` per-connection shim was removed after
+its 0.2 grace period).
 """
 from __future__ import annotations
 
 import math
 import sqlite3
-import warnings
 from dataclasses import dataclass
 from typing import Dict, List, Optional, Sequence, Tuple
 
@@ -102,24 +102,6 @@ class _BatchFit:
 
 
 class LatencyModel:
-    @classmethod
-    def shared(cls, db: LatencyDB, hardware: str, *,
-               use_saved_fits: bool = True) -> "LatencyModel":
-        """Deprecated: use :meth:`repro.api.ProfileStore.model`, which owns
-        the per-(db, hardware) fit cache with an explicit lifecycle.  This
-        shim keeps the old per-connection cache (``db._lm_cache``, cleared
-        on close) working for existing callers."""
-        warnings.warn(
-            "LatencyModel.shared is deprecated and will be removed in "
-            "0.4; use repro.api.ProfileStore.model(hardware) instead",
-            DeprecationWarning, stacklevel=2)
-        key = (hardware, use_saved_fits)
-        lm = db._lm_cache.get(key)
-        if lm is None:
-            lm = db._lm_cache[key] = cls(db, hardware,
-                                         use_saved_fits=use_saved_fits)
-        return lm
-
     def __init__(self, db: LatencyDB, hardware: str, *,
                  use_saved_fits: bool = True):
         self.db = db

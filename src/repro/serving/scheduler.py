@@ -22,10 +22,18 @@ class Request:
     arrival: float
     prompt: List[int]
     max_new_tokens: int
+    #: leading prompt tokens already resident in the KV cache (a shared
+    #: session prefix — see ``repro.workload.sessions``); the scheduler's
+    #: prefix-cache model skips them at admission
+    cached_prefix: int = 0
     # progress
     prefilled: int = 0
     generated: int = 0
     slot: int = -1
+    #: prompt tokens the prefix cache actually served (set at admission:
+    #: ``min(cached_prefix, prompt_len - 1)`` under ``prefix_caching``,
+    #: else 0) — the hit accounting ``sim.metrics`` surfaces
+    cache_hit_tokens: int = 0
     first_token_t: Optional[float] = None
     finish_t: Optional[float] = None
     token_times: List[float] = field(default_factory=list)
@@ -48,6 +56,11 @@ class SchedulerConfig:
     max_num_seqs: int = 8            # concurrent requests (cache rows)
     max_batch_tokens: int = 512      # per-iteration token budget
     chunk_size: int = 128            # prefill chunk size
+    #: serve ``Request.cached_prefix`` tokens from the prefix cache at
+    #: admission instead of prefilling them (vLLM-style automatic prefix
+    #: caching).  At least one prompt token always prefills so a fully
+    #: cached prompt still runs a chunk to emit its first token.
+    prefix_caching: bool = True
 
 
 @dataclass
@@ -108,8 +121,17 @@ class Scheduler:
             r = self.waiting.popleft()
             r.slot = self._free_slots.pop()
             self.running.append(r)
-            c = min(self.config.chunk_size, r.prompt_len, budget)
-            prefills.append(PrefillChunk(r, 0, c))
+            # prefix-cache hit: cached session-context tokens skip
+            # prefill, but the last prompt token always runs so prefill
+            # completion can emit the first token
+            hit = 0
+            if self.config.prefix_caching and r.cached_prefix > 0:
+                hit = min(r.cached_prefix, r.prompt_len - 1)
+            r.prefilled = hit
+            r.cache_hit_tokens = hit
+            c = min(self.config.chunk_size, r.prompt_len - r.prefilled,
+                    budget)
+            prefills.append(PrefillChunk(r, r.prefilled, c))
             budget -= c
         return IterationPlan(prefills, decodes)
 

@@ -103,6 +103,7 @@ class StaggeredTrace:
     first_iter: np.ndarray
     finish_iter: np.ndarray
     generated: np.ndarray
+    cache_hits: np.ndarray          # prefix-cache tokens served, per req
 
     @property
     def n_iterations(self) -> int:
@@ -180,7 +181,8 @@ class StaggeredTrace:
         return {"ttft": first - self.arrivals,
                 "tpot": (finish - first) / np.maximum(self.generated - 1, 1),
                 "finish": finish,
-                "n_done": np.array([self.n_requests])}
+                "n_done": np.array([self.n_requests]),
+                "cache_hit_tokens": self.cache_hits.copy()}
 
 
 def _snapshot(sched: Scheduler, events: Dict[int, List[int]]):
@@ -190,8 +192,9 @@ def _snapshot(sched: Scheduler, events: Dict[int, List[int]]):
     reqs = list(sched.waiting) + list(sched.running)
     return (list(sched.waiting), list(sched.running),
             list(sched._free_slots),
-            [(r, r.prefilled, r.generated, r.slot, r.first_token_t,
-              r.finish_t, len(r.token_times), len(events[id(r)]))
+            [(r, r.prefilled, r.generated, r.slot, r.cache_hit_tokens,
+              r.first_token_t, r.finish_t, len(r.token_times),
+              len(events[id(r)]))
              for r in reqs])
 
 
@@ -200,11 +203,12 @@ def _restore(sched: Scheduler, events: Dict[int, List[int]], snap):
     sched.waiting = deque(waiting)
     sched.running = list(running)
     sched._free_slots = list(free_slots)
-    for r, prefilled, generated, slot, first_t, finish_t, n_tt, n_ev \
-            in req_state:
+    for r, prefilled, generated, slot, cache_hit, first_t, finish_t, \
+            n_tt, n_ev in req_state:
         r.prefilled = prefilled
         r.generated = generated
         r.slot = slot
+        r.cache_hit_tokens = cache_hit
         r.first_token_t = first_t
         r.finish_t = finish_t
         del r.token_times[n_tt:]
@@ -387,5 +391,7 @@ def run_events(requests: Sequence[Request], sched_config: SchedulerConfig,
             finish_iter=np.array([ti[-1] if len(ti) else 0
                                   for ti in token_iters], dtype=np.intp),
             generated=np.array([len(ti) for ti in token_iters],
-                               dtype=np.int64))
+                               dtype=np.int64),
+            cache_hits=np.array([r.cache_hit_tokens for r in pending],
+                                dtype=np.int64))
     return out

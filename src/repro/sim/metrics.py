@@ -16,7 +16,22 @@ def request_metrics(requests: Sequence[Request]) -> Dict[str, np.ndarray]:
         for r in done])
     return {"ttft": ttft, "tpot": tpot,
             "finish": np.array([r.finish_t for r in done]),
-            "n_done": np.array([len(done)])}
+            "n_done": np.array([len(done)]),
+            # prefix-cache hit accounting: prompt tokens served from
+            # cache instead of prefilled (see SchedulerConfig.
+            # prefix_caching); all-zero when caching is off or no
+            # request carried a cached_prefix
+            "cache_hit_tokens": np.array(
+                [r.cache_hit_tokens for r in done])}
+
+
+def cache_hit_rate(requests: Sequence[Request]) -> float:
+    """Fraction of all prompt tokens served by the prefix cache across
+    ``requests`` (0.0 when there are no prompt tokens)."""
+    total = sum(r.prompt_len for r in requests)
+    if total == 0:
+        return 0.0
+    return sum(r.cache_hit_tokens for r in requests) / total
 
 
 def percentiles(x: np.ndarray, ps=(50, 90, 99)) -> Dict[str, float]:

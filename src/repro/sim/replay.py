@@ -73,7 +73,8 @@ def clone_sorted(requests: Sequence[Request]) -> List[Request]:
     """Fresh-progress copies in the scheduler's arrival order (stable sort,
     matching ``DoolySim.run``'s ``sorted(requests, key=arrival)``)."""
     return [Request(rid=r.rid, arrival=r.arrival, prompt=r.prompt,
-                    max_new_tokens=r.max_new_tokens)
+                    max_new_tokens=r.max_new_tokens,
+                    cached_prefix=r.cached_prefix)
             for r in sorted(requests, key=lambda r: r.arrival)]
 
 
@@ -96,6 +97,7 @@ class PlanTrace:
     first_iter: np.ndarray           # token_iters[i][0]
     finish_iter: np.ndarray          # token_iters[i][-1]
     generated: np.ndarray            # len(token_iters[i])
+    cache_hits: np.ndarray           # prefix-cache tokens served, per req
 
     @property
     def n_iterations(self) -> int:
@@ -113,6 +115,7 @@ class PlanTrace:
         the token-content seed)."""
         return (tuple(self.plans), self.start,
                 self.arrivals.tobytes(), self.generated.tobytes(),
+                self.cache_hits.tobytes(),
                 tuple(ti.tobytes() for ti in self.token_iters))
 
     def times(self, latencies: np.ndarray) -> np.ndarray:
@@ -137,7 +140,8 @@ class PlanTrace:
         return {"ttft": first - self.arrivals,
                 "tpot": (finish - first) / np.maximum(self.generated - 1, 1),
                 "finish": finish,
-                "n_done": np.array([self.n_requests])}
+                "n_done": np.array([self.n_requests]),
+                "cache_hit_tokens": self.cache_hits.copy()}
 
     def evaluate(self, backend) -> Dict[str, np.ndarray]:
         """Price this trace through any
@@ -163,6 +167,7 @@ class PlanTrace:
             r = requests[idx]
             ti = self.token_iters[i]
             r.prefilled = r.prompt_len
+            r.cache_hit_tokens = int(self.cache_hits[i])
             r.generated = int(self.generated[i])
             r.token_times = [float(t[j]) for j in ti]
             r.first_token_t = float(t[ti[0]])
@@ -218,4 +223,6 @@ def replay_schedule(requests: Sequence[Request],
         n_tokens=np.asarray(n_tokens, dtype=np.int64),
         first_iter=np.array([ti[0] for ti in token_iters], dtype=np.intp),
         finish_iter=np.array([ti[-1] for ti in token_iters], dtype=np.intp),
-        generated=np.array([len(ti) for ti in token_iters], dtype=np.int64))
+        generated=np.array([len(ti) for ti in token_iters], dtype=np.int64),
+        cache_hits=np.array([r.cache_hit_tokens for r in clones],
+                            dtype=np.int64))

@@ -5,7 +5,8 @@ applied to the simulator itself (cf. AIConfigurator / Vidur config search).
 
     PYTHONPATH=src python -m repro.sweep --help
 """
-from repro.sweep.grid import (SchedSpec, Scenario,  # noqa: F401
-                              WorkloadSpec, expand_grid)
+from repro.sweep.grid import (BURST, WORKLOAD_KINDS,  # noqa: F401
+                              SchedSpec, Scenario, WorkloadSpec,
+                              expand_grid)
 from repro.sweep.runner import (ScenarioResult, Sweep,  # noqa: F401
                                 SweepResult)

@@ -45,7 +45,8 @@ import sys
 from typing import List
 
 from repro._cli import (add_db_arg, add_hardware_arg, add_json_arg,
-                        add_latency_arg, emit, json_to_stdout)
+                        add_latency_arg, add_shape_arg,
+                        add_workload_trace_arg, emit, json_to_stdout)
 from repro.api import ProfileStore
 from repro.core.profiler import SweepConfig
 from repro.sweep.grid import (SchedSpec, WorkloadSpec, expand_grid,
@@ -89,11 +90,29 @@ def build_parser() -> argparse.ArgumentParser:
     p.add_argument("--tokens", default="64,128",
                    help="scheduler max_batch_tokens axis")
     p.add_argument("--chunks", default="32", help="prefill chunk_size axis")
-    p.add_argument("--workloads", default="sharegpt,synthetic")
-    p.add_argument("--n", type=int, default=24, help="requests per workload")
+    p.add_argument("--workloads", default=None,
+                   help="comma-separated workload kinds (sharegpt, "
+                        "synthetic, sessions); defaults to "
+                        "'sharegpt,synthetic', or to none when "
+                        "--workload-trace is given")
+    p.add_argument("--n", type=int, default=24,
+                   help="requests per workload (sessions per 'sessions' "
+                        "workload; truncation for --workload-trace, "
+                        "0 = whole trace)")
     p.add_argument("--rates", default="burst,20",
                    help="arrival rates; 'burst' = all at t=0 (exact replay)")
     p.add_argument("--seeds", default="0")
+    p.add_argument("--turns", type=int, default=3,
+                   help="turns per conversation for 'sessions' workloads")
+    p.add_argument("--think-time", type=float, default=0.0,
+                   help="gap between a conversation's turns (seconds) "
+                        "for 'sessions' workloads")
+    add_workload_trace_arg(p)
+    p.add_argument("--warps", default="1",
+                   help="offered-load factors for --workload-trace "
+                        "(arrivals divide by each; 'burst' collapses "
+                        "the trace to t=0)")
+    add_shape_arg(p)
     p.add_argument("--max-seq", type=int, default=128)
     p.add_argument("--metric", default="tpot_mean",
                    help="frontier latency metric (a ScenarioResult field)")
@@ -121,10 +140,25 @@ def main(argv=None) -> int:
     scheds = [SchedSpec(max_num_seqs=s, max_batch_tokens=t, chunk_size=c)
               for s in _ints(args.seqs) for t in _ints(args.tokens)
               for c in _ints(args.chunks)]
-    workloads = [WorkloadSpec(kind=k, n=args.n, rate=r, seed=seed)
-                 for k in args.workloads.split(",") if k
+    kinds = args.workloads
+    if kinds is None:
+        kinds = "" if args.workload_trace else "sharegpt,synthetic"
+    workloads = [WorkloadSpec(kind=k, n=args.n, rate=r, seed=seed,
+                              turns=args.turns,
+                              think_time=args.think_time,
+                              shape=args.shape)
+                 for k in kinds.split(",") if k
                  for r in _rates(args.rates)
                  for seed in _ints(args.seeds)]
+    workloads += [WorkloadSpec.for_trace(path, n=max(args.n, 0), warp=w,
+                                         shape=args.shape, seed=seed)
+                  for path in (args.workload_trace or [])
+                  for w in _rates(args.warps)
+                  for seed in _ints(args.seeds)]
+    if not workloads:
+        print("no workloads: pass --workloads and/or --workload-trace",
+              file=sys.stderr)
+        return 2
     scenarios = expand_grid(models, scheds, workloads, backends=backends,
                             hardware=args.hardware, tp=args.tp,
                             max_seq=args.max_seq)

@@ -4,8 +4,9 @@ The driver composes the two decoupled simulation layers:
 
 1. *Plan generation* — one pure ``replay_schedule`` per distinct
    (request structure, scheduler config), where structure is the
-   (prompt_len, arrival, max_new_tokens) tuple sequence the scheduler
-   actually sees; scenarios differing in model / hardware / backend — or
+   (prompt_len, arrival, max_new_tokens, cached_prefix) tuple sequence
+   the scheduler actually sees; scenarios differing in model / hardware
+   / backend — or
    in workload content that doesn't change structure — share the
    replayed :class:`PlanTrace`.
 2. *Cross-scenario prediction* — one batched pass per fitted (model,
@@ -94,12 +95,13 @@ class ScenarioResult:
     cost: float                     # accelerator-seconds x price x tp
     index: int = -1                 # position in the submitted grid
     degraded: bool = False          # priced by a fallback backend stage
+    cache_hit_tokens: int = 0       # prompt tokens served by prefix cache
 
     def to_json(self) -> Dict:
         out = {k: getattr(self, k) for k in
                ("mode", "makespan", "n_iterations", "ttft_mean", "ttft_p50",
                 "ttft_p90", "tpot_mean", "tpot_p50", "tpot_p90",
-                "tokens_per_s", "cost", "degraded")}
+                "tokens_per_s", "cost", "degraded", "cache_hit_tokens")}
         out["scenario"] = self.scenario.label()
         return out
 
@@ -277,12 +279,14 @@ class Sweep:
 
     def _structure_key(self, spec: WorkloadSpec) -> Tuple:
         """Scheduling only sees request *structure* — lengths, arrivals,
-        output budgets — never token content, so workload specs generating
-        structurally identical requests (e.g. synthetic loads differing
-        only in the content seed) can share one replay."""
+        output budgets, cached prefixes — never token content, so
+        workload specs generating structurally identical requests (e.g.
+        synthetic loads differing only in the content seed) can share
+        one replay."""
         key = self._struct_keys.get(spec)
         if key is None:
-            key = tuple((r.prompt_len, r.arrival, r.max_new_tokens)
+            key = tuple((r.prompt_len, r.arrival, r.max_new_tokens,
+                         r.cached_prefix)
                         for r in self.requests(spec))
             self._struct_keys[spec] = key
         return key
@@ -336,6 +340,7 @@ class Sweep:
                 index: int, degraded: bool = False) -> ScenarioResult:
         ttft, tpot = met["ttft"], met["tpot"]
         n_generated = int(met["_n_generated"])
+        hits = met.get("cache_hit_tokens")
         return ScenarioResult(
             scenario=scn, mode=mode, makespan=makespan,
             n_iterations=n_iterations,
@@ -346,7 +351,8 @@ class Sweep:
             tpot_p50=float(np.percentile(tpot, 50)) if len(tpot) else 0.0,
             tpot_p90=float(np.percentile(tpot, 90)) if len(tpot) else 0.0,
             tokens_per_s=n_generated / makespan if makespan > 0 else 0.0,
-            cost=self._cost(scn, makespan), index=index, degraded=degraded)
+            cost=self._cost(scn, makespan), index=index, degraded=degraded,
+            cache_hit_tokens=int(hits.sum()) if hits is not None else 0)
 
     @staticmethod
     def _degraded(sim: DoolySim) -> bool:

@@ -1,8 +1,5 @@
 """Dooly pipeline tests: opset resolution, signatures, dedup, DB, latency
 model — the paper's §5/§6 behaviour at smoke scale."""
-import jax
-import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from repro.configs import get_smoke_config
@@ -12,7 +9,7 @@ from repro.core.latency_model import LatencyModel
 from repro.core.opset import ModuleEntry, OpEntry, find_runnable_set
 from repro.core.profiler import QUICK_SWEEP, DoolyProf
 from repro.core.runner import trace_model
-from repro.core.signature import module_entry_signature, op_entry_signature
+from repro.core.signature import module_entry_signature
 from repro.serving.context import build_context
 
 

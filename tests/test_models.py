@@ -7,7 +7,7 @@ import numpy as np
 import pytest
 
 import repro.models.moe as moe_mod
-from repro.configs import ASSIGNED_ARCHS, SHAPES, get_smoke_config
+from repro.configs import ASSIGNED_ARCHS, get_smoke_config
 from repro.models import build_model
 from repro.train.trainer import init_train_state, make_train_step
 

@@ -203,10 +203,9 @@ def test_shared_latency_model_is_cached():
         b = store.model(HW)
         c = store.model("other-hw")
         assert a is b and a is not c
-        # the legacy classmethod is past its grace period: under the test
-        # suite's warning filters, any use is an error
-        with pytest.raises(DeprecationWarning):
-            LatencyModel.shared(store.db, HW)
+    # the deprecated LatencyModel.shared classmethod is gone: the
+    # store-owned cache above is the only shared-instance path
+    assert not hasattr(LatencyModel, "shared")
 
 
 def test_build_context_cache_bounded_and_keyed():

@@ -1,8 +1,5 @@
 """End-to-end Dooly pipeline integration: trace -> opset -> signatures ->
 profile -> latency DB -> DoolySim, on two architecture families."""
-import jax
-import numpy as np
-
 from repro.configs import get_smoke_config
 from repro.core.database import LatencyDB
 from repro.core.profiler import QUICK_SWEEP, DoolyProf

@@ -1,8 +1,6 @@
 """Taint system tests: Table-1 rules (property-based), reshape MIX(H)
 merge/split recovery, tracer invariants per §7.3 (MODEL dims constant across
 workloads; TOKS/REQS scale exactly), ambiguity detection + retrace."""
-import jax
-import jax.numpy as jnp
 import pytest
 from _hyp_compat import given, settings, st
 

@@ -1,0 +1,403 @@
+"""Trace-driven workload gates (``repro.workload``).
+
+The tentpole guarantees: a ``dooly-trace`` save -> load round-trip is
+bit-identical (rows, key, and the requests expanded from them); a
+trace-driven staggered scenario evaluates through the ``replay`` (after a
+burst warp), ``events``, and ``loop`` engines within 1e-9 of each other;
+and a multi-turn session workload shows >0 prefix-cache hits with TTFT
+strictly improved over the cache-disabled run.  Plus: strict schema
+errors naming the line, trace transforms, traffic shapes, and the
+``WorkloadSpec`` kind router (label/hash stability, content-pinned trace
+digests, bit-identical builds).
+"""
+import json
+import math
+
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.core.database import LatencyDB
+from repro.core.profiler import QUICK_SWEEP, DoolyProf
+from repro.serving.scheduler import SchedulerConfig
+from repro.sim.metrics import cache_hit_rate, request_metrics
+from repro.sim.simulator import DoolySim
+from repro.sweep import WORKLOAD_KINDS, BURST, SchedSpec, WorkloadSpec
+from repro.workload import (ShapeSpec, TraceError, TraceRow, load_trace,
+                            parse_shape, resample_trace, save_trace,
+                            shaped_arrivals, sharegpt_like,
+                            synthetic_session_rows, synthetic_sessions,
+                            time_warp, to_requests, trace_key,
+                            truncate_trace, warp_times)
+
+HW = "tpu-v5e"
+MODEL = "llama3-8b"
+SCHED = SchedulerConfig(max_num_seqs=4, max_batch_tokens=64, chunk_size=32)
+SAMPLE = "tests/data/sample_trace.jsonl"
+
+
+@pytest.fixture(scope="module")
+def profiled_db():
+    db = LatencyDB()
+    prof = DoolyProf(db, oracle="tpu_analytical", hardware=HW,
+                     sweep=QUICK_SWEEP)
+    prof.profile_model(get_smoke_config(MODEL), backend="xla")
+    return db
+
+
+def _sim(db, sched=SCHED, **kw):
+    return DoolySim(get_smoke_config(MODEL), db, hardware=HW,
+                    backend="xla", sched_config=sched, max_seq=256, **kw)
+
+
+def _rows(n_sessions=4, **kw):
+    kw.setdefault("rate", 8.0)
+    kw.setdefault("turns", 3)
+    kw.setdefault("prompt_len", 24)
+    kw.setdefault("out_len", 6)
+    kw.setdefault("think_time", 0.3)
+    kw.setdefault("seed", 3)
+    return synthetic_session_rows(n_sessions, **kw)
+
+
+def _assert_equivalent(a, b, tol=1e-9):
+    assert abs(a["makespan"] - b["makespan"]) <= tol
+    ra = sorted(a["requests"], key=lambda r: r.rid)
+    rb = sorted(b["requests"], key=lambda r: r.rid)
+    assert len(ra) == len(rb)
+    for x, y in zip(ra, rb):
+        assert x.generated == y.generated
+        assert x.cache_hit_tokens == y.cache_hit_tokens
+        assert abs(x.first_token_t - y.first_token_t) <= tol
+        assert abs(x.finish_t - y.finish_t) <= tol
+
+
+# -- satellite: generator sigma guard -----------------------------------
+
+
+def test_sharegpt_rejects_non_skewed_lengths():
+    with pytest.raises(ValueError, match="mean > median"):
+        sharegpt_like(4, rate=BURST, prompt_median=500, prompt_mean=500)
+    with pytest.raises(ValueError, match="mean > median"):
+        sharegpt_like(4, rate=BURST, out_median=400, out_mean=300)
+
+
+# -- trace format: round-trip + strict schema ---------------------------
+
+
+def test_trace_round_trip_bit_identical(tmp_path):
+    rows = _rows()
+    p1, p2 = tmp_path / "a.jsonl", tmp_path / "b.jsonl"
+    key = save_trace(p1, rows)
+    loaded = load_trace(p1)
+    assert loaded == rows
+    assert trace_key(loaded) == key
+    # re-saving the loaded rows writes the exact same bytes
+    save_trace(p2, loaded)
+    assert p2.read_bytes() == p1.read_bytes()
+    # ...and the requests expanded from both sides are identical
+    ra, rb = to_requests(rows, seed=5), to_requests(loaded, seed=5)
+    assert [(r.rid, r.arrival, r.prompt, r.max_new_tokens,
+             r.cached_prefix) for r in ra] \
+        == [(r.rid, r.arrival, r.prompt, r.max_new_tokens,
+             r.cached_prefix) for r in rb]
+
+
+def test_sample_trace_loads():
+    rows = load_trace(SAMPLE)
+    assert len(rows) == 16
+    assert any(r.session is not None for r in rows)
+    reqs = to_requests(rows)
+    assert sum(r.cached_prefix for r in reqs) > 0
+
+
+def _write(tmp_path, lines):
+    p = tmp_path / "t.jsonl"
+    p.write_text("\n".join(lines) + "\n")
+    return p
+
+
+HEADER = json.dumps({"format": "dooly-trace", "version": 1})
+
+
+@pytest.mark.parametrize("line,msg", [
+    ('{"arrival": 0.0, "prompt_tokens": 4}', "missing required"),
+    ('{"arrival": 0.0, "prompt_tokens": 4, "output_tokens": 2, '
+     '"extra": 1}', "unknown key"),
+    ('{"arrival": -1.0, "prompt_tokens": 4, "output_tokens": 2}',
+     "finite and >= 0"),
+    ('{"arrival": 0.0, "prompt_tokens": 0, "output_tokens": 2}',
+     "must be >= 1"),
+    ('{"arrival": 0.0, "prompt_tokens": true, "output_tokens": 2}',
+     "must be an integer"),
+    ('{"arrival": 0.0, "prompt_tokens": 4.5, "output_tokens": 2}',
+     "must be an integer"),
+    ('not json', "invalid JSON"),
+])
+def test_trace_schema_errors_name_the_line(tmp_path, line, msg):
+    p = _write(tmp_path, [HEADER, line])
+    with pytest.raises(TraceError, match=msg) as ei:
+        load_trace(p)
+    assert ":2" in str(ei.value)
+
+
+def test_trace_header_errors(tmp_path):
+    with pytest.raises(TraceError, match="empty file"):
+        load_trace(_write(tmp_path, [""]))
+    with pytest.raises(TraceError, match="missing dooly-trace header"):
+        load_trace(_write(
+            tmp_path, ['{"arrival": 0.0, "prompt_tokens": 4, '
+                       '"output_tokens": 2}']))
+    with pytest.raises(TraceError, match="unsupported trace version"):
+        load_trace(_write(
+            tmp_path, ['{"format": "dooly-trace", "version": 99}']))
+
+
+def test_trace_session_semantics_enforced(tmp_path):
+    # turn 2 arrives before turn 1
+    bad = [TraceRow(1.0, 8, 2, "s"), TraceRow(0.5, 16, 2, "s")]
+    with pytest.raises(TraceError, match="before turn"):
+        save_trace(tmp_path / "x.jsonl", bad)
+    # turn 2's prompt does not extend turn 1's context (8 + 2 = 10)
+    bad = [TraceRow(0.0, 8, 2, "s"), TraceRow(1.0, 10, 2, "s")]
+    with pytest.raises(TraceError, match="must exceed"):
+        save_trace(tmp_path / "x.jsonl", bad)
+    # int session ids normalize to strings
+    p = _write(tmp_path, [HEADER, '{"arrival": 0.0, "prompt_tokens": 4, '
+                                  '"output_tokens": 2, "session": 7}'])
+    assert load_trace(p)[0].session == "7"
+
+
+# -- transforms ---------------------------------------------------------
+
+
+def test_time_warp_scales_and_bursts():
+    rows = _rows()
+    fast = time_warp(rows, 2.0)
+    assert [r.arrival for r in fast] == [r.arrival / 2 for r in rows]
+    assert [(r.prompt_tokens, r.output_tokens, r.session) for r in fast] \
+        == [(r.prompt_tokens, r.output_tokens, r.session) for r in rows]
+    burst = time_warp(rows, math.inf)
+    assert all(r.arrival == 0.0 for r in burst)
+    with pytest.raises(ValueError, match="> 0"):
+        time_warp(rows, 0.0)
+
+
+def test_resample_keeps_sessions_whole():
+    rows = _rows(3)
+    out = resample_trace(rows, 5, seed=1)
+    assert out == resample_trace(rows, 5, seed=1)
+    assert out != resample_trace(rows, 5, seed=2)
+    # every draw is a whole 3-turn session under a fresh label
+    by_session = {}
+    for r in out:
+        by_session.setdefault(r.session, []).append(r)
+    assert len(by_session) == 5
+    for turns in by_session.values():
+        assert len(turns) == 3
+    save_trace_ok = save_trace  # resampled traces still validate
+    save_trace_ok("/dev/null", out)
+
+
+def test_truncate_trace():
+    rows = _rows()
+    assert truncate_trace(rows, 5) == rows[:5]
+    horizon = truncate_trace(rows, max_time=rows[6].arrival)
+    assert all(r.arrival <= rows[6].arrival for r in horizon)
+    assert truncate_trace(rows, 0) == []
+
+
+# -- traffic shapes -----------------------------------------------------
+
+
+def test_parse_shape_and_errors():
+    s = parse_shape("diurnal:period=50,amplitude=0.8")
+    assert s == ShapeSpec(kind="diurnal", period=50, amplitude=0.8)
+    assert parse_shape("spike").kind == "spike"
+    assert parse_shape(s) is s
+    with pytest.raises(ValueError, match="unknown shape kind"):
+        parse_shape("square:period=2")
+    with pytest.raises(ValueError, match="bad shape parameter"):
+        parse_shape("diurnal:frequency=2")
+
+
+def test_shaped_arrivals_deterministic_and_sorted():
+    a = shaped_arrivals(64, rate=20.0, shape="spike:at=1,width=2,"
+                        "magnitude=5", seed=4)
+    assert np.array_equal(a, shaped_arrivals(
+        64, rate=20.0, shape="spike:at=1,width=2,magnitude=5", seed=4))
+    assert len(a) == 64 and (np.diff(a) >= 0).all()
+    # the spike window should be denser than baseline
+    in_window = ((a >= 1) & (a < 3)).sum()
+    assert in_window > 64 * (2 / (a[-1] - a[0])) if a[-1] > 3 else True
+
+
+def test_warp_times_inverts_cumulative_intensity():
+    shape = parse_shape("diurnal:period=20,amplitude=0.5")
+    times = [0.0, 1.0, 5.0, 12.0, 19.0]
+    warped = warp_times(times, shape)
+    # warp is the time-change u = Lambda^{-1}(t): Lambda(u) == t
+    for t, u in zip(times, warped):
+        assert abs(shape.cumulative(u) - t) <= 1e-6
+    assert (np.diff(warped) > 0).all()
+
+
+# -- tentpole: trace scenarios through all three engines ----------------
+
+
+def test_trace_staggered_events_matches_loop(profiled_db, tmp_path):
+    p = tmp_path / "t.jsonl"
+    save_trace(p, _rows())
+    gen = lambda: to_requests(load_trace(p), seed=2)
+    sim = _sim(profiled_db)
+    a = sim.run(gen(), engine="events")
+    b = sim.run(gen(), engine="loop")
+    assert a["engine"] == "events" and b["engine"] == "loop"
+    _assert_equivalent(a, b)
+
+
+def test_trace_burst_parity_all_engines(profiled_db, tmp_path):
+    p = tmp_path / "t.jsonl"
+    save_trace(p, time_warp(_rows(), math.inf))
+    gen = lambda: to_requests(load_trace(p), seed=2)
+    sim = _sim(profiled_db)
+    runs = {e: sim.run(gen(), engine=e)
+            for e in ("replay", "events", "loop")}
+    for e, out in runs.items():
+        assert out["engine"] == e
+    _assert_equivalent(runs["replay"], runs["events"])
+    _assert_equivalent(runs["replay"], runs["loop"])
+
+
+def test_sessions_prefix_cache_improves_ttft(profiled_db):
+    gen = lambda: synthetic_sessions(4, rate=BURST, turns=3,
+                                     prompt_len=24, out_len=6, seed=1)
+    hot = _sim(profiled_db).run(gen())
+    cold_sched = SchedulerConfig(max_num_seqs=4, max_batch_tokens=64,
+                                 chunk_size=32, prefix_caching=False)
+    cold = _sim(profiled_db, sched=cold_sched).run(gen())
+
+    m_hot = request_metrics(hot["requests"])
+    m_cold = request_metrics(cold["requests"])
+    assert m_hot["cache_hit_tokens"].sum() > 0
+    assert m_cold["cache_hit_tokens"].sum() == 0
+    assert cache_hit_rate(hot["requests"]) > 0.0
+    assert cache_hit_rate(cold["requests"]) == 0.0
+    # cached turns prefill less, so mean TTFT strictly improves
+    assert m_hot["ttft"].mean() < m_cold["ttft"].mean()
+    # generation itself is untouched by the cache
+    assert sorted(r.generated for r in hot["requests"]) \
+        == sorted(r.generated for r in cold["requests"])
+
+
+def test_cache_hits_survive_engines(profiled_db):
+    gen = lambda: synthetic_sessions(4, rate=10.0, turns=3,
+                                     prompt_len=24, out_len=6,
+                                     think_time=0.2, seed=1)
+    sim = _sim(profiled_db)
+    a = sim.run(gen(), engine="events")
+    b = sim.run(gen(), engine="loop")
+    assert sum(r.cache_hit_tokens for r in a["requests"]) > 0
+    _assert_equivalent(a, b)
+
+
+# -- satellite: WorkloadSpec kind router --------------------------------
+
+
+def _specs(trace_path):
+    return {
+        "sharegpt": WorkloadSpec(kind="sharegpt", n=6, rate=10.0, seed=1),
+        "synthetic": WorkloadSpec(kind="synthetic", n=6, rate=10.0,
+                                  prompt_len=16, out_len=4, seed=1),
+        "sessions": WorkloadSpec(kind="sessions", n=3, rate=10.0,
+                                 turns=2, prompt_len=16, out_len=4,
+                                 think_time=0.1, seed=1),
+        "trace": WorkloadSpec.for_trace(trace_path, seed=1),
+    }
+
+
+def test_workload_spec_all_kinds_build_bit_identical(tmp_path):
+    p = tmp_path / "t.jsonl"
+    save_trace(p, _rows())
+    for kind, spec in _specs(p).items():
+        assert kind in WORKLOAD_KINDS
+        a, b = spec.build(), spec.build()
+        assert len(a) == len(b) > 0
+        assert [(r.rid, r.arrival, r.prompt, r.max_new_tokens,
+                 r.cached_prefix) for r in a] \
+            == [(r.rid, r.arrival, r.prompt, r.max_new_tokens,
+                 r.cached_prefix) for r in b]
+        # frozen + hashable + stable label (memo-key requirements)
+        assert hash(spec) == hash(spec)
+        assert spec.label() == spec.label()
+
+
+def test_workload_spec_labels_distinguish_kinds(tmp_path):
+    p = tmp_path / "t.jsonl"
+    save_trace(p, _rows())
+    specs = _specs(p)
+    labels = {k: s.label() for k, s in specs.items()}
+    assert len(set(labels.values())) == len(labels)
+    assert labels["sessions"].startswith("sess[2t,16+4]")
+    assert labels["trace"].startswith("trace[t.jsonl#")
+    shaped = WorkloadSpec(kind="synthetic", n=6, rate=10.0,
+                          shape="diurnal:period=10")
+    assert shaped.label().endswith("~diurnal:period=10")
+
+
+def test_workload_spec_unknown_kind_lists_valid_kinds():
+    with pytest.raises(KeyError, match="sharegpt, synthetic, sessions, "
+                                       "trace"):
+        WorkloadSpec(kind="bursty").build()
+
+
+def test_workload_spec_trace_digest_pins_content(tmp_path):
+    p = tmp_path / "t.jsonl"
+    save_trace(p, _rows())
+    spec = WorkloadSpec.for_trace(p)
+    assert spec.trace_digest == trace_key(load_trace(p))
+    assert spec.build()
+    save_trace(p, _rows(seed=99))        # content changes under the spec
+    with pytest.raises(ValueError, match="content changed"):
+        spec.build()
+    fresh = WorkloadSpec.for_trace(p)
+    assert fresh.trace_digest != spec.trace_digest
+    assert fresh.build()
+
+
+def test_workload_spec_trace_warp_and_truncate(tmp_path):
+    p = tmp_path / "t.jsonl"
+    save_trace(p, _rows())
+    base = WorkloadSpec.for_trace(p).build()
+    cut = WorkloadSpec.for_trace(p, n=5).build()
+    assert len(cut) == 5
+    fast = WorkloadSpec.for_trace(p, warp=2.0).build()
+    assert [r.arrival for r in fast] == [r.arrival / 2 for r in base]
+    assert [r.prompt for r in fast] == [r.prompt for r in base]
+    burst = WorkloadSpec.for_trace(p, warp=math.inf).build()
+    assert all(r.arrival == 0.0 for r in burst)
+
+
+def test_workload_spec_shapes_compose(tmp_path):
+    p = tmp_path / "t.jsonl"
+    save_trace(p, _rows())
+    shape = "spike:at=0.5,width=1,magnitude=3"
+    thin = WorkloadSpec(kind="synthetic", n=8, rate=10.0, shape=shape)
+    plain = WorkloadSpec(kind="synthetic", n=8, rate=10.0)
+    a, b = thin.build(), plain.build()
+    assert [r.arrival for r in a] != [r.arrival for r in b]
+    assert [r.prompt for r in a] == [r.prompt for r in b]  # CRN lengths
+    warped = WorkloadSpec.for_trace(p, shape=shape).build()
+    base = WorkloadSpec.for_trace(p).build()
+    assert [r.arrival for r in warped] != [r.arrival for r in base]
+    assert [r.prompt for r in warped] == [r.prompt for r in base]
+    # shapes are a no-op on burst workloads (nothing to modulate)
+    burst = WorkloadSpec(kind="synthetic", n=8, rate=BURST, shape=shape)
+    assert all(r.arrival == 0.0 for r in burst.build())
+
+
+def test_sched_spec_prefix_caching_label():
+    assert "/nopc" not in SchedSpec().label()
+    off = SchedSpec(prefix_caching=False)
+    assert off.label().endswith("/nopc")
+    assert off.to_config().prefix_caching is False
