@@ -15,7 +15,7 @@ from repro.serving.engine import Engine
 from repro.serving.scheduler import SchedulerConfig
 from repro.sim import metrics as M
 from repro.sim.simulator import DoolySim
-from repro.sim.workload import sharegpt_like, synthetic
+from repro.workload import sharegpt_like, synthetic
 
 SCHED = SchedulerConfig(max_num_seqs=8, max_batch_tokens=128, chunk_size=64)
 MAX_SEQ = 256

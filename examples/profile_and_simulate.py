@@ -21,7 +21,7 @@ from repro.core.profiler import SweepConfig
 from repro.serving.engine import Engine
 from repro.serving.scheduler import SchedulerConfig
 from repro.sim import metrics as M
-from repro.sim.workload import sharegpt_like, synthetic
+from repro.workload import sharegpt_like, synthetic
 
 SWEEP = SweepConfig(toks=(8, 16, 32, 64, 128), reqs=(1, 2, 8),
                     ctx=(64, 256),

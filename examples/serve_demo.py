@@ -11,7 +11,7 @@ from repro.configs import get_smoke_config
 from repro.serving.engine import Engine
 from repro.serving.scheduler import SchedulerConfig
 from repro.sim import metrics as M
-from repro.sim.workload import sharegpt_like
+from repro.workload import sharegpt_like
 
 
 def main():

@@ -65,8 +65,22 @@ def add_workload_trace_arg(p: argparse.ArgumentParser) -> None:
                         "scenario cache keys)")
 
 
+def _shape_spec(spec: str) -> str:
+    """argparse ``type=`` for ``--shape``: validate eagerly so malformed
+    specs fail at the parser with parse_shape's message (naming the
+    valid forms) instead of deep inside workload building."""
+    if spec:
+        from repro.workload import parse_shape
+        try:
+            parse_shape(spec)
+        except ValueError as e:
+            raise argparse.ArgumentTypeError(str(e)) from e
+    return spec
+
+
 def add_shape_arg(p: argparse.ArgumentParser) -> None:
     p.add_argument("--shape", default="", metavar="SPEC",
+                   type=_shape_spec,
                    help="traffic shape composed onto every workload: "
                         "'diurnal:period=P,amplitude=A' or "
                         "'spike:at=T,width=W,magnitude=M'")

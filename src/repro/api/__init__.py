@@ -11,6 +11,7 @@ One import gives the whole profile -> predict -> simulate/sweep pipeline:
         sim = store.simulator(cfg, sched_config=sched, max_seq=128)
         print(sim.run(requests)["makespan"])
         table = store.sweep().run(scenarios).table()    # config search
+        cap = store.optimize(spec)         # SLO-driven capacity search
 
     ``ensure_profiled(cfg)`` remains as the one-model plan+execute shim.
 
@@ -66,6 +67,12 @@ __all__ = [
     "time_warp", "resample_trace", "truncate_trace",
     "to_requests", "synthetic_sessions",
     "ShapeSpec", "parse_shape", "shaped_arrivals", "warp_times",
+    # capacity optimizer (analytic tier -> staged search -> autoscale)
+    "SLO", "OptimizeSpec", "CandidateReport", "CapacityPlan",
+    "Optimizer", "optimize",
+    "AnalyticEstimate", "WorkloadStats", "analytic_estimate",
+    "ANALYTIC_TPOT_BOUND", "ANALYTIC_MAKESPAN_BOUND",
+    "AutoscalePolicy", "AutoscaleReport", "simulate_autoscale",
 ]
 
 _LAZY = {
@@ -96,6 +103,21 @@ _LAZY = {
     "parse_shape": ("repro.workload", "parse_shape"),
     "shaped_arrivals": ("repro.workload", "shaped_arrivals"),
     "warp_times": ("repro.workload", "warp_times"),
+    "SLO": ("repro.optimize", "SLO"),
+    "OptimizeSpec": ("repro.optimize", "OptimizeSpec"),
+    "CandidateReport": ("repro.optimize", "CandidateReport"),
+    "CapacityPlan": ("repro.optimize", "CapacityPlan"),
+    "Optimizer": ("repro.optimize", "Optimizer"),
+    "optimize": ("repro.optimize", "optimize"),
+    "AnalyticEstimate": ("repro.optimize", "AnalyticEstimate"),
+    "WorkloadStats": ("repro.optimize", "WorkloadStats"),
+    "analytic_estimate": ("repro.optimize", "analytic_estimate"),
+    "ANALYTIC_TPOT_BOUND": ("repro.optimize", "ANALYTIC_TPOT_BOUND"),
+    "ANALYTIC_MAKESPAN_BOUND": ("repro.optimize",
+                                "ANALYTIC_MAKESPAN_BOUND"),
+    "AutoscalePolicy": ("repro.optimize", "AutoscalePolicy"),
+    "AutoscaleReport": ("repro.optimize", "AutoscaleReport"),
+    "simulate_autoscale": ("repro.optimize", "simulate_autoscale"),
 }
 
 

@@ -271,6 +271,21 @@ class ProfileStore:
         from repro.sweep.runner import Sweep
         return Sweep(self, **kw)
 
+    def optimize(self, spec, *, workers: int = 1,
+                 oversubscribe: bool = False, profile: bool = True,
+                 quiet: bool = True, **kw):
+        """Run the staged SLO-driven capacity search for ``spec`` (an
+        :class:`repro.optimize.OptimizeSpec`) and return the resulting
+        :class:`repro.optimize.CapacityPlan`.
+
+        Extra keyword arguments configure the underlying
+        :class:`repro.optimize.Optimizer` (``latency=``,
+        ``analytic_latency=``, ``engine=``, ``hw_cost=`` ...)."""
+        from repro.optimize.search import Optimizer
+        return Optimizer(self, **kw).run(
+            spec, workers=workers, oversubscribe=oversubscribe,
+            profile=profile, quiet=quiet)
+
     def stats(self) -> Dict[str, int]:
         return self.db.stats()
 

@@ -1,10 +1,22 @@
-"""Back-compat shim: the generators moved to :mod:`repro.workload`.
+"""Deprecated shim: the generators moved to :mod:`repro.workload`.
 
 ``repro.sim.workload`` predates the workload subsystem (trace ingestion,
 multi-turn sessions, traffic shapes — see ``repro.workload``).  The two
-original generators stay importable from here so existing code keeps
-working; new code should import from ``repro.workload``.
+original generators stay importable from here through the usual grace
+period, but importing this module now warns; switch to::
+
+    from repro.workload import sharegpt_like, synthetic
+
+Removal is slated for 0.5 (two releases after 0.3), mirroring the
+``DoolySim.run(via_replay=...)`` process.
 """
+import warnings
+
 from repro.workload.generators import sharegpt_like, synthetic  # noqa: F401
+
+warnings.warn(
+    "repro.sim.workload is deprecated; import sharegpt_like/synthetic "
+    "from repro.workload instead (removal: 0.5)",
+    DeprecationWarning, stacklevel=2)
 
 __all__ = ["sharegpt_like", "synthetic"]

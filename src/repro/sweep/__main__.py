@@ -228,7 +228,7 @@ def main(argv=None) -> int:
                   f"{args.compare_latency} (reference)")
             print(compare_table(diff))
     if args.json:
-        payload = out.to_json()
+        payload = out.to_json(metric=args.metric)
         if diff is not None:
             payload["calibration_diff"] = diff
         emit(args, payload, "")

@@ -81,6 +81,26 @@ class WorkloadSpec:
     trace_digest: str = ""          # trace only: pinned trace_key()
     warp: float = 1.0               # trace only: offered-load factor
     shape: str = ""                 # traffic shape, parse_shape() form
+    split: int = 1                  # replica fan-out (round-robin router)
+    split_index: int = 0            # which replica's share this spec is
+
+    def __post_init__(self):
+        if self.split < 1:
+            raise ValueError(f"split must be >= 1, got {self.split}")
+        if not (0 <= self.split_index < self.split):
+            raise ValueError(f"split_index must be in [0, {self.split}), "
+                             f"got {self.split_index}")
+
+    def shard(self, split: int, index: int) -> "WorkloadSpec":
+        """This workload's share under a ``split``-replica deterministic
+        round-robin router: requests are ordered by arrival and replica
+        ``index`` serves every ``split``-th one.  Used by
+        ``repro.optimize`` to express an R-replica deployment as R
+        ordinary scenarios the exact sweep tier can evaluate (prefix-
+        cache credit is preserved, i.e. the router is assumed
+        cache-affine)."""
+        from dataclasses import replace
+        return replace(self, split=split, split_index=index)
 
     @classmethod
     def for_trace(cls, path: str, *, n: int = 0, warp: float = 1.0,
@@ -96,6 +116,9 @@ class WorkloadSpec:
                    shape=shape)
 
     def build(self) -> List[Request]:
+        return self._split(self._build_full())
+
+    def _build_full(self) -> List[Request]:
         if self.kind == "sharegpt":
             reqs = sharegpt_like(self.n, rate=self.rate, seed=self.seed,
                                  scale=self.scale, vocab=self.vocab)
@@ -129,6 +152,15 @@ class WorkloadSpec:
         raise KeyError(f"unknown workload kind {self.kind!r}; "
                        f"known: {', '.join(WORKLOAD_KINDS)}")
 
+    def _split(self, reqs: List[Request]) -> List[Request]:
+        """Round-robin router share (see :meth:`shard`): stable-sort by
+        arrival, keep every ``split``-th request starting at
+        ``split_index``."""
+        if self.split == 1:
+            return reqs
+        ordered = sorted(reqs, key=lambda r: r.arrival)
+        return ordered[self.split_index::self.split]
+
     def _reshape_thinning(self, reqs: List[Request]) -> List[Request]:
         """Replace a generator's Poisson arrivals with a seeded
         inhomogeneous-Poisson draw (thinning); lengths/content keep
@@ -158,6 +190,8 @@ class WorkloadSpec:
 
     def label(self) -> str:
         tail = f"~{self.shape}" if self.shape else ""
+        if self.split > 1:
+            tail += f"%{self.split_index}/{self.split}"
         rate = "burst" if math.isinf(self.rate) else f"r{self.rate:g}"
         if self.kind == "synthetic":
             return (f"syn[{self.prompt_len}->{self.out_len}]x{self.n}"

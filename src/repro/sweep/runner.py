@@ -167,11 +167,17 @@ class SweepResult:
             lines.append(f"{f.scenario.label():58s} {f.stage:9s} {f.error}")
         return "\n".join(lines)
 
-    def to_json(self) -> Dict:
+    def to_json(self, metric: str = "tpot_mean") -> Dict:
+        """JSON payload; ``metric`` selects the frontier's latency axis,
+        matching :meth:`frontier`/:meth:`table` (and the CLI's
+        ``--metric``) so the serialized frontier agrees with the one
+        printed."""
         return {"summary": self.summary,
+                "metric": metric,
                 "results": [r.to_json() for r in self.results],
                 "failures": [f.to_json() for f in self.failures],
-                "frontier": [r.scenario.label() for r in self.frontier()]}
+                "frontier": [r.scenario.label()
+                             for r in self.frontier(metric)]}
 
 
 class Sweep:

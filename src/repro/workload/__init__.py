@@ -18,8 +18,8 @@ Three pillars (plus the synthetic generators the package grew from):
   (``shaped_arrivals``) and composed onto traces by deterministic
   time-change (``warp_times``).
 
-``repro.sim.workload`` remains as a thin import shim for the original
-two generators.
+``repro.sim.workload`` remains as a *deprecated* import shim for the
+original two generators (warns on import; removal slated for 0.5).
 """
 from repro.workload.generators import sharegpt_like, synthetic
 from repro.workload.sessions import (synthetic_session_rows,

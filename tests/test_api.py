@@ -29,7 +29,7 @@ from repro.core.profiler import QUICK_SWEEP
 from repro.serving.scheduler import SchedulerConfig
 from repro.sim.replay import replay_schedule
 from repro.sim.simulator import DoolySim
-from repro.sim.workload import sharegpt_like
+from repro.workload import sharegpt_like
 
 HW = "tpu-v5e"
 MODEL = "llama3-8b"

@@ -24,7 +24,7 @@ from repro.sim.events import StaggeredTrace, recommend_engine, run_events
 from repro.sim.replay import (clone_sorted, is_latency_independent,
                               latency_dependence)
 from repro.sim.simulator import DoolySim
-from repro.sim.workload import sharegpt_like, synthetic
+from repro.workload import sharegpt_like, synthetic
 from repro.sweep import SchedSpec, Sweep, WorkloadSpec, expand_grid
 
 HW = "tpu-v5e"

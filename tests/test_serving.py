@@ -15,7 +15,7 @@ from repro.serving.engine import Engine, bucket_chunk
 from repro.serving.scheduler import Request, Scheduler, SchedulerConfig
 from repro.sim import metrics as M
 from repro.sim.simulator import DoolySim
-from repro.sim.workload import sharegpt_like, synthetic
+from repro.workload import sharegpt_like, synthetic
 
 SCHED = SchedulerConfig(max_num_seqs=4, max_batch_tokens=64, chunk_size=32)
 

@@ -23,7 +23,7 @@ from repro.core.profiler import QUICK_SWEEP, DoolyProf
 from repro.serving.scheduler import SchedulerConfig
 from repro.sim.replay import is_latency_independent, replay_schedule
 from repro.sim.simulator import DoolySim, predict_scenarios
-from repro.sim.workload import sharegpt_like
+from repro.workload import sharegpt_like
 from repro.sweep import SchedSpec, Scenario, Sweep, WorkloadSpec, expand_grid
 
 HW = "tpu-v5e"

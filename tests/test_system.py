@@ -5,7 +5,7 @@ from repro.core.database import LatencyDB
 from repro.core.profiler import QUICK_SWEEP, DoolyProf
 from repro.serving.scheduler import SchedulerConfig
 from repro.sim.simulator import DoolySim
-from repro.sim.workload import synthetic
+from repro.workload import synthetic
 
 
 def test_full_pipeline_two_archs():

@@ -221,6 +221,35 @@ def test_parse_shape_and_errors():
         parse_shape("diurnal:frequency=2")
 
 
+def test_parse_shape_error_messages_name_valid_forms():
+    # unknown kinds name the known ones
+    with pytest.raises(ValueError, match="diurnal, spike"):
+        parse_shape("sawtooth")
+    # malformed items (no key=value) name the expected form + fields
+    with pytest.raises(ValueError, match="expected key=value"):
+        parse_shape("diurnal:period")
+    with pytest.raises(ValueError, match="bad shape parameter"):
+        parse_shape("spike:at=1,=3")
+    # non-numeric values are bad parameters, not crashes
+    with pytest.raises(ValueError):
+        parse_shape("diurnal:period=fast")
+
+
+def test_parse_shape_rejects_out_of_range_parameters():
+    with pytest.raises(ValueError, match="period must be > 0"):
+        parse_shape("diurnal:period=-5")
+    with pytest.raises(ValueError, match="period must be > 0"):
+        parse_shape("diurnal:period=0")
+    with pytest.raises(ValueError, match=r"amplitude must be in \[0, 1\]"):
+        parse_shape("diurnal:amplitude=-0.5")
+    with pytest.raises(ValueError, match=r"amplitude must be in \[0, 1\]"):
+        parse_shape("diurnal:amplitude=1.5")
+    with pytest.raises(ValueError, match="at >= 0"):
+        parse_shape("spike:at=-1")
+    with pytest.raises(ValueError, match="magnitude must be > 0"):
+        parse_shape("spike:magnitude=-4")
+
+
 def test_shaped_arrivals_deterministic_and_sorted():
     a = shaped_arrivals(64, rate=20.0, shape="spike:at=1,width=2,"
                         "magnitude=5", seed=4)

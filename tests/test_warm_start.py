@@ -15,7 +15,7 @@ from repro.core.latency_model import LatencyModel
 from repro.core.profiler import QUICK_SWEEP, DoolyProf
 from repro.serving.scheduler import SchedulerConfig
 from repro.sim.simulator import DoolySim
-from repro.sim.workload import sharegpt_like
+from repro.workload import sharegpt_like
 
 HW = "cpu"
 

@@ -7,7 +7,7 @@ import numpy as np
 
 from repro.serving.scheduler import SchedulerConfig
 from repro.sim.replay import is_latency_independent, replay_schedule
-from repro.sim.workload import sharegpt_like, synthetic
+from repro.workload import sharegpt_like, synthetic
 
 
 def _lengths(reqs):
